@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks (interpret mode on CPU — correctness + call cost;
+the BlockSpec tiling is what matters for the TPU target, see §Roofline).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, *args, n=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def bench_kernels() -> List[Row]:
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+
+    # flash attention 1k ctx
+    b, s, h, kv, hd = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, True, 0, 256, 256))
+    dt = _timeit(fa, q, k, v)
+    want = ref.attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(fa(q, k, v) - want)))
+    flops = 4 * b * h * hd * s * s / 2
+    rows.append(("pallas_flash_attn_1k", dt * 1e6,
+                 f"max_err={err:.1e};gflop={flops/1e9:.1f}"))
+
+    # selective scan
+    ba, s2, di, ds = 2, 512, 512, 16
+    x = jnp.asarray(rng.normal(size=(ba, s2, di)), jnp.float32)
+    dtv = jnp.asarray(rng.uniform(1e-3, 0.1, (ba, s2, di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, (di, ds)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(ba, s2, ds)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(ba, s2, ds)), jnp.float32)
+    ss = jax.jit(lambda *a: ops.selective_scan(*a, 64))
+    dt2 = _timeit(ss, x, dtv, A, B, C)
+    y2, _ = ss(x, dtv, A, B, C)
+    yr, _ = ref.selective_scan_ref(x, dtv, A, B, C, chunk=64)
+    rows.append(("pallas_selective_scan_512", dt2 * 1e6,
+                 f"max_err={float(jnp.max(jnp.abs(y2-yr))):.1e}"))
+
+    # node power (the sim hot loop, batched 64 envs x 672 nodes)
+    e, n = 64, 672
+    cpu = jnp.asarray(rng.uniform(0, 1, (e, n)), jnp.float32)
+    gpu = jnp.asarray(rng.uniform(0, 1, (e, n)), jnp.float32)
+    up = jnp.ones((e, n))
+    idle = jnp.full((n,), 240.0)
+    cd = jnp.full((n,), 260.0)
+    gd = jnp.full((n,), 490.0)
+    mx = idle + cd + gd
+    kw = dict(rect_peak=0.965, rect_load=0.55, rect_curv=0.12, conv_eff=0.975)
+    np_k = jax.jit(lambda *a: ops.node_power(*a, **kw))
+    dt3 = _timeit(np_k, cpu, gpu, idle, cd, gd, up, mx)
+    it, _ = np_k(cpu, gpu, idle, cd, gd, up, mx)
+    it2, _ = ref.node_power_ref(cpu, gpu, idle, cd, gd, up, mx, **kw)
+    rows.append(("pallas_node_power_64x672", dt3 * 1e6,
+                 f"max_err={float(jnp.max(jnp.abs(it-it2))):.1e}"))
+    return rows

@@ -1,0 +1,128 @@
+"""LM-side benchmarks: reduced-config train/decode throughput per arch
+family + analytic-vs-compiled roofline cross-check.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def bench_train_reduced() -> List[Row]:
+    from repro.configs import get_arch, reduced
+    from repro.data.synth_lm import lm_batch_at
+    from repro.models import init_params
+    from repro.optim import AdamW
+    from repro.train.train_step import make_train_step
+
+    rows: List[Row] = []
+    for arch in ("qwen3-4b", "mixtral-8x22b", "jamba-1.5-large-398b",
+                 "xlstm-125m", "whisper-small"):
+        cfg = reduced(get_arch(arch))
+        params = init_params(cfg, jax.random.key(0))
+        opt = AdamW(lr=1e-3)
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.int32(0)}
+        step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+        extras = {}
+        if cfg.n_vision_tokens:
+            extras["vision"] = (cfg.n_vision_tokens, cfg.d_model)
+        if cfg.enc_dec:
+            extras["audio"] = (cfg.n_audio_frames, cfg.d_model)
+        B, S = 4, 128
+        batch = lm_batch_at(0, vocab=cfg.vocab, batch=B, seq_len=S,
+                            extras=extras or None)
+        state, m = step(state, batch)       # compile
+        t0 = time.perf_counter()
+        n = 3
+        losses = []
+        for i in range(1, n + 1):
+            b = lm_batch_at(i, vocab=cfg.vocab, batch=B, seq_len=S,
+                            extras=extras or None)
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+        dt = (time.perf_counter() - t0) / n
+        rows.append((
+            f"train_reduced_{arch}", dt * 1e6,
+            f"tok_per_s={B*S/dt:,.0f};loss={losses[-1]:.3f}",
+        ))
+    return rows
+
+
+def bench_decode_reduced() -> List[Row]:
+    from repro.configs import get_arch, reduced
+    from repro.models import init_cache, init_params
+    from repro.models.model import decode_step
+
+    rows: List[Row] = []
+    for arch in ("gemma3-1b", "jamba-1.5-large-398b", "xlstm-125m"):
+        cfg = reduced(get_arch(arch))
+        params = init_params(cfg, jax.random.key(0))
+        B, S = 4, 256
+        cache = init_cache(cfg, B, S)
+        tok = jnp.ones((B, 1), jnp.int32)
+
+        @jax.jit
+        def many(params, cache):
+            def body(carry, i):
+                tok, cache = carry
+                logits, cache = decode_step(params, cache, tok,
+                                            i + 10, cfg)
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                return (nxt, cache), None
+            (tok2, cache), _ = jax.lax.scan(body, (tok, cache),
+                                            jnp.arange(32))
+            return tok2
+
+        out = many(params, cache)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        out = many(params, cache)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / 32
+        rows.append((f"decode_reduced_{arch}", dt * 1e6,
+                     f"tok_per_s={B/dt:,.0f}"))
+    return rows
+
+
+def bench_roofline_crosscheck() -> List[Row]:
+    """Analytic perfmodel vs compiled dry-run probes (when artifacts exist)."""
+    import glob
+    import json
+    import os
+
+    from repro.configs import SHAPES, get_arch
+    from repro.perfmodel import analytic_roofline
+
+    rows: List[Row] = []
+    art = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "artifacts")
+    files = sorted(glob.glob(os.path.join(art, "*__single.json")))
+    n_ok = 0
+    ratios = []
+    for f in files[:40]:
+        d = json.load(open(f))
+        if d.get("status") != "OK" or not d.get("probe"):
+            continue
+        cfg = get_arch(d["arch"])
+        est = analytic_roofline(cfg, SHAPES[d["shape"]], n_chips=256)
+        got = d["hlo_flops_per_dev"]
+        if got > 0 and est.flops_per_dev > 0:
+            ratios.append(got / est.flops_per_dev)
+            n_ok += 1
+    if ratios:
+        rows.append((
+            "roofline_flops_crosscheck", 0.0,
+            f"n={n_ok};median_compiled_over_analytic="
+            f"{float(np.median(ratios)):.2f};"
+            f"p90={float(np.percentile(ratios, 90)):.2f}",
+        ))
+    else:
+        rows.append(("roofline_flops_crosscheck", 0.0, "no_artifacts_yet"))
+    return rows

@@ -1,0 +1,140 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--artifacts DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MESHES = ("single", "multi")
+
+
+def load(artifacts: str, tag: str = ""):
+    cells = {}
+    suffix = f"__{tag}.json" if tag else ".json"
+    for f in sorted(glob.glob(os.path.join(artifacts, f"*{suffix}"))):
+        base = os.path.basename(f)[: -len(".json")]
+        parts = base.split("__")
+        if tag and (len(parts) != 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        arch, shape, mesh = parts[:3]
+        cells[(arch, shape, mesh)] = json.load(open(f))
+    return cells
+
+
+def fmt_si(x, unit=""):
+    if x == 0:
+        return "0"
+    for div, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(x) >= div:
+            return f"{x/div:.2f}{suf}{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def dryrun_table(cells, mesh="single"):
+    from repro.configs import SHAPES, arch_names
+
+    lines = [
+        "| arch | shape | status | bytes/dev (arg+temp) | FLOPs/dev | "
+        "coll bytes/dev | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in arch_names():
+        for shape in SHAPES:
+            d = cells.get((arch, shape, mesh))
+            if d is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | |")
+                continue
+            if d["status"] == "SKIP":
+                lines.append(
+                    f"| {arch} | {shape} | SKIP | {d['reason'][:46]} | | | |")
+                continue
+            if d["status"] != "OK":
+                lines.append(
+                    f"| {arch} | {shape} | FAIL | {d.get('error','')[:46]} | | | |")
+                continue
+            m = d["memory"]
+            mem = f"{(m['argument_bytes'])/2**30:.2f}+{m['temp_bytes']/2**30:.2f} GiB"
+            lines.append(
+                f"| {arch} | {shape} | OK | {mem} | "
+                f"{fmt_si(d['hlo_flops_per_dev'])} | "
+                f"{fmt_si(d['collective_bytes_per_dev'])}B | "
+                f"{d['compile_s']:.0f} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    from repro.configs import SHAPES, arch_names
+
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/HLO_FLOPS | roofline util | one-liner |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for arch in arch_names():
+        for shape in SHAPES:
+            d = cells.get((arch, shape, "single"))
+            if d is None or d["status"] != "OK":
+                status = "SKIP" if d and d["status"] == "SKIP" else "—"
+                lines.append(f"| {arch} | {shape} | {status} | | | | | | |")
+                continue
+            step = max(d["compute_s"], d["memory_s"], d["collective_s"])
+            util = d["compute_s"] / step if step else 0.0
+            mfr = d["model_flops_ratio"]
+            dom = d["dominant"].replace("_s", "")
+            hint = {
+                "compute": "raise MFU: fuse/skip redundant FLOPs (remat policy, "
+                           "windowed-attn skipping, O(n) scan kernel)",
+                "memory": "cut HBM traffic: fuse ops, lower remat, bf16 "
+                          "opt-state reads, smaller logit chunks",
+                "collective": "cut comms: bigger per-chip batch, 2D-shard "
+                              "weight gathers, overlap via scan unroll",
+            }[dom]
+            rows.append((arch, shape, util, dom))
+            lines.append(
+                f"| {arch} | {shape} | {d['compute_s']*1e3:.2f}m | "
+                f"{d['memory_s']*1e3:.2f}m | {d['collective_s']*1e3:.2f}m | "
+                f"{dom} | {mfr:.3f} | {util:.2f} | {hint} |"
+            )
+    return "\n".join(lines), rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="experiments/artifacts")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    cells = load(args.artifacts, args.tag)
+    n_ok = sum(1 for d in cells.values() if d["status"] == "OK")
+    n_skip = sum(1 for d in cells.values() if d["status"] == "SKIP")
+    n_fail = len(cells) - n_ok - n_skip
+    print(f"## cells: {n_ok} OK / {n_skip} SKIP / {n_fail} FAIL\n")
+    print("### Dry-run (single-pod 16x16)\n")
+    print(dryrun_table(cells, "single"))
+    print("\n### Dry-run (multi-pod 2x16x16)\n")
+    print(dryrun_table(cells, "multi"))
+    print("\n### Roofline (single-pod)\n")
+    tbl, rows = roofline_table(cells)
+    print(tbl)
+    if rows:
+        worst = min(rows, key=lambda r: r[2])
+        coll = [r for r in rows if r[3] == "collective"]
+        print(f"\nworst roofline util: {worst[0]} x {worst[1]} ({worst[2]:.2f})")
+        if coll:
+            print(f"collective-bound cells: {[(r[0], r[1]) for r in coll]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one bench per paper table/figure:
+
+  replay_tx_gaia_1h        Fig 2 top-left  (throughput/energy during replay)
+  sched_*                  RAPS scheduler table (+ Fan et al. 45% reference)
+  ppo_scheduler            Fig 2 top-right (PPO reward curve)
+  power_prediction_replay  Fig 2 bottom    (power prediction from replay)
+  congestion_bw_*          network-congestion model [14]
+  vmapped_sim_*            beyond-paper: vectorized-twin RL throughput
+  pallas_*                 kernel microbenches vs oracles
+  train/decode_reduced_*   LM substrate throughput (reduced configs)
+  roofline_flops_crosscheck  analytic perfmodel vs compiled dry-run
+"""
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_lm import (
+        bench_decode_reduced,
+        bench_roofline_crosscheck,
+        bench_train_reduced,
+    )
+    from benchmarks.bench_sim import (
+        bench_congestion_model,
+        bench_power_prediction,
+        bench_replay_throughput,
+        bench_rl_training,
+        bench_scheduler_comparison,
+        bench_vectorized_envs,
+    )
+
+    benches = [
+        bench_replay_throughput,
+        bench_scheduler_comparison,
+        bench_power_prediction,
+        bench_congestion_model,
+        bench_rl_training,
+        bench_vectorized_envs,
+        bench_kernels,
+        bench_train_reduced,
+        bench_decode_reduced,
+        bench_roofline_crosscheck,
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for bench in benches:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(bench.__name__)
+            print(f"{bench.__name__},nan,FAILED:{e!r}", flush=True)
+    if failed:
+        raise SystemExit(f"benches failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

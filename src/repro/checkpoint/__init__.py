@@ -1,0 +1,8 @@
+from repro.checkpoint.ckpt import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    restore_sharded,
+    save,
+    save_sharded,
+)

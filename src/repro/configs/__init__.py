@@ -1,0 +1,35 @@
+"""Architecture & simulator configs.
+
+Importing this package registers every assigned architecture into
+``repro.configs.base.ARCHS``; select one with ``--arch <id>``.
+"""
+
+from repro.configs.base import (
+    ARCHS,
+    SHAPES,
+    SMOKE_DECODE_SHAPE,
+    SMOKE_SHAPE,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    arch_names,
+    get_arch,
+    reduced,
+    shape_applicable,
+)
+
+# Register all assigned architectures (one module per arch id).
+from repro.configs import (  # noqa: F401  (import side effects)
+    gemma3_1b,
+    granite_3_8b,
+    grok_1_314b,
+    internlm2_20b,
+    jamba_1_5_large_398b,
+    llama_3_2_vision_11b,
+    mixtral_8x22b,
+    qwen3_4b,
+    whisper_small,
+    xlstm_125m,
+)
+from repro.configs.sim import SimConfig, NodeType, tx_gaia, tiny_cluster

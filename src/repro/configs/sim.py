@@ -1,0 +1,123 @@
+"""Datacenter (digital-twin) configuration.
+
+``tx_gaia()`` models the MIT SuperCloud TX-GAIA system used by the paper:
+448 GPU nodes (2x Xeon Gold 6248, 2x V100-32GB SXM2) plus Xeon-Platinum CPU
+nodes, multi-tenant, with CPU telemetry at 10 s quanta and GPU telemetry at
+100 ms (Samsi et al., HPEC'21).
+
+Power-chain parameters follow RAPS: node IT power -> AC-DC rectification
+efficiency curve eta(load) -> DC-DC voltage-conversion efficiency -> plus
+cooling power (PUE model). All knobs are plain floats so the whole sim is
+jit-able.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class NodeType:
+    name: str
+    count: int
+    cpu_cores: int
+    gpus: int
+    mem_gb: float
+    idle_w: float          # chassis idle (fans, board, DIMMs)
+    cpu_dyn_w: float       # max additional W at 100% CPU util (whole node)
+    gpu_idle_w: float      # per-GPU idle
+    gpu_dyn_w: float       # per-GPU max additional W at 100% util
+    peak_gflops: float     # per-node peak GFLOP/s (for GFLOPS/W stats)
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    name: str
+    node_types: Tuple[NodeType, ...]
+    # capacity limits for the fixed-shape job table
+    max_jobs: int = 512            # max resident (queued+running) jobs
+    max_nodes_per_job: int = 64
+    # time discretization
+    dt: float = 1.0                # simulator step [s]
+    trace_quanta: float = 10.0     # telemetry averaging quantum [s]
+    # power chain (RAPS-style)
+    rect_eff_peak: float = 0.965   # peak rectifier efficiency
+    rect_eff_load: float = 0.55    # load fraction at which peak occurs
+    rect_eff_curv: float = 0.12    # curvature of the efficiency parabola
+    conv_eff: float = 0.975        # DC-DC voltage conversion efficiency
+    # cooling: P_cool = P_IT / COP(wetbulb); PUE emerges from the chain
+    cop_base: float = 5.2
+    cop_wetbulb_coef: float = -0.08   # COP drop per degC wetbulb above ref
+    wetbulb_ref_c: float = 18.0
+    wetbulb_mean_c: float = 16.0
+    wetbulb_amp_c: float = 6.0        # diurnal amplitude
+    # carbon intensity (diurnal, gCO2/kWh)
+    carbon_mean: float = 380.0
+    carbon_amp: float = 120.0
+    day_seconds: float = 86_400.0
+    # network (inter-job congestion; Lassen-style bytes in/out coupling)
+    bisection_gbps: float = 2_400.0   # system bisection bandwidth
+    congestion_exp: float = 1.5       # slowdown = (1 + load^exp) beyond knee
+    congestion_knee: float = 0.7      # utilization where contention kicks in
+    # failures (sustainability studies under faults)
+    node_mtbf_hours: float = 0.0      # 0 = failures off
+    node_repair_hours: float = 4.0
+    # demand response (DCFlex-style): cap facility power by DVFS-throttling
+    # running jobs (linear power/progress model). 0 = uncapped.
+    power_cap_w: float = 0.0
+    throttle_floor: float = 0.3       # never clock below 30%
+    # RL / scheduling
+    sched_max_candidates: int = 8     # jobs visible to the RL agent per step
+    backfill_reserve: int = 1         # EASY: #head jobs that get reservations
+    seed: int = 0
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(t.count for t in self.node_types)
+
+    @property
+    def n_types(self) -> int:
+        return len(self.node_types)
+
+
+def tx_gaia(**overrides) -> SimConfig:
+    """MIT SuperCloud TX-GAIA twin (GPU partition + CPU partition)."""
+    types = (
+        NodeType(
+            name="txg-v100",
+            count=448,
+            cpu_cores=40,            # 2x Xeon Gold 6248
+            gpus=2,                  # 2x V100-32GB SXM2
+            mem_gb=384.0,
+            idle_w=240.0,
+            cpu_dyn_w=260.0,         # 2x 125W TDP + DIMM activity
+            gpu_idle_w=55.0,
+            gpu_dyn_w=245.0,         # 300W SXM2 TDP - idle
+            peak_gflops=2 * 7_800.0 + 2_300.0,  # 2x V100 fp64+tensor mix + CPUs
+        ),
+        NodeType(
+            name="xeon-p8",
+            count=224,
+            cpu_cores=48,            # 2x Xeon Platinum 8260
+            gpus=0,
+            mem_gb=192.0,
+            idle_w=160.0,
+            cpu_dyn_w=330.0,
+            gpu_idle_w=0.0,
+            gpu_dyn_w=0.0,
+            peak_gflops=3_300.0,
+        ),
+    )
+    return SimConfig(name="tx-gaia", node_types=types, **overrides)
+
+
+def tiny_cluster(**overrides) -> SimConfig:
+    """Small heterogeneous cluster for tests/examples (fast to simulate)."""
+    types = (
+        NodeType("gpu", 8, 16, 2, 128.0, 100.0, 120.0, 30.0, 240.0, 16_000.0),
+        NodeType("cpu", 8, 32, 0, 64.0, 80.0, 200.0, 0.0, 0.0, 2_000.0),
+    )
+    kw = dict(max_jobs=64, max_nodes_per_job=4, sched_max_candidates=4)
+    kw.update(overrides)
+    return SimConfig(name="tiny", node_types=types, **kw)

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: the ExaDigiT/RAPS-style datacenter
+digital twin — trace replay, rescheduling, power/cooling/carbon chain,
+network congestion, failures — as a pure-JAX vectorized simulator.
+"""
+
+from repro.core.sim import StepOut, make_step, run_episode, summary
+from repro.core.state import (
+    DONE,
+    EMPTY,
+    QUEUED,
+    RUNNING,
+    SimState,
+    Statics,
+    build_statics,
+    init_state,
+    load_jobs,
+)

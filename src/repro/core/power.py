@@ -1,0 +1,118 @@
+"""RAPS power chain: job utilization -> node IT power -> rectification /
+voltage-conversion losses -> cooling (COP model) -> facility power, plus
+carbon intensity and GFLOPS/W.
+
+The per-node aggregation is the simulator's compute hot-spot (it runs every
+step for every vectorized environment); ``repro.kernels.node_power``
+provides the Pallas TPU kernel, ``kernels.ref.node_power_ref`` the oracle
+used here on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sim import SimConfig
+from repro.core.state import RUNNING, NRES, SimState, Statics
+from repro.kernels.ref import node_power_ref
+
+
+class PowerOut(NamedTuple):
+    node_it_w: jax.Array      # (N,)
+    node_input_w: jax.Array   # (N,) after rectifier+conversion losses
+    it_w: jax.Array           # scalar
+    input_w: jax.Array
+    cooling_w: jax.Array
+    facility_w: jax.Array
+    pue: jax.Array
+    gflops: jax.Array         # utilization-weighted delivered GFLOP/s
+
+
+def job_utilization(cfg: SimConfig, state: SimState, statics: Statics):
+    """Per-job cpu/gpu utilization at current sim time from the telemetry
+    bank (quanta-averaged, as RAPS replays traces)."""
+    running = (state.jstate == RUNNING).astype(jnp.float32)
+    age = jnp.maximum(state.t - state.start_t, 0.0)
+    q = statics.cpu_trace.shape[1]
+    qi = jnp.clip((age / cfg.trace_quanta).astype(jnp.int32), 0, q - 1)
+    cpu = jnp.take_along_axis(statics.cpu_trace, qi[:, None], axis=1)[:, 0]
+    gpu = jnp.take_along_axis(statics.gpu_trace, qi[:, None], axis=1)[:, 0]
+    return cpu * running, gpu * running
+
+
+def node_loads(cfg: SimConfig, state: SimState, statics: Statics,
+               cpu_util: jax.Array, gpu_util: jax.Array):
+    """Scatter per-job utilized resources onto nodes.
+
+    Returns (cpu_load, gpu_load) as *fractions of node capacity* in [0,1].
+    """
+    N = statics.capacity.shape[1]
+    place = state.placement                       # (J,K)
+    valid = place >= 0
+    safe = jnp.where(valid, place, 0)
+    w = valid.astype(jnp.float32)
+    # utilized absolute resources contributed per placement slot
+    cpu_abs = (state.req[0][:, None] * cpu_util[:, None]) * w
+    gpu_abs = (state.req[1][:, None] * gpu_util[:, None]) * w
+    cpu_node = jnp.zeros((N,), jnp.float32).at[safe.reshape(-1)].add(
+        cpu_abs.reshape(-1), mode="drop")
+    gpu_node = jnp.zeros((N,), jnp.float32).at[safe.reshape(-1)].add(
+        gpu_abs.reshape(-1), mode="drop")
+    cpu_frac = jnp.clip(cpu_node / jnp.maximum(statics.capacity[0], 1e-6), 0, 1)
+    gpu_frac = jnp.clip(gpu_node / jnp.maximum(statics.capacity[1], 1e-6), 0, 1)
+    return cpu_frac, gpu_frac
+
+
+def wetbulb_c(cfg: SimConfig, t: jax.Array) -> jax.Array:
+    phase = 2 * jnp.pi * (t / cfg.day_seconds)
+    return cfg.wetbulb_mean_c + cfg.wetbulb_amp_c * jnp.sin(phase - jnp.pi / 2)
+
+
+def carbon_intensity(cfg: SimConfig, t: jax.Array) -> jax.Array:
+    """gCO2/kWh, diurnal (higher at night when solar is absent)."""
+    phase = 2 * jnp.pi * (t / cfg.day_seconds)
+    return cfg.carbon_mean - cfg.carbon_amp * jnp.sin(phase - jnp.pi / 2)
+
+
+def compute_power(cfg: SimConfig, state: SimState, statics: Statics,
+                  *, use_kernel: bool = False) -> PowerOut:
+    cpu_util, gpu_util = job_utilization(cfg, state, statics)
+    cpu_frac, gpu_frac = node_loads(cfg, state, statics, cpu_util, gpu_util)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        node_it, node_input = kops.node_power(
+            cpu_frac, gpu_frac, statics.idle_w, statics.cpu_dyn_w,
+            statics.gpu_dyn_w, state.node_up, statics.node_max_w,
+            rect_peak=cfg.rect_eff_peak, rect_load=cfg.rect_eff_load,
+            rect_curv=cfg.rect_eff_curv, conv_eff=cfg.conv_eff,
+        )
+    else:
+        # loads are already per-node fractions; inline oracle math
+        it = statics.idle_w + cpu_frac * statics.cpu_dyn_w + gpu_frac * statics.gpu_dyn_w
+        it = it * state.node_up
+        load_frac = jnp.clip(it / jnp.maximum(statics.node_max_w, 1.0), 0.0, 1.2)
+        eta = jnp.clip(
+            cfg.rect_eff_peak - cfg.rect_eff_curv * jnp.square(load_frac - cfg.rect_eff_load),
+            0.5, 1.0,
+        )
+        node_it, node_input = it, it / (eta * cfg.conv_eff)
+
+    it_w = jnp.sum(node_it)
+    input_w = jnp.sum(node_input)
+    cop = jnp.maximum(
+        cfg.cop_base + cfg.cop_wetbulb_coef * (wetbulb_c(cfg, state.t) - cfg.wetbulb_ref_c),
+        1.5,
+    )
+    cooling_w = input_w / cop
+    facility_w = input_w + cooling_w
+    pue = facility_w / jnp.maximum(it_w, 1.0)
+    gflops = jnp.sum(
+        statics.peak_gflops * jnp.maximum(cpu_frac, gpu_frac) * state.node_up
+    )
+    return PowerOut(node_it, node_input, it_w, input_w, cooling_w,
+                    facility_w, pue, gflops)

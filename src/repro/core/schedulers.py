@@ -1,0 +1,140 @@
+"""Scheduling policies as pure selection functions.
+
+Each policy looks at the job table and returns the index of the queued job
+to attempt next (or -1). Placement (first-fit node selection) is shared.
+The RL policy is external: its action picks among the top
+``sched_max_candidates`` FCFS-ordered queue candidates (or no-op).
+
+Policies mirror RAPS' production-Slurm-matching set [Maiterth et al. 2025]:
+replay | fcfs | sjf | priority | easy (FCFS + EASY backfill).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sim import SimConfig
+from repro.core.state import QUEUED, RUNNING, NRES, SimState, Statics
+
+BIG = 1e18
+
+
+def queued_mask(state: SimState) -> jax.Array:
+    return (state.jstate == QUEUED) & (state.submit_t <= state.t)
+
+
+def feasible_nodes(state: SimState, job: jax.Array) -> jax.Array:
+    """(N,) bool: nodes that can host one rank of `job` right now."""
+    req = state.req[:, job]                       # (NRES,)
+    ok = jnp.all(state.free >= req[:, None], axis=0)
+    return ok & (state.node_up > 0.5)
+
+
+def first_fit(state: SimState, job: jax.Array, K: int) -> Tuple[jax.Array, jax.Array]:
+    """Choose `n_nodes[job]` lowest-index feasible nodes.
+
+    Returns (placement_row (K,), feasible bool).
+    """
+    N = state.free.shape[1]
+    ok = feasible_nodes(state, job)
+    n_req = state.n_nodes[job]
+    order = jnp.argsort(jnp.where(ok, 0, 1) * N + jnp.arange(N))  # feasible first
+    slots = jnp.arange(K)
+    row = jnp.where(slots < n_req, order[:K], -1)
+    enough = jnp.sum(ok) >= n_req
+    return jnp.where(enough, row, -1), enough
+
+
+# --------------------------------------------------------------------------
+# candidate orderings
+def _masked_argmin(score: jax.Array, mask: jax.Array) -> jax.Array:
+    s = jnp.where(mask, score, BIG)
+    idx = jnp.argmin(s)
+    return jnp.where(jnp.any(mask), idx, -1)
+
+
+def select_fcfs(cfg: SimConfig, state: SimState) -> jax.Array:
+    return _masked_argmin(state.submit_t, queued_mask(state))
+
+
+def select_sjf(cfg: SimConfig, state: SimState) -> jax.Array:
+    return _masked_argmin(state.dur_est, queued_mask(state))
+
+
+def select_priority(cfg: SimConfig, state: SimState) -> jax.Array:
+    return _masked_argmin(-state.priority, queued_mask(state))
+
+
+def select_replay(cfg: SimConfig, state: SimState) -> jax.Array:
+    """Replay: dispatch in recorded start order — priority carries the
+    recorded start time; a job becomes eligible once t >= recorded start."""
+    m = queued_mask(state) & (state.priority <= state.t)
+    return _masked_argmin(state.priority, m)
+
+
+def shadow_time(cfg: SimConfig, state: SimState, head: jax.Array) -> jax.Array:
+    """EASY reservation: earliest time the head job could start, assuming
+    running jobs release their nodes at their walltime estimates.
+
+    Approximation (standard in queueing sims): sort running jobs' estimated
+    end times; find when cumulative released *whole-node* count reaches the
+    head job's requirement given currently-free feasible nodes.
+    """
+    running = state.jstate == RUNNING
+    est_end = jnp.where(running, state.start_t + state.dur_est, BIG)
+    # nodes each running job will release (count of valid placement slots)
+    rel_nodes = jnp.sum(state.placement >= 0, axis=1).astype(jnp.float32)
+    rel_nodes = jnp.where(running, rel_nodes, 0.0)
+    order = jnp.argsort(est_end)
+    cum = jnp.cumsum(rel_nodes[order])
+    free_now = jnp.sum(feasible_nodes(state, head))
+    need = jnp.maximum(state.n_nodes[head].astype(jnp.float32) - free_now, 0.0)
+    reached = cum >= need
+    first = jnp.argmax(reached)
+    t_shadow = jnp.where(jnp.any(reached), est_end[order][first], BIG)
+    return jnp.where(need > 0, t_shadow, state.t)
+
+
+def select_easy(cfg: SimConfig, state: SimState) -> jax.Array:
+    """FCFS head first; if head infeasible, backfill any queued job that (a)
+    fits now and (b) finishes before the head's shadow time."""
+    head = select_fcfs(cfg, state)
+
+    def with_head(head):
+        _, head_fits = first_fit(state, head, state.placement.shape[1])
+
+        def backfill(_):
+            t_sh = shadow_time(cfg, state, head)
+            m = queued_mask(state)
+            # candidate must fit before the reservation (and not be the head)
+            fits_window = (state.t + state.dur_est) <= t_sh
+            not_head = jnp.arange(m.shape[0]) != head
+            cand = _masked_argmin(state.submit_t, m & fits_window & not_head)
+            return cand
+
+        return jax.lax.cond(head_fits, lambda _: head, backfill, None)
+
+    return jax.lax.cond(head >= 0, with_head, lambda _: jnp.int32(-1),
+                        jnp.int32(jnp.maximum(head, 0)))
+
+
+SCHEDULERS = {
+    "replay": select_replay,
+    "fcfs": select_fcfs,
+    "sjf": select_sjf,
+    "priority": select_priority,
+    "easy": select_easy,
+}
+
+
+def rl_candidates(cfg: SimConfig, state: SimState) -> jax.Array:
+    """Top-k FCFS-ordered queued jobs the RL agent chooses among. (k,) int."""
+    k = cfg.sched_max_candidates
+    m = queued_mask(state)
+    score = jnp.where(m, state.submit_t, BIG)
+    idx = jnp.argsort(score)[:k]
+    ok = jnp.take(m, idx)
+    return jnp.where(ok, idx, -1)

@@ -1,0 +1,287 @@
+"""The RAPS trace-replay / rescheduling simulator step and episode runner.
+
+``make_step(cfg, statics, scheduler)`` closes over the static datacenter
+description and returns a pure jit-able ``step(state, action) ->
+(state, StepOut)``; an episode is ``lax.scan`` over steps, so the whole
+digital twin vmaps across thousands of parallel datacenters for RL.
+
+Step order (matches RAPS' fixed-dt loop):
+  1. node failures / repairs (MTBF process)       [optional]
+  2. job completions -> free resources, stats
+  3. scheduling: up to `starts_per_step` dispatch attempts via the policy
+  4. progress running jobs (network-congestion-aware rate)
+  5. power chain + energy/carbon/stat accumulation
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sim import SimConfig
+from repro.core import schedulers as sched
+from repro.core.network import congestion_slowdown
+from repro.core.power import PowerOut, carbon_intensity, compute_power
+from repro.core.state import (
+    DONE,
+    EMPTY,
+    NRES,
+    QUEUED,
+    RUNNING,
+    SimState,
+    Statics,
+)
+
+
+class StepOut(NamedTuple):
+    facility_w: jax.Array
+    it_w: jax.Array
+    pue: jax.Array
+    util: jax.Array            # fraction of up-node cores|gpus busy
+    queue_len: jax.Array
+    running: jax.Array
+    completed_now: jax.Array
+    energy_kwh_step: jax.Array
+    carbon_kg_step: jax.Array
+    net_load: jax.Array
+    reward: jax.Array
+
+
+# ---------------------------------------------------------------------------
+def _apply_failures(cfg: SimConfig, state: SimState) -> SimState:
+    if cfg.node_mtbf_hours <= 0:
+        return state
+    key, k1 = jax.random.split(state.key)
+    N = state.node_up.shape[0]
+    p_fail = cfg.dt / (cfg.node_mtbf_hours * 3600.0)
+    fails = jax.random.bernoulli(k1, p_fail, (N,)) & (state.node_up > 0.5)
+    node_up = jnp.where(fails, 0.0, state.node_up)
+    repair_t = jnp.where(fails, state.t + cfg.node_repair_hours * 3600.0,
+                         state.repair_t)
+    # repairs
+    repaired = (node_up < 0.5) & (state.t >= repair_t)
+    node_up = jnp.where(repaired, 1.0, node_up)
+
+    # kill & requeue jobs touching failed nodes
+    J, K = state.placement.shape
+    place = state.placement
+    on_failed = jnp.any(
+        jnp.where(place >= 0, fails[jnp.where(place >= 0, place, 0)], False),
+        axis=1,
+    ) & (state.jstate == RUNNING)
+    # release resources of killed jobs
+    free = _release(state.free, state, on_failed)
+    jstate = jnp.where(on_failed, QUEUED, state.jstate)
+    work_left = jnp.where(on_failed, state.dur_est, state.work_left)
+    placement = jnp.where(on_failed[:, None], -1, place)
+    return state._replace(
+        key=key, node_up=node_up, repair_t=repair_t, free=free,
+        jstate=jstate, work_left=work_left, placement=placement,
+        n_failures=state.n_failures + on_failed.astype(jnp.int32),
+        n_killed=state.n_killed + jnp.sum(on_failed),
+    )
+
+
+def _release(free: jax.Array, state: SimState, mask: jax.Array) -> jax.Array:
+    """Add back resources of jobs in `mask` (J,) to the free pool."""
+    place = state.placement
+    valid = (place >= 0) & mask[:, None]
+    safe = jnp.where(valid, place, 0)
+    amounts = state.req[:, :, None] * valid[None, :, :]      # (R,J,K)
+    return free.at[:, safe.reshape(-1)].add(
+        amounts.reshape(NRES, -1), mode="drop"
+    )
+
+
+def _complete_jobs(cfg: SimConfig, state: SimState) -> Tuple[SimState, jax.Array]:
+    done_now = (state.jstate == RUNNING) & (state.work_left <= 0.0)
+    free = _release(state.free, state, done_now)
+    wait = jnp.maximum(state.start_t - state.submit_t, 0.0)
+    run = jnp.maximum(state.t - state.start_t, cfg.dt)
+    slowdown = jnp.maximum((wait + run) / run, 1.0)
+    n_done = jnp.sum(done_now)
+    state = state._replace(
+        free=free,
+        jstate=jnp.where(done_now, DONE, state.jstate),
+        end_t=jnp.where(done_now, state.t, state.end_t),
+        placement=jnp.where(done_now[:, None], -1, state.placement),
+        n_completed=state.n_completed + n_done,
+        sum_wait=state.sum_wait + jnp.sum(jnp.where(done_now, wait, 0.0)),
+        sum_slowdown=state.sum_slowdown + jnp.sum(jnp.where(done_now, slowdown, 0.0)),
+    )
+    return state, n_done
+
+
+def _try_start(cfg: SimConfig, state: SimState, job: jax.Array) -> SimState:
+    """Attempt to place & start `job` (no-op when job < 0 or infeasible)."""
+    K = state.placement.shape[1]
+    j = jnp.maximum(job, 0)
+    row, ok = sched.first_fit(state, j, K)
+    ok = ok & (job >= 0) & (state.jstate[j] == QUEUED)
+    valid = (row >= 0) & ok
+    safe = jnp.where(valid, row, 0)
+    amounts = state.req[:, j][:, None] * valid[None, :]      # (R,K)
+    free = state.free.at[:, safe].add(-amounts, mode="drop")
+    return state._replace(
+        free=jnp.where(ok, free, state.free).reshape(state.free.shape),
+        jstate=state.jstate.at[j].set(jnp.where(ok, RUNNING, state.jstate[j])),
+        start_t=state.start_t.at[j].set(jnp.where(ok, state.t, state.start_t[j])),
+        placement=state.placement.at[j].set(
+            jnp.where(ok, jnp.where(valid, row, -1), state.placement[j])
+        ),
+    )
+
+
+def make_step(
+    cfg: SimConfig,
+    statics: Statics,
+    scheduler: str = "fcfs",
+    *,
+    starts_per_step: int = 2,
+    reward_weights: Tuple[float, float, float, float] = (1.0, 1.0, 1.0, 0.05),
+    use_power_kernel: bool = False,
+):
+    """Returns step(state, action) -> (state, StepOut).
+
+    ``action``: int32 — for the 'rl' scheduler, index into
+    ``rl_candidates`` (k = no-op at index k); ignored otherwise.
+    reward_weights = (w_throughput, w_energy, w_carbon, w_queue).
+    """
+    if scheduler != "rl" and scheduler not in sched.SCHEDULERS:
+        raise KeyError(f"unknown scheduler {scheduler}")
+    w_thr, w_en, w_co2, w_q = reward_weights
+
+    def step(state: SimState, action: jax.Array) -> Tuple[SimState, StepOut]:
+        state = state._replace(t=state.t + cfg.dt)
+        state = _apply_failures(cfg, state)
+        state, n_done = _complete_jobs(cfg, state)
+
+        # --- dispatch
+        if scheduler == "rl":
+            cands = sched.rl_candidates(cfg, state)          # (k,)
+            k = cands.shape[0]
+            job = jnp.where(action < k, cands[jnp.clip(action, 0, k - 1)], -1)
+            state = _try_start(cfg, state, job)
+        else:
+            select = sched.SCHEDULERS[scheduler]
+            for _ in range(starts_per_step):
+                job = select(cfg, state)
+                state = _try_start(cfg, state, job)
+
+        # --- power chain (pre-throttle)
+        p: PowerOut = compute_power(cfg, state, statics, use_kernel=use_power_kernel)
+
+        # --- demand response: DVFS-throttle to the facility power cap
+        # (DCFlex-style [3]; linear dynamic-power/progress model)
+        throttle = jnp.float32(1.0)
+        if cfg.power_cap_w > 0:
+            idle_total = jnp.sum(statics.idle_w * state.node_up)
+            dyn = jnp.maximum(p.it_w - idle_total, 0.0)
+            # facility ~ it * overhead; solve idle + a*dyn <= cap/overhead
+            overhead = p.facility_w / jnp.maximum(p.it_w, 1.0)
+            cap_it = cfg.power_cap_w / jnp.maximum(overhead, 1e-6)
+            throttle = jnp.clip(
+                (cap_it - idle_total) / jnp.maximum(dyn, 1.0),
+                cfg.throttle_floor, 1.0,
+            )
+            r = (idle_total + throttle * dyn) / jnp.maximum(p.it_w, 1.0)
+            p = p._replace(
+                it_w=p.it_w * r, input_w=p.input_w * r,
+                cooling_w=p.cooling_w * r, facility_w=p.facility_w * r,
+                gflops=p.gflops * throttle,
+            )
+
+        # --- progress (congestion- and throttle-aware)
+        rate, net_load = congestion_slowdown(cfg, state, statics)
+        rate = rate * throttle
+        state = state._replace(work_left=state.work_left - rate * cfg.dt)
+        dt_h = cfg.dt / 3600.0
+        e_step = p.facility_w * dt_h / 1000.0                # kWh
+        it_step = p.it_w * dt_h / 1000.0
+        loss_step = (p.input_w - p.it_w) * dt_h / 1000.0
+        cool_step = p.cooling_w * dt_h / 1000.0
+        co2_step = e_step * carbon_intensity(cfg, state.t) / 1000.0  # kg
+
+        running = jnp.sum(state.jstate == RUNNING).astype(jnp.float32)
+        queued = jnp.sum(sched.queued_mask(state)).astype(jnp.float32)
+        up = jnp.maximum(jnp.sum(state.node_up), 1.0)
+        busy = jnp.sum(
+            (statics.capacity[0] - state.free[0]) / jnp.maximum(statics.capacity[0], 1e-6)
+            * state.node_up
+        )
+        util = busy / up
+
+        state = state._replace(
+            energy_kwh=state.energy_kwh + e_step,
+            it_energy_kwh=state.it_energy_kwh + it_step,
+            loss_energy_kwh=state.loss_energy_kwh + loss_step,
+            cool_energy_kwh=state.cool_energy_kwh + cool_step,
+            carbon_kg=state.carbon_kg + co2_step,
+            flops_integral=state.flops_integral + p.gflops * cfg.dt,
+            sum_power_w=state.sum_power_w + p.facility_w,
+            n_steps=state.n_steps + 1.0,
+        )
+
+        # reward: throughput-positive, energy/carbon/queue-negative,
+        # normalized to O(1) per step
+        reward = (
+            w_thr * n_done
+            - w_en * e_step / jnp.maximum(cfg.n_nodes * 0.4 * dt_h, 1e-9) * 0.1
+            - w_co2 * co2_step / jnp.maximum(cfg.n_nodes * 0.15 * dt_h, 1e-9) * 0.1
+            - w_q * queued * 0.01
+        )
+
+        out = StepOut(
+            facility_w=p.facility_w, it_w=p.it_w, pue=p.pue, util=util,
+            queue_len=queued, running=running, completed_now=n_done,
+            energy_kwh_step=e_step, carbon_kg_step=co2_step,
+            net_load=net_load, reward=reward,
+        )
+        return state, out
+
+    return step
+
+
+def run_episode(
+    cfg: SimConfig,
+    statics: Statics,
+    state: SimState,
+    n_steps: int,
+    scheduler: str = "fcfs",
+    **kw,
+) -> Tuple[SimState, StepOut]:
+    """Scan `n_steps` of the twin under a non-RL policy. Returns final state
+    + stacked per-step outputs (power history etc.)."""
+    step = make_step(cfg, statics, scheduler, **kw)
+
+    def body(s, _):
+        return step(s, jnp.int32(-1))
+
+    return jax.lax.scan(body, state, None, length=n_steps)
+
+
+def summary(state: SimState) -> dict:
+    n = max(float(state.n_completed), 1.0)
+    return {
+        "t_end_s": float(state.t),
+        "completed": float(state.n_completed),
+        "killed_by_failures": float(state.n_killed),
+        "energy_kwh": float(state.energy_kwh),
+        "it_energy_kwh": float(state.it_energy_kwh),
+        "loss_energy_kwh": float(state.loss_energy_kwh),
+        "cooling_energy_kwh": float(state.cool_energy_kwh),
+        "carbon_kg": float(state.carbon_kg),
+        "mean_power_w": float(state.sum_power_w) / max(float(state.n_steps), 1.0),
+        "mean_wait_s": float(state.sum_wait) / n,
+        "mean_slowdown": float(state.sum_slowdown) / n,
+        "gflops_per_watt": (
+            float(state.flops_integral) / 3600.0 / 1000.0
+            / max(float(state.energy_kwh), 1e-9)
+        ),
+        "avg_pue": (
+            float(state.energy_kwh) / max(float(state.it_energy_kwh), 1e-9)
+        ),
+    }

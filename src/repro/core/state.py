@@ -1,0 +1,161 @@
+"""Simulator state: fixed-shape pytrees so the whole datacenter twin is a
+pure `step(state, action) -> state` function under jit/vmap/scan.
+
+Job lifecycle: EMPTY -> QUEUED -> RUNNING -> DONE (slot then reusable).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.sim import SimConfig
+
+EMPTY, QUEUED, RUNNING, DONE = 0, 1, 2, 3
+NRES = 3  # cpu cores, gpus, mem_gb
+
+
+class Statics(NamedTuple):
+    """Per-node constants + telemetry bank; NOT carried through the scan."""
+
+    capacity: jax.Array        # (NRES, N)
+    node_type: jax.Array       # (N,) int32
+    idle_w: jax.Array          # (N,)
+    cpu_dyn_w: jax.Array       # (N,)
+    gpu_dyn_w: jax.Array       # (N,)
+    node_max_w: jax.Array      # (N,)
+    peak_gflops: jax.Array     # (N,)
+    # telemetry bank: per-job utilization profiles at trace-quanta resolution
+    cpu_trace: jax.Array       # (J, Q) in [0,1]
+    gpu_trace: jax.Array       # (J, Q)
+    net_tx: jax.Array          # (J,) GB/s per job (congestion model)
+
+
+class SimState(NamedTuple):
+    t: jax.Array               # scalar f32 seconds
+    key: jax.Array             # PRNG key
+    # nodes
+    free: jax.Array            # (NRES, N)
+    node_up: jax.Array         # (N,) f32 {0,1}
+    repair_t: jax.Array        # (N,) time at which a down node returns
+    # job table
+    jstate: jax.Array          # (J,) int32
+    submit_t: jax.Array        # (J,)
+    start_t: jax.Array         # (J,)
+    end_t: jax.Array           # (J,)
+    dur_est: jax.Array         # (J,) requested walltime [s]
+    work_left: jax.Array       # (J,) remaining work [s of unimpeded progress]
+    n_nodes: jax.Array         # (J,) int32
+    req: jax.Array             # (NRES, J) per-node demand
+    priority: jax.Array        # (J,)
+    placement: jax.Array       # (J, K) int32 node ids; -1 = unused slot
+    n_failures: jax.Array      # (J,) int32 restarts due to node failures
+    # accumulators
+    energy_kwh: jax.Array      # facility-side
+    it_energy_kwh: jax.Array
+    loss_energy_kwh: jax.Array  # rectification+conversion losses
+    cool_energy_kwh: jax.Array
+    carbon_kg: jax.Array
+    flops_integral: jax.Array  # GFLOP delivered (utilization-weighted)
+    n_completed: jax.Array
+    n_killed: jax.Array
+    sum_wait: jax.Array
+    sum_slowdown: jax.Array
+    sum_power_w: jax.Array     # for mean power
+    n_steps: jax.Array
+
+
+def build_statics(cfg: SimConfig, trace_bank: Dict[str, Any] | None = None) -> Statics:
+    """Expand per-type node constants into per-node arrays."""
+    caps, types, idle, cdyn, gdyn, nmax, gflops = [], [], [], [], [], [], []
+    for ti, t in enumerate(cfg.node_types):
+        for _ in range(t.count):
+            caps.append([t.cpu_cores, t.gpus, t.mem_gb])
+            types.append(ti)
+            idle.append(t.idle_w + t.gpus * t.gpu_idle_w)
+            cdyn.append(t.cpu_dyn_w)
+            gdyn.append(t.gpus * t.gpu_dyn_w)
+            nmax.append(t.idle_w + t.gpus * t.gpu_idle_w + t.cpu_dyn_w + t.gpus * t.gpu_dyn_w)
+            gflops.append(t.peak_gflops)
+    J = cfg.max_jobs
+    if trace_bank is None:
+        q = 8
+        trace_bank = {
+            "cpu": np.zeros((J, q), np.float32),
+            "gpu": np.zeros((J, q), np.float32),
+            "net_tx": np.zeros((J,), np.float32),
+        }
+    return Statics(
+        capacity=jnp.asarray(np.array(caps, np.float32).T),
+        node_type=jnp.asarray(np.array(types, np.int32)),
+        idle_w=jnp.asarray(np.array(idle, np.float32)),
+        cpu_dyn_w=jnp.asarray(np.array(cdyn, np.float32)),
+        gpu_dyn_w=jnp.asarray(np.array(gdyn, np.float32)),
+        node_max_w=jnp.asarray(np.array(nmax, np.float32)),
+        peak_gflops=jnp.asarray(np.array(gflops, np.float32)),
+        cpu_trace=jnp.asarray(trace_bank["cpu"], jnp.float32),
+        gpu_trace=jnp.asarray(trace_bank["gpu"], jnp.float32),
+        net_tx=jnp.asarray(trace_bank["net_tx"], jnp.float32),
+    )
+
+
+def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
+    N = cfg.n_nodes
+    J = cfg.max_jobs
+    K = cfg.max_nodes_per_job
+    f = jnp.float32
+    zJ = jnp.zeros((J,), f)
+    return SimState(
+        t=f(0.0),
+        key=key,
+        free=statics.capacity,
+        node_up=jnp.ones((N,), f),
+        repair_t=jnp.zeros((N,), f),
+        jstate=jnp.zeros((J,), jnp.int32),
+        submit_t=zJ,
+        start_t=zJ,
+        end_t=zJ,
+        dur_est=zJ,
+        work_left=zJ,
+        n_nodes=jnp.zeros((J,), jnp.int32),
+        req=jnp.zeros((NRES, J), f),
+        priority=zJ,
+        placement=-jnp.ones((J, K), jnp.int32),
+        n_failures=jnp.zeros((J,), jnp.int32),
+        energy_kwh=f(0.0),
+        it_energy_kwh=f(0.0),
+        loss_energy_kwh=f(0.0),
+        cool_energy_kwh=f(0.0),
+        carbon_kg=f(0.0),
+        flops_integral=f(0.0),
+        n_completed=f(0.0),
+        n_killed=f(0.0),
+        sum_wait=f(0.0),
+        sum_slowdown=f(0.0),
+        sum_power_w=f(0.0),
+        n_steps=f(0.0),
+    )
+
+
+def load_jobs(state: SimState, jobs: Dict[str, np.ndarray]) -> SimState:
+    """Install a workload (from the trace loader or synthesizer) into the
+    job table. ``jobs`` fields: submit_t, dur, n_nodes, req (NRES, J'),
+    priority; J' <= max_jobs."""
+    J = state.jstate.shape[0]
+    n = len(jobs["submit_t"])
+    assert n <= J, f"workload has {n} jobs > max_jobs {J}"
+    sl = slice(0, n)
+    return state._replace(
+        jstate=state.jstate.at[sl].set(QUEUED),
+        submit_t=state.submit_t.at[sl].set(jnp.asarray(jobs["submit_t"], jnp.float32)),
+        dur_est=state.dur_est.at[sl].set(jnp.asarray(jobs["dur"], jnp.float32)),
+        work_left=state.work_left.at[sl].set(jnp.asarray(jobs["dur"], jnp.float32)),
+        n_nodes=state.n_nodes.at[sl].set(jnp.asarray(jobs["n_nodes"], jnp.int32)),
+        req=state.req.at[:, sl].set(jnp.asarray(jobs["req"], jnp.float32)),
+        priority=state.priority.at[sl].set(
+            jnp.asarray(jobs.get("priority", np.zeros(n)), jnp.float32)
+        ),
+    )

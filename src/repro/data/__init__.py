@@ -1,0 +1,3 @@
+from repro.data.synth_trace import synth_workload
+from repro.data.trace_io import load_supercloud, write_supercloud_csvs
+from repro.data.synth_lm import lm_batches, lm_batch_at

@@ -1,0 +1,1 @@
+from repro.envs.sched_env import EnvState, SchedEnv

@@ -1,0 +1,212 @@
+"""OpenAI-Gym-style (pure functional) scheduling environment over the twin.
+
+Action space: Discrete(k+1) — dispatch queue-candidate i in [0,k), or k =
+no-op. Observations: fixed-size float vector of global datacenter features
++ per-candidate job features. Reward: the sim's energy/carbon/throughput
+mix (paper: "the reward function combines energy consumption, carbon
+footprint, and job throughput").
+
+The env is a pytree-in/pytree-out (reset, step) pair -> vmap over
+thousands of parallel datacenters, lax.scan over time, shard_map across
+the mesh for distributed PPO.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.sim import SimConfig
+from repro.core import schedulers as sched
+from repro.core.power import carbon_intensity
+from repro.core.sim import make_step
+from repro.core.state import (
+    QUEUED,
+    RUNNING,
+    SimState,
+    Statics,
+    build_statics,
+    init_state,
+    load_jobs,
+)
+
+
+class EnvState(NamedTuple):
+    sim: SimState
+    statics: Statics          # per-env (workload bank slice)
+    step_count: jax.Array
+
+
+class SchedEnv:
+    """Constructed from a *bank* of workloads (numpy); reset samples one."""
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        workloads,                    # list of (jobs, bank) tuples
+        *,
+        episode_steps: int = 512,
+        sim_steps_per_action: int = 15,
+        reward_weights=(1.0, 1.0, 1.0, 0.05),
+    ):
+        self.cfg = cfg
+        self.episode_steps = episode_steps
+        self.k = cfg.sched_max_candidates
+        self.n_actions = self.k + 1
+        self.sim_steps_per_action = sim_steps_per_action
+
+        # stack the workload bank (pad Q to common length)
+        qmax = max(b["cpu"].shape[1] for _, b in workloads)
+        J = cfg.max_jobs
+
+        def padQ(a):
+            out = np.zeros((J, qmax), np.float32)
+            out[:, : a.shape[1]] = a
+            # hold last value so long jobs keep their final utilization
+            out[:, a.shape[1]:] = a[:, -1:]
+            return out
+
+        self._banks = {
+            "cpu": jnp.asarray(np.stack([padQ(b["cpu"]) for _, b in workloads])),
+            "gpu": jnp.asarray(np.stack([padQ(b["gpu"]) for _, b in workloads])),
+            "net": jnp.asarray(np.stack([b["net_tx"] for _, b in workloads])),
+        }
+
+        def padJ(jobs):
+            out = {}
+            n = len(jobs["submit_t"])
+            for name, arr in jobs.items():
+                if name == "is_gpu":
+                    continue
+                arr = np.asarray(arr)
+                shape = (3, J) if name == "req" else (J,) + arr.shape[1:]
+                buf = np.zeros(shape, arr.dtype)
+                if name == "req":
+                    buf[:, :n] = arr
+                else:
+                    buf[:n] = arr
+                out[name] = buf
+            out["n_valid"] = np.int32(n)
+            return out
+
+        padded = [padJ(j) for j, _ in workloads]
+        self._jobs = {
+            name: jnp.asarray(np.stack([p[name] for p in padded]))
+            for name in padded[0]
+        }
+        self.n_workloads = len(workloads)
+        self._base_statics = build_statics(cfg)  # node constants
+        self._step_fn = make_step(
+            cfg, self._base_statics, "rl", reward_weights=reward_weights
+        )
+        self.obs_dim = int(self._obs_spec())
+
+    # ------------------------------------------------------------------ api
+    def reset(self, key: jax.Array) -> Tuple[EnvState, jax.Array]:
+        kw, ks = jax.random.split(key)
+        w = jax.random.randint(kw, (), 0, self.n_workloads)
+        statics = self._base_statics._replace(
+            cpu_trace=self._banks["cpu"][w],
+            gpu_trace=self._banks["gpu"][w],
+            net_tx=self._banks["net"][w],
+        )
+        sim = init_state(self.cfg, statics, ks)
+        n = self._jobs["n_valid"][w]
+        J = self.cfg.max_jobs
+        idx = jnp.arange(J)
+        valid = idx < n
+        sim = sim._replace(
+            jstate=jnp.where(valid, QUEUED, 0).astype(jnp.int32),
+            submit_t=self._jobs["submit_t"][w],
+            dur_est=self._jobs["dur"][w],
+            work_left=self._jobs["dur"][w],
+            n_nodes=jnp.where(valid, self._jobs["n_nodes"][w], 0).astype(jnp.int32),
+            req=self._jobs["req"][w],
+            priority=self._jobs["priority"][w],
+        )
+        st = EnvState(sim=sim, statics=statics, step_count=jnp.int32(0))
+        return st, self.observe(st)
+
+    def step(
+        self, st: EnvState, action: jax.Array
+    ) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
+        step_fn = make_step(
+            self.cfg, st.statics, "rl",
+            reward_weights=self._step_fn_weights()
+        )
+
+        def sub(carry, i):
+            s, _ = carry
+            a = jnp.where(i == 0, action, jnp.int32(self.n_actions - 1))
+            s, out = step_fn(s, a)
+            return (s, out.reward), out
+
+        (sim, _), outs = jax.lax.scan(
+            (lambda c, i: sub(c, i)), (st.sim, st.sim.t * 0.0),
+            jnp.arange(self.sim_steps_per_action),
+        )
+        reward = jnp.sum(outs.reward)
+        st = EnvState(sim=sim, statics=st.statics, step_count=st.step_count + 1)
+        done = st.step_count >= self.episode_steps
+        info = {
+            "facility_w": outs.facility_w[-1],
+            "queue_len": outs.queue_len[-1],
+            "completed": jnp.sum(outs.completed_now),
+            "energy_kwh": jnp.sum(outs.energy_kwh_step),
+            "carbon_kg": jnp.sum(outs.carbon_kg_step),
+        }
+        return st, self.observe(st), reward, done, info
+
+    def _step_fn_weights(self):
+        return (1.0, 1.0, 1.0, 0.05)
+
+    # ------------------------------------------------------------ features
+    def _obs_spec(self) -> int:
+        n_types = self.cfg.n_types
+        return 8 + 3 * n_types + 8 * self.k
+
+    def observe(self, st: EnvState) -> jax.Array:
+        cfg, sim, statics = self.cfg, st.sim, st.statics
+        day = 2 * jnp.pi * sim.t / cfg.day_seconds
+        queued = jnp.sum(sched.queued_mask(sim)).astype(jnp.float32)
+        running = jnp.sum(sim.jstate == RUNNING).astype(jnp.float32)
+        co2 = carbon_intensity(cfg, sim.t) / max(cfg.carbon_mean, 1.0)
+        glob = jnp.stack([
+            jnp.sin(day), jnp.cos(day), co2,
+            queued / cfg.max_jobs, running / cfg.max_jobs,
+            jnp.sum(sim.node_up) / cfg.n_nodes,
+            sim.t / cfg.day_seconds,
+            st.step_count.astype(jnp.float32) / max(self.episode_steps, 1),
+        ])
+        # per-node-type free fractions (cpu, gpu, mem)
+        per_type = []
+        for ti in range(cfg.n_types):
+            m = (statics.node_type == ti).astype(jnp.float32)
+            for r in range(3):
+                cap = jnp.sum(statics.capacity[r] * m)
+                free = jnp.sum(sim.free[r] * m * sim.node_up)
+                per_type.append(free / jnp.maximum(cap, 1e-6))
+        per_type = jnp.stack(per_type)
+
+        cands = sched.rl_candidates(cfg, sim)               # (k,)
+        safe = jnp.maximum(cands, 0)
+        valid = (cands >= 0).astype(jnp.float32)
+        wait = jnp.maximum(sim.t - sim.submit_t[safe], 0.0) / 3600.0
+        dur = sim.dur_est[safe] / 3600.0
+        nn = sim.n_nodes[safe].astype(jnp.float32) / cfg.max_nodes_per_job
+        reqf = sim.req[:, safe] / jnp.maximum(
+            jnp.max(statics.capacity, axis=1, keepdims=True), 1e-6
+        )                                                    # (3,k)
+        # estimated energy proxy: nodes * dur * mean gpu util request
+        eproxy = nn * dur
+        feasible = jax.vmap(
+            lambda j: jnp.sum(sched.feasible_nodes(sim, j))
+        )(safe).astype(jnp.float32) / cfg.n_nodes
+        cand_feats = jnp.concatenate([
+            valid, wait * valid, dur * valid, nn * valid,
+            reqf[0] * valid, reqf[1] * valid, eproxy * valid, feasible * valid,
+        ])
+        return jnp.concatenate([glob, per_type, cand_feats]).astype(jnp.float32)

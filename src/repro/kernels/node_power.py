@@ -1,0 +1,105 @@
+"""Node power-chain Pallas kernel (the simulator's per-step hot loop).
+
+For batched-RL rollouts the twin evaluates the power chain for every node
+of every vectorized environment every step: (E, N) utilization fractions
+-> IT power -> rectifier-efficiency parabola -> conversion loss. Fused
+into a single VMEM pass (grid = (E, node blocks)): six input streams are
+read once from HBM, two outputs written once — no intermediate arrays,
+which is the memory-bound optimum (the XLA path materializes the eta and
+load_frac temporaries).
+
+Validated against ``ref.node_power_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_kernel(
+    cpu_ref, gpu_ref, up_ref,            # (1, bn)
+    idle_ref, cdyn_ref, gdyn_ref, maxw_ref,   # (bn,)
+    it_ref, inp_ref,                     # (1, bn)
+    *,
+    rect_peak: float,
+    rect_load: float,
+    rect_curv: float,
+    conv_eff: float,
+):
+    cpu = cpu_ref[0].astype(jnp.float32)
+    gpu = gpu_ref[0].astype(jnp.float32)
+    up = up_ref[0].astype(jnp.float32)
+    it = (idle_ref[...] + cpu * cdyn_ref[...] + gpu * gdyn_ref[...]) * up
+    load = jnp.clip(it / jnp.maximum(maxw_ref[...], 1.0), 0.0, 1.2)
+    eta = jnp.clip(rect_peak - rect_curv * jnp.square(load - rect_load), 0.5, 1.0)
+    it_ref[0, ...] = it.astype(it_ref.dtype)
+    inp_ref[0, ...] = (it / (eta * conv_eff)).astype(inp_ref.dtype)
+
+
+def node_power_pallas(
+    cpu_frac: jax.Array,      # (E, N)
+    gpu_frac: jax.Array,      # (E, N)
+    idle_w: jax.Array,        # (N,)
+    cpu_dyn_w: jax.Array,
+    gpu_dyn_w: jax.Array,
+    node_up: jax.Array,       # (E, N)
+    node_max_w: jax.Array,    # (N,)
+    *,
+    rect_peak: float,
+    rect_load: float,
+    rect_curv: float,
+    conv_eff: float,
+    block_n: int = 512,
+    interpret: bool = True,
+):
+    squeeze = cpu_frac.ndim == 1
+    if squeeze:
+        cpu_frac, gpu_frac, node_up = (
+            cpu_frac[None], gpu_frac[None], node_up[None]
+        )
+    e, n = cpu_frac.shape
+    block_n = min(block_n, n)
+    # pad N to a block multiple (node_max_w padding of 1 avoids div-by-0)
+    pad = (-n) % block_n
+    if pad:
+        padE = lambda a: jnp.pad(a, ((0, 0), (0, pad)))
+        padN = lambda a, v=0.0: jnp.pad(a, (0, pad), constant_values=v)
+        cpu_frac, gpu_frac, node_up = padE(cpu_frac), padE(gpu_frac), padE(node_up)
+        idle_w, cpu_dyn_w, gpu_dyn_w = padN(idle_w), padN(cpu_dyn_w), padN(gpu_dyn_w)
+        node_max_w = padN(node_max_w, 1.0)
+    nb = (n + pad) // block_n
+
+    kernel = functools.partial(
+        _power_kernel, rect_peak=rect_peak, rect_load=rect_load,
+        rect_curv=rect_curv, conv_eff=conv_eff,
+    )
+    it, inp = pl.pallas_call(
+        kernel,
+        grid=(e, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, n + pad), jnp.float32),
+            jax.ShapeDtypeStruct((e, n + pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cpu_frac, gpu_frac, node_up, idle_w, cpu_dyn_w, gpu_dyn_w, node_max_w)
+    it, inp = it[:, :n], inp[:, :n]
+    if squeeze:
+        it, inp = it[0], inp[0]
+    return it, inp

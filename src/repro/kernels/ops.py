@@ -1,0 +1,97 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+- ``interpret`` defaults to True off-TPU (this container is CPU-only; on a
+  real TPU set REPRO_PALLAS_INTERPRET=0 or pass interpret=False).
+- ``flash_attention`` is differentiable: forward = Pallas kernel, backward
+  = jax.vjp through the jnp chunked-online-softmax reference (identical
+  math; the TPU backward kernel is an optimization left to ops parity).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attn import flash_attention_fwd
+from repro.kernels.mamba_scan import selective_scan_pallas
+from repro.kernels.node_power import node_power_pallas
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=0, block_q=512, block_k=1024):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_default_interpret(),
+    )
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k):
+    out = flash_attention(q, k, v, causal, window, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, block_q, block_k, res, g):
+    q, k, v = res
+    from repro.models.layers import attention_chunked
+
+    def f(q, k, v):
+        return attention_chunked(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k,
+        )
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def selective_scan(x, dt, A, B, C, chunk=64):
+    return selective_scan_pallas(
+        x, dt, A, B, C, chunk=chunk, interpret=_default_interpret()
+    )
+
+
+def _ss_fwd(x, dt, A, B, C, chunk):
+    out = selective_scan(x, dt, A, B, C, chunk)
+    return out, (x, dt, A, B, C)
+
+
+def _ss_bwd(chunk, res, g):
+    x, dt, A, B, C = res
+    gy, gs = g
+
+    def f(x, dt, A, B, C):
+        return _ref.selective_scan_ref(x, dt, A, B, C, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, A, B, C)
+    return vjp((gy, gs))
+
+
+selective_scan.defvjp(_ss_fwd, _ss_bwd)
+
+
+# ---------------------------------------------------------------------------
+def node_power(cpu_frac, gpu_frac, idle_w, cpu_dyn_w, gpu_dyn_w, node_up,
+               node_max_w, *, rect_peak, rect_load, rect_curv, conv_eff):
+    return node_power_pallas(
+        cpu_frac, gpu_frac, idle_w, cpu_dyn_w, gpu_dyn_w, node_up, node_max_w,
+        rect_peak=rect_peak, rect_load=rect_load, rect_curv=rect_curv,
+        conv_eff=conv_eff, interpret=_default_interpret(),
+    )

@@ -1,0 +1,423 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract roofline inputs (FLOPs, bytes, per-collective traffic, memory) —
+no array is ever allocated (ShapeDtypeStruct in, AOT compile only).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/artifacts
+  ... --set seq_parallel=0 --set microbatches=2 --tag nosp   (hillclimb knobs)
+"""
+
+# The VERY FIRST lines, before any other import (jax locks the device count
+# on first init): 512 host platform devices for the production meshes.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, arch_names, get_arch, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import batch_specs, count_params_analytic
+from repro.models.model import decode_step as _decode_step
+from repro.optim import default_optimizer_for, get_optimizer
+from repro.sharding.ctx import make_ctx
+from repro.sharding.specs import batch_pspecs, param_pspecs
+from repro.train.state import abstract_train_state, train_state_pspecs
+from repro.train.train_step import make_train_step
+from repro.utils.hlo import parse_collectives
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def _sharded(tree_specs, tree_pspecs, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)
+        ),
+        tree_specs, tree_pspecs,
+    )
+
+
+def _ns(tree_pspecs, mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree_pspecs)
+
+
+def _cast_tree(tree, dtype):
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dtype,
+                                        sharding=getattr(s, "sharding", None))
+        return s
+    return jax.tree.map(one, tree)
+
+
+def _lower_and_compile(cfg, shape, mesh, ctx, optimizer, microbatches):
+    """Lower+compile one step for (cfg, shape) on mesh. Returns (compiled,
+    lower_s, compile_s)."""
+    t0 = time.time()
+    with mesh:
+        if shape.mode == "train":
+            state_specs = abstract_train_state(cfg, optimizer)
+            state_ps = train_state_pspecs(cfg, ctx, optimizer, mesh)
+            b_specs = batch_specs(cfg, shape)
+            b_ps = batch_pspecs(cfg, shape, ctx)
+            step = make_train_step(cfg, optimizer, ctx, microbatches=microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_ns(state_ps, mesh), _ns(b_ps, mesh)),
+                out_shardings=(_ns(state_ps, mesh), None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(
+                _sharded(state_specs, state_ps, mesh),
+                _sharded(b_specs, b_ps, mesh),
+            )
+        elif shape.mode == "prefill":
+            from repro.models.spec import model_param_specs
+            from repro.models.model import prefill
+
+            p_specs = _cast_tree(model_param_specs(cfg), jnp.bfloat16)
+            p_ps = param_pspecs(cfg, ctx, mesh)
+            b_specs = batch_specs(cfg, shape)
+            b_ps = batch_pspecs(cfg, shape, ctx)
+
+            def step(params, batch):
+                return prefill(params, batch, cfg, ctx,
+                               cache_seq_len=shape.seq_len)
+
+            jitted = jax.jit(step, in_shardings=(_ns(p_ps, mesh), _ns(b_ps, mesh)))
+            lowered = jitted.lower(
+                _sharded(p_specs, p_ps, mesh), _sharded(b_specs, b_ps, mesh)
+            )
+        else:  # decode
+            from repro.models.spec import model_param_specs
+
+            p_specs = _cast_tree(model_param_specs(cfg), jnp.bfloat16)
+            p_ps = param_pspecs(cfg, ctx, mesh)
+            b_specs = batch_specs(cfg, shape)
+            b_ps = batch_pspecs(cfg, shape, ctx)
+
+            def step(params, cache, tokens, cache_len):
+                return _decode_step(params, cache, tokens, cache_len, cfg, ctx)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    _ns(p_ps, mesh), _ns(b_ps["cache"], mesh),
+                    _ns(b_ps["tokens"], mesh), NamedSharding(mesh, P()),
+                ),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                _sharded(p_specs, p_ps, mesh),
+                _sharded(b_specs["cache"], b_ps["cache"], mesh),
+                _sharded(b_specs["tokens"], b_ps["tokens"], mesh),
+                jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=NamedSharding(mesh, P())),
+            )
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _probe_costs(cfg, shape, mesh, ctx, optimizer, microbatches):
+    """Layer-delta cost probes: compile fully-UNROLLED variants at L=0,
+    L=period (and L=period+tail when a tail exists), then scale the
+    per-superblock delta by n_repeats. Avoids XLA cost-analysis' while-body
+    undercounting (bodies visited once, not x trip count).
+    """
+    from repro.models.spec import layout
+
+    period, n_repeats, n_tail = layout(cfg)
+    probe_ctx = ctx.with_(
+        force_unroll=True,
+        attention_impl="full",      # no inner loops; analysis-only
+        logit_chunk=shape.seq_len,  # single loss chunk -> 1-trip map
+    )
+    probe_cfg_base = replace(
+        cfg, ssm=replace(cfg.ssm, chunk=min(shape.seq_len, 4096))
+    )
+
+    def costs_at(L):
+        c = replace(probe_cfg_base, n_layers=L)
+        # probes always use microbatches=1: gradient accumulation wraps the
+        # body in a while loop (cost-analysis blind spot); per-step FLOPs at
+        # full batch are identical, weight-gather bytes are under-counted by
+        # the microbatch factor (noted in EXPERIMENTS.md).
+        compiled, _, t = _lower_and_compile(
+            c, shape, mesh, probe_ctx, optimizer, 1
+        )
+        cost = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+        loops = compiled.as_text().count(" while(")
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll.total_bytes),
+            "coll_by_kind": dict(coll.bytes_by_kind),
+            "loops": loops,
+            "compile_s": t,
+        }
+
+    c0 = costs_at(0)
+    c1 = costs_at(period)
+    c2 = costs_at(period + n_tail) if n_tail else c1
+
+    def scale(key):
+        return (
+            c0[key]
+            + n_repeats * (c1[key] - c0[key])
+            + (c2[key] - c1[key])
+        )
+
+    kinds = set(c0["coll_by_kind"]) | set(c1["coll_by_kind"]) | set(c2["coll_by_kind"])
+    coll_by_kind = {
+        k: (
+            c0["coll_by_kind"].get(k, 0)
+            + n_repeats * (c1["coll_by_kind"].get(k, 0) - c0["coll_by_kind"].get(k, 0))
+            + (c2["coll_by_kind"].get(k, 0) - c1["coll_by_kind"].get(k, 0))
+        )
+        for k in kinds
+    }
+    return {
+        "flops_per_dev": scale("flops"),
+        "bytes_per_dev": scale("bytes"),
+        "collective_bytes_per_dev": scale("coll"),
+        "collective_bytes_by_kind": coll_by_kind,
+        "residual_loops_in_probe": max(c0["loops"], c1["loops"], c2["loops"]),
+        "probe_compile_s": c0["compile_s"] + c1["compile_s"] + c2["compile_s"],
+        "probe_points": {"L0": c0, "L_period": c1,
+                         **({"L_period_tail": c2} if n_tail else {})},
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    ctx_overrides=None,
+    microbatches: int = 1,
+    optimizer_name: str = "",
+    verbose: bool = True,
+    probes: bool = True,
+):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "SKIP", "reason": why}
+
+    multi = mesh_kind == "multi"
+    if mesh_kind.startswith("custom:"):
+        # e.g. 'custom:32,8' -> single-pod (data=32, model=8) mesh
+        d, m = (int(x) for x in mesh_kind.split(":")[1].split(","))
+        mesh = jax.make_mesh(
+            (d, m), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+            devices=jax.devices()[: d * m],
+        )
+        multi = False
+        tp_size = m
+    else:
+        mesh = make_production_mesh(multi_pod=multi)
+        tp_size = 16
+    n_chips = mesh.devices.size
+    dp_total = n_chips // tp_size
+
+    kw = dict(ctx_overrides or {})
+    if shape.mode == "decode" and shape.global_batch < dp_total:
+        kw.setdefault("decode_kv_shard", "seq2d")
+    kw.setdefault("attention_impl", "chunked")
+    kw.setdefault("dp_size", dp_total)
+    kw.setdefault("tp_size", tp_size)
+    ctx = make_ctx(multi, **kw)
+
+    n_params = count_params_analytic(cfg)
+    n_active = count_params_analytic(cfg, active_only=True)
+    opt_name = optimizer_name or default_optimizer_for(n_params)
+    optimizer = get_optimizer(opt_name)
+
+    # phase 1: realistic compile (scan-over-layers, chunked attention) —
+    # proves sharding coherence and per-device memory fit
+    compiled, t_lower, t_compile = _lower_and_compile(
+        cfg, shape, mesh, ctx, optimizer, microbatches
+    )
+    mem = compiled.memory_analysis()
+    raw_cost = compiled.cost_analysis() or {}
+    raw_coll = parse_collectives(compiled.as_text())
+
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+
+    # phase 2: layer-delta cost probes (single-pod roofline terms)
+    probe = None
+    if probes:
+        probe = _probe_costs(cfg, shape, mesh, ctx, optimizer, microbatches)
+
+    flops_dev = probe["flops_per_dev"] if probe else float(raw_cost.get("flops", 0))
+    bytes_dev = probe["bytes_per_dev"] if probe else float(raw_cost.get("bytes accessed", 0))
+    coll_dev = probe["collective_bytes_per_dev"] if probe else float(raw_coll.total_bytes)
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "OK",
+        "n_chips": int(n_chips),
+        "optimizer": opt_name,
+        "params_b": n_params / 1e9,
+        "active_params_b": n_active / 1e9,
+        "tokens_per_step": float(tokens),
+        "model_flops_total": model_flops,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "collectives": {
+            "bytes_by_kind": (probe or {}).get(
+                "collective_bytes_by_kind", raw_coll.bytes_by_kind
+            ),
+            "raw_scan_body_bytes_by_kind": raw_coll.bytes_by_kind,
+            "raw_scan_body_count_by_kind": raw_coll.count_by_kind,
+        },
+        **terms,
+        "dominant": dominant,
+        "model_flops_ratio": (
+            model_flops / (flops_dev * n_chips) if flops_dev else 0.0
+        ),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        },
+        "raw_cost_analysis": {
+            "flops": float(raw_cost.get("flops", 0.0)),
+            "bytes_accessed": float(raw_cost.get("bytes accessed", 0.0)),
+        },
+        "probe": probe,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "ctx": {k: v for k, v in (ctx_overrides or {}).items()},
+        "microbatches": microbatches,
+    }
+    if verbose:
+        print(
+            f"[{arch} x {shape_name} x {mesh_kind}] OK "
+            f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+            f"coll/dev={coll_dev:.3e} dominant={dominant} "
+            f"mfr={result['model_flops_ratio']:.3f} "
+            f"mem(arg)={mem.argument_size_in_bytes/2**30:.2f}GiB "
+            f"mem(temp)={mem.temp_size_in_bytes/2**30:.2f}GiB "
+            f"compile={t_compile:.0f}s",
+            flush=True,
+        )
+    return result
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("0", "1") and k not in ("scan_unroll", "logit_chunk",
+                                         "block_q", "block_k"):
+            v = bool(int(v))
+        elif v.isdigit():
+            v = int(v)
+        elif v in ("True", "False"):
+            v = v == "True"
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    help="single | multi | both | custom:<data>,<model>")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/artifacts")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", dest="overrides",
+                    help="ShardCtx overrides, e.g. --set seq_parallel=0")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip layer-delta cost probes (multi-pod pass only "
+                    "needs the realistic compile)")
+    args = ap.parse_args()
+
+    archs = arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    overrides = parse_overrides(args.overrides)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                tag = f"__{args.tag}" if args.tag else ""
+                fname = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh}{tag}.json"
+                )
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[{arch} x {shape} x {mesh}] exists, skipping")
+                    continue
+                try:
+                    res = run_cell(
+                        arch, shape, mesh,
+                        ctx_overrides=overrides,
+                        microbatches=args.microbatches,
+                        optimizer_name=args.optimizer,
+                        probes=not args.no_probes and mesh != "multi",
+                    )
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "FAIL", "error": repr(e)}
+                    failures.append((arch, shape, mesh))
+                with open(fname, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""LM training driver.
+
+Runs any ``--arch`` (full or ``--reduced``) on whatever devices exist:
+builds a (data, model) mesh, FSDP+TP+SP shards the state, streams the
+deterministic synthetic corpus, checkpoints asynchronously and resumes
+exactly (seekable data + monotone step dirs). The end-to-end ~100M-model
+example (examples/train_lm.py) drives this module.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
+      --steps 200 --batch 8 --seq 256 --ckpt /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import get_arch, reduced
+from repro.data.synth_lm import lm_batch_at
+from repro.launch.mesh import make_mesh_for
+from repro.models import count_params_analytic
+from repro.optim import cosine_warmup, default_optimizer_for, get_optimizer
+from repro.sharding.ctx import ShardCtx, make_ctx, UNSHARDED
+from repro.train.state import create_train_state, train_state_pspecs
+from repro.train.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", default=None, choices=[None, "int8"])
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    n_params = count_params_analytic(cfg)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"(reduced={args.reduced})")
+
+    opt_name = default_optimizer_for(n_params)
+    optimizer = get_optimizer(
+        opt_name, lr=cosine_warmup(args.lr, args.warmup, args.steps)
+    )
+
+    n_dev = len(jax.devices())
+    use_mesh = n_dev > 1
+    if use_mesh:
+        mesh = make_mesh_for(model_axis=args.model_axis)
+        ctx = make_ctx(False, tp_size=args.model_axis,
+                       dp_size=n_dev // args.model_axis)
+    else:
+        mesh = None
+        ctx = UNSHARDED
+
+    state = create_train_state(cfg, optimizer, jax.random.key(args.seed))
+    start = 0
+    if args.ckpt and args.resume:
+        s0 = latest_step(args.ckpt)
+        if s0 is not None:
+            state = restore(args.ckpt, s0, state)
+            start = int(state["step"])
+            print(f"resumed from step {start}")
+
+    step_fn = make_train_step(
+        cfg, optimizer, ctx, microbatches=args.microbatches,
+        compress=args.compress,
+    )
+    if use_mesh:
+        from repro.sharding.specs import batch_pspecs
+        from repro.configs.base import ShapeConfig
+        from jax.sharding import NamedSharding
+
+        shape = ShapeConfig("cli", args.seq, args.batch, "train")
+        state_ps = train_state_pspecs(cfg, ctx, optimizer, mesh)
+        b_ps = batch_pspecs(cfg, shape, ctx)
+        ns = lambda t: jax.tree.map(lambda p: NamedSharding(mesh, p), t)
+        jitted = jax.jit(step_fn, in_shardings=(ns(state_ps), ns(b_ps)),
+                         out_shardings=(ns(state_ps), None),
+                         donate_argnums=(0,))
+        state = jax.device_put(state, ns(state_ps))
+    else:
+        jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+    ckpt = AsyncCheckpointer(args.ckpt) if args.ckpt else None
+    extras = {}
+    if cfg.n_vision_tokens:
+        extras["vision"] = (cfg.n_vision_tokens, cfg.d_model)
+    if cfg.enc_dec:
+        extras["audio"] = (cfg.n_audio_frames, cfg.d_model)
+
+    history = []
+    t0 = time.time()
+    tokens_done = 0
+    for step in range(start, args.steps):
+        batch = lm_batch_at(
+            step, vocab=cfg.vocab, batch=args.batch, seq_len=args.seq,
+            seed=args.seed, extras=extras or None,
+        )
+        state, metrics = jitted(state, batch)
+        tokens_done += args.batch * args.seq
+        if (step + 1) % args.log_every == 0 or step == start:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            m.update(step=step, tok_per_s=tokens_done / max(dt, 1e-9))
+            history.append(m)
+            print(f"step {step:5d} loss={m['loss']:.4f} "
+                  f"gnorm={m['grad_norm']:.2f} tok/s={m['tok_per_s']:,.0f}"
+                  + (" SKIPPED" if m["skipped"] else ""))
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step, state)
+    if ckpt:
+        ckpt.wait()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=1)
+    return history
+
+
+if __name__ == "__main__":
+    main()

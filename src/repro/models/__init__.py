@@ -1,0 +1,11 @@
+from repro.models.model import (
+    batch_specs,
+    cache_specs,
+    count_params_analytic,
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)
+from repro.models.spec import model_param_specs

@@ -1,0 +1,266 @@
+"""Per-layer block application: mixer (attn/local/cross/mamba/mlstm/slstm)
++ optional FFN (dense or MoE), for both the parallel (train/prefill) and
+single-token (decode) paths.
+
+Every function is pure; caches are explicit pytrees.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, CROSS, MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.models import spec as S
+from repro.models.layers import (
+    apply_rope,
+    attention,
+    decode_attention,
+    mlp_apply,
+    rms_norm,
+    rope_cos_sin,
+)
+from repro.models.mamba import mamba_apply, mamba_decode
+from repro.models.moe import moe_apply
+from repro.models.xlstm import (
+    mlstm_apply,
+    mlstm_decode,
+    slstm_apply,
+    slstm_decode,
+)
+from repro.sharding.ctx import ShardCtx
+
+
+def _qkv(params, h, cfg: ModelConfig, prefix=""):
+    dt = h.dtype
+    B, Sq, _ = h.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (h @ params[prefix + "q"].astype(dt)).reshape(B, Sq, H, hd)
+    k = (h @ params[prefix + "k"].astype(dt)).reshape(B, Sq, Kv, hd)
+    v = (h @ params[prefix + "v"].astype(dt)).reshape(B, Sq, Kv, hd)
+    return q, k, v
+
+
+def _maybe_qk_norm(params, q, k, cfg: ModelConfig):
+    if cfg.qk_norm and "qn" in params:
+        q = rms_norm(q, params["qn"], cfg.norm_eps)
+        k = rms_norm(k, params["kn"], cfg.norm_eps)
+    return q, k
+
+
+def self_attention_parallel(
+    params, x, cfg: ModelConfig, ctx: ShardCtx, *, positions, window, causal=True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (attn output, kv dict for cache construction)."""
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(params, h, cfg, prefix="w")
+    q, k = _maybe_qk_norm(params, q, k, cfg)
+    cos, sin = rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if ctx.enabled:
+        from jax.sharding import PartitionSpec as P
+
+        dp = ctx.axis("dp")
+        q = ctx.constrain_raw(q, P(dp, None, ctx.heads_axis(cfg.n_heads), None))
+        kv_ax = ctx.heads_axis(cfg.n_kv_heads)
+        k = ctx.constrain_raw(k, P(dp, None, kv_ax, None))
+        v = ctx.constrain_raw(v, P(dp, None, kv_ax, None))
+    o = attention(
+        q, k, v, causal=causal, window=window,
+        impl=ctx.attention_impl, block_q=ctx.block_q, block_k=ctx.block_k,
+    )
+    o = o.reshape(*o.shape[:2], cfg.n_heads * cfg.hd)
+    out = o @ params["wo"].astype(x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def cross_attention_parallel(params, x, memory, cfg, ctx, *, prefix="x",
+                             gate: Optional[jax.Array] = None):
+    """memory: (B, M, D) encoder/vision states; returns (out, kv)."""
+    dt = x.dtype
+    B, M, _ = memory.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, params["lnx"], cfg.norm_eps)
+    q = (h @ params[prefix + "q"].astype(dt)).reshape(*h.shape[:2], H, hd)
+    k = (memory @ params[prefix + "k"].astype(dt)).reshape(B, M, Kv, hd)
+    v = (memory @ params[prefix + "v"].astype(dt)).reshape(B, M, Kv, hd)
+    o = attention(q, k, v, causal=False, window=0, impl=ctx.attention_impl,
+                  block_q=ctx.block_q, block_k=ctx.block_k)
+    o = o.reshape(*o.shape[:2], H * hd)
+    out = o @ params[prefix + "o"].astype(dt)
+    if gate is not None:
+        out = out * jnp.tanh(gate.astype(dt))
+    return out, {"k": k, "v": v}
+
+
+def ffn_parallel(params, x, cfg: ModelConfig, ctx: ShardCtx, is_moe: bool):
+    if "ln2" not in params:
+        return x, jnp.float32(0.0)
+    if is_moe:
+        y, aux = moe_apply(params, x, cfg, ctx)
+    else:
+        y = mlp_apply(params, x, gated=S.mlp_gated(cfg), eps=cfg.norm_eps)
+        aux = jnp.float32(0.0)
+    x = ctx.constrain(x + y, "dp", "sp", None)
+    return x, aux
+
+
+def block_parallel(
+    params: Dict[str, Any],
+    x: jax.Array,
+    kind: str,
+    is_moe: bool,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    positions: jax.Array,
+    memory: Optional[jax.Array] = None,     # vision / encoder states
+    xa_params: Optional[Dict[str, Any]] = None,  # enc-dec cross-attn params
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    """One transformer layer. Returns (x, aux, kv_or_None)."""
+    kv = None
+    if kind in (ATTN, ATTN_LOCAL):
+        window = cfg.swa_window if (kind == ATTN_LOCAL or
+                                    (cfg.block_pattern is None and cfg.swa_window)) else 0
+        o, kv = self_attention_parallel(
+            params, x, cfg, ctx, positions=positions, window=window, causal=causal
+        )
+        x = ctx.constrain(x + o, "dp", "sp", None)
+    elif kind == CROSS:
+        o, kv_self = self_attention_parallel(
+            params, x, cfg, ctx, positions=positions, window=0, causal=causal
+        )
+        x = ctx.constrain(x + o, "dp", "sp", None)
+        xo, kv_x = cross_attention_parallel(
+            params, x, memory, cfg, ctx, gate=params.get("xgate")
+        )
+        x = ctx.constrain(x + xo, "dp", "sp", None)
+        kv = {**kv_self, "xk": kv_x["k"], "xv": kv_x["v"]}
+    elif kind == MAMBA:
+        if return_kv:
+            o, kv = mamba_apply(params, x, cfg, ctx, impl="xla", return_state=True)
+        else:
+            o = mamba_apply(params, x, cfg, ctx, impl="xla")
+        x = ctx.constrain(x + o, "dp", "sp", None)
+    elif kind == MLSTM:
+        if return_kv:
+            o, kv = mlstm_apply(params, x, cfg, ctx, return_state=True)
+        else:
+            o = mlstm_apply(params, x, cfg, ctx)
+        x = ctx.constrain(x + o, "dp", "sp", None)
+    elif kind == SLSTM:
+        if return_kv:
+            o, kv = slstm_apply(params, x, cfg, ctx, return_state=True)
+        else:
+            o = slstm_apply(params, x, cfg, ctx)
+        x = ctx.constrain(x + o, "dp", "sp", None)
+    else:
+        raise ValueError(kind)
+
+    # encoder-decoder cross attention (whisper decoder): every layer
+    if xa_params is not None and memory is not None and kind != CROSS:
+        xo, kvx = cross_attention_parallel(xa_params, x, memory, cfg, ctx)
+        x = ctx.constrain(x + xo, "dp", "sp", None)
+        if kv is None:
+            kv = {}
+        kv = {**(kv or {}), "xk": kvx["k"], "xv": kvx["v"]}
+
+    x, aux = ffn_parallel(params, x, cfg, ctx, is_moe)
+    return x, aux, (kv if return_kv else None)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+def attn_decode(
+    params, x, cache, cache_len, cfg: ModelConfig, ctx: ShardCtx, *, window: int
+):
+    """x: (B,1,D). cache: {'k','v'} (B, S_c, Kv, hd) + implicit ring for SWA."""
+    B = x.shape[0]
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(params, h, cfg, prefix="w")
+    q, k = _maybe_qk_norm(params, q, k, cfg)
+    pos = jnp.atleast_1d(cache_len)                     # (1,)
+    cos, sin = rope_cos_sin(pos, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    s_cache = cache["k"].shape[1]
+    slot = cache_len % s_cache if window else jnp.minimum(cache_len, s_cache - 1)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                           (0, slot, 0, 0))
+    kv_spec = ctx.kv_cache_pspec()
+    k_cache = ctx.constrain_raw(k_cache, kv_spec)
+    v_cache = ctx.constrain_raw(v_cache, kv_spec)
+    valid = jnp.minimum(cache_len + 1, s_cache) * jnp.ones((B,), jnp.int32)
+    o = decode_attention(q, k_cache, v_cache, valid)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = o @ params["wo"].astype(x.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def cross_decode(params, x, cache, cfg, ctx, *, prefix="x", gate=None):
+    B = x.shape[0]
+    h = rms_norm(x, params["lnx"], cfg.norm_eps)
+    q = (h @ params[prefix + "q"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, cfg.hd)
+    m = cache[prefix + "k"].shape[1]
+    o = decode_attention(
+        q, cache[prefix + "k"], cache[prefix + "v"],
+        m * jnp.ones((B,), jnp.int32),
+    )
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = o @ params[prefix + "o"].astype(x.dtype)
+    if gate is not None:
+        out = out * jnp.tanh(gate.astype(x.dtype))
+    return out
+
+
+def block_decode(
+    params: Dict[str, Any],
+    x: jax.Array,                 # (B,1,D)
+    cache: Dict[str, Any],
+    cache_len: jax.Array,
+    kind: str,
+    is_moe: bool,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    xa_params: Optional[Dict[str, Any]] = None,
+):
+    new_cache = dict(cache)
+    if kind in (ATTN, ATTN_LOCAL):
+        window = cfg.swa_window if (kind == ATTN_LOCAL or
+                                    (cfg.block_pattern is None and cfg.swa_window)) else 0
+        o, kv = attn_decode(params, x, cache, cache_len, cfg, ctx, window=window)
+        new_cache.update(kv)
+        x = x + o
+    elif kind == CROSS:
+        o, kv = attn_decode(params, x, cache, cache_len, cfg, ctx, window=0)
+        new_cache.update(kv)
+        x = x + o
+        x = x + cross_decode(params, x, cache, cfg, ctx, gate=params.get("xgate"))
+    elif kind == MAMBA:
+        o, mc = mamba_decode(params, x, cache, cfg, ctx)
+        new_cache.update(mc)
+        x = x + o
+    elif kind == MLSTM:
+        o, mc = mlstm_decode(params, x, cache, cfg, ctx)
+        new_cache.update(mc)
+        x = x + o
+    elif kind == SLSTM:
+        o, mc = slstm_decode(params, x, cache, cfg, ctx)
+        new_cache.update(mc)
+        x = x + o
+    else:
+        raise ValueError(kind)
+
+    if xa_params is not None and kind != CROSS:
+        x = x + cross_decode(xa_params, x, cache, cfg, ctx)
+
+    x, _ = ffn_parallel(params, x, cfg, ctx, is_moe)
+    return x, new_cache

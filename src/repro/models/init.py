@@ -1,0 +1,54 @@
+"""Random parameter initialization, materializing ``spec.model_param_specs``.
+
+Init rules (name-pattern driven, fan-in scaled normal unless noted):
+- norms (ln*, *_norm, qn, kn, ln_inner, final_ln): ones
+- biases (*_b, b): zeros; dt_b: mamba softplus-inverse-uniform
+- A_log: log of 1..d_state broadcast (S4D-real init); D_skip: ones
+- xgate: zeros (cross-attn starts disabled, llama-vision style)
+- everything else: truncated-normal(std = 1/sqrt(fan_in))
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import spec as S
+from repro.utils.tree import tree_map_with_path_names
+
+
+def _init_leaf(key, name: str, sds: jax.ShapeDtypeStruct):
+    base = name.rsplit("/", 1)[-1]
+    shape, dtype = sds.shape, sds.dtype
+    if base in ("ln1", "ln2", "lnx", "ln_inner", "final_ln", "qn", "kn", "D_skip"):
+        return jnp.ones(shape, dtype)
+    if base in ("conv_b", "b", "xgate"):
+        return jnp.zeros(shape, dtype)
+    if base == "dt_b":
+        # inverse-softplus of dt in [1e-3, 1e-1] (mamba reference init)
+        u = jax.random.uniform(key, shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dtype)
+    if base == "A_log":
+        ds = shape[-1]
+        a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), shape)
+        return jnp.log(a).astype(dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Dict[str, Any]:
+    specs = S.model_param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs)
+    keys = jax.random.split(rng, len(leaves))
+    # walk with names; pair spec leaf with its key by flatten order
+    names = []
+    tree_map_with_path_names(lambda n, l: names.append(n) or l, specs)
+    out_leaves = [
+        _init_leaf(k, n, s) for k, n, s in zip(keys, names, leaves)
+    ]
+    return jax.tree.unflatten(treedef, out_leaves)

@@ -1,0 +1,297 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention (full / sliding-window /
+chunked-online-softmax / decode-with-cache), and gated MLPs.
+
+Attention memory policy
+-----------------------
+Full S x S score materialization is only allowed for short sequences
+(<= ``FULL_ATTN_MAX_SEQ``). Longer sequences use a flash-style chunked
+online-softmax written in pure JAX (lax.scan over KV chunks with a
+``jax.checkpoint``-wrapped body so the backward pass recomputes scores
+instead of storing them). The Pallas kernel in ``repro.kernels.flash_attn``
+implements the same contraction for TPU; ``impl='pallas'`` routes to it.
+
+Decode attention reads the whole KV cache with the *sequence axis sharded
+over the model mesh axis*; softmax over the sharded axis makes the SPMD
+partitioner emit the distributed flash-decode (partial max/sum all-reduce)
+pattern automatically.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FULL_ATTN_MAX_SEQ = 8192
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 1024
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim//2) fp32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, half) or (S, half)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        cos_, sin_ = cos[None, :, None, :], sin[None, :, None, :]
+    else:              # (B, S, half)
+        cos_, sin_ = cos[:, :, None, :], sin[:, :, None, :]
+    out1 = x1 * cos_ - x2 * sin_
+    out2 = x2 * cos_ + x1 * sin_
+    return jnp.concatenate([out1, out2], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# GQA helpers
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Kv, hd) -> (B, S, Kv*n_rep, hd)."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(
+        b, s, kv * n_rep, hd
+    )
+
+
+def _band_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int):
+    """(Sq, Sk) boolean mask. window > 0 limits lookback (SWA)."""
+    d = q_pos[:, None] - k_pos[None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    if window > 0:
+        m &= d < window
+    return m
+
+
+def attention_full(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: Optional[int] = None,
+) -> jax.Array:
+    """Materialized-scores attention. q: (B,Sq,H,hd), k/v: (B,Sk,Kv,hd).
+    Causal convention: queries align with the END of the key sequence."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    if q_offset is None:
+        q_offset = k.shape[1] - sq
+    k = repeat_kv(k, h // kv)
+    v = repeat_kv(v, h // kv)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    if causal or window:
+        q_pos = jnp.arange(sq) + q_offset
+        k_pos = jnp.arange(k.shape[1])
+        mask = _band_mask(q_pos, k_pos, causal, window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure JAX (O(S*block) memory).
+
+    Backward recomputes per-chunk scores (jax.checkpoint on the inner body).
+    Sliding windows skip KV chunks entirely outside the band.
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    n_rep = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    q_off = sk - sq  # causal: queries align with the end of the keys
+    kv_len = sk
+    # pad to block multiples; padded KV is masked out, padded Q sliced away
+    sq_orig = sq
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        sk += pad_k
+    nq, nk = sq // block_q, sk // block_k
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    k = k.reshape(b, nk, block_k, kvh, hd)
+    v = v.reshape(b, nk, block_k, kvh, hd)
+    qb = q.reshape(b, nq, block_q, h, hd)
+
+    # Sliding window: each q block only ever touches a *static-width* band of
+    # KV blocks; slice it out with a traced start (exact FLOP savings — the
+    # XLA analogue of the Pallas kernel's block skipping). Causal-only runs
+    # over all KV blocks with masking (2x FLOP overhead on the XLA path; the
+    # TPU kernel skips above-diagonal blocks).
+    if window > 0:
+        nbk = min(nk, (window + block_q + block_k - 1) // block_k + 1)
+    else:
+        nbk = nk
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def kv_step(carry, kj, vj, k_pos, qi_blk, q_posb):
+        (m, l, o) = carry
+        kj = repeat_kv(kj, n_rep)
+        vj = repeat_kv(vj, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi_blk.astype(jnp.float32), kj.astype(jnp.float32))
+        s = s * scale
+        d = q_posb[:, None] - k_pos[None, :]
+        mask = k_pos[None, :] < kv_len          # padded keys masked
+        if causal:
+            mask &= d >= 0
+        if window > 0:
+            mask &= d < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, o_new)
+
+    def q_block(qi, qi_idx):
+        q_posb = qi_idx * block_q + jnp.arange(block_q) + q_off
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        o0 = jnp.zeros((b, h, block_q, hd), jnp.float32)
+        if window > 0:
+            # first KV block of the band (block units), clamped to fit
+            lo_b = jnp.clip(
+                (qi_idx * block_q + q_off - window) // block_k, 0, nk - nbk
+            )
+            kb = jax.lax.dynamic_slice_in_dim(k, lo_b, nbk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, lo_b, nbk, axis=1)
+        else:
+            lo_b = jnp.int32(0)
+            kb, vb = k, v
+
+        def body(carry, j):
+            kj = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+            k_pos = (lo_b + j) * block_k + jnp.arange(block_k)
+            new_carry = kv_step(carry, kj, vj, k_pos, qi, q_posb)
+            if causal:
+                # skip blocks entirely above the diagonal (mask-only; the
+                # einsum still runs — see note above)
+                take = (lo_b + j) * block_k <= qi_idx * block_q + q_off + block_q - 1
+                new_carry = jax.tree.map(
+                    lambda n, c: jnp.where(take, n, c), new_carry, carry
+                )
+            return new_carry, None
+
+        (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nbk))
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3)  # (b, block_q, h, hd)
+
+    outs = jax.lax.map(
+        lambda args: q_block(*args),
+        (qb.transpose(1, 0, 2, 3, 4), jnp.arange(nq)),
+    )  # (nq, b, block_q, h, hd)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+    return out[:, :sq_orig].astype(q.dtype)
+
+
+def attention(
+    q, k, v, *, causal=True, window=0, impl="auto",
+    block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Dispatching attention entry point (training / prefill)."""
+    sq, sk = q.shape[1], k.shape[1]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k,
+        )
+    if impl == "full" or (impl == "auto" and max(sq, sk) <= FULL_ATTN_MAX_SEQ):
+        return attention_full(q, k, v, causal=causal, window=window)
+    return attention_chunked(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k
+    )
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, hd)
+    k_cache: jax.Array,    # (B, S, Kv, hd)  (seq axis may be mesh-sharded)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # scalar or (B,) number of valid cache positions
+) -> jax.Array:
+    """Single-token attention over a (possibly sharded) KV cache.
+
+    Written so the softmax reductions run over the cache sequence axis:
+    when that axis is sharded over the 'model' mesh axis, XLA's SPMD
+    partitioner turns max/sum into cross-shard all-reduces = distributed
+    flash-decode.
+    """
+    b, _, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = q[:, 0].astype(jnp.float32)                       # (B, H, hd)
+    kf = k_cache.astype(jnp.float32)                       # (B, S, Kv, hd)
+    # GQA without materializing repeated KV: fold rep into head grouping.
+    qg = qf.reshape(b, kv, n_rep, hd)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", qg, kf) * scale  # (B, Kv, rep, S)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.atleast_1d(cache_len)[:, None], (b, s))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.maximum(l, 1e-30)
+    out = jnp.einsum("bgrs,bsgd->bgrd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+def mlp_apply(params, x: jax.Array, *, gated: bool, eps: float) -> jax.Array:
+    h = rms_norm(x, params["ln2"], eps)
+    dt = x.dtype
+    wi = params["wi"].astype(dt)
+    wo = params["wo2"].astype(dt)
+    if gated:
+        wg = params["wg"].astype(dt)
+        a = jax.nn.silu(h @ wg) * (h @ wi)
+    else:
+        a = jax.nn.gelu(h @ wi)
+    return a @ wo

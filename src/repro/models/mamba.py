@@ -1,0 +1,136 @@
+"""Mamba (selective SSM) mixer block.
+
+Parallel (train/prefill) path: chunked associative selective scan — either
+the pure-jnp oracle (`kernels.ref.selective_scan_ref`) or the Pallas TPU
+kernel (`kernels.ops.selective_scan`). Decode path: O(1) recurrent update
+carrying (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import spec as S
+from repro.models.layers import rms_norm
+from repro.sharding.ctx import ShardCtx
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B,S,di); w: (dc,di); b: (di,)."""
+    dc = w.shape[0]
+    if init is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(dc):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def mamba_apply(
+    params: Dict[str, Any],
+    x: jax.Array,                    # (B, S, D)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    impl: str = "xla",
+    return_state: bool = False,
+):
+    B, Sq, D = x.shape
+    di = S.d_inner(cfg)
+    ds = cfg.ssm.d_state
+    dr = S.dt_rank(cfg)
+    dt_ = x.dtype
+
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    xz = h @ params["in_proj"].astype(dt_)                  # (B,S,2di)
+    xb_raw, z = jnp.split(xz, 2, axis=-1)
+    xb_raw = ctx.constrain(xb_raw, "dp", None, "tp")
+    xb = jax.nn.silu(_causal_conv(xb_raw, params["conv_w"], params["conv_b"]))
+
+    proj = xb @ params["x_proj"].astype(dt_)                # (B,S,dr+2ds)
+    dt_low, Bc, Cc = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dtv = jax.nn.softplus(
+        dt_low @ params["dt_w"].astype(dt_) + params["dt_b"].astype(dt_)
+    )                                                       # (B,S,di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (di,ds)
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        y, final = kops.selective_scan(
+            xb.astype(jnp.float32), dtv.astype(jnp.float32), A,
+            Bc.astype(jnp.float32), Cc.astype(jnp.float32), chunk=cfg.ssm.chunk,
+        )
+    else:
+        from repro.kernels.ref import selective_scan_ref
+
+        y, final = selective_scan_ref(
+            xb.astype(jnp.float32), dtv.astype(jnp.float32), A,
+            Bc.astype(jnp.float32), Cc.astype(jnp.float32), chunk=cfg.ssm.chunk,
+        )
+    y = y.astype(dt_) + xb * params["D_skip"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = ctx.constrain(y, "dp", None, "tp")
+    out = y @ params["out_proj"].astype(dt_)
+    if return_state:
+        dc = cfg.ssm.d_conv
+        state = {
+            "conv": xb_raw[:, -(dc - 1):].astype(jnp.float32),
+            "ssm": final.astype(jnp.float32),
+        }
+        return out, state
+    return out
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype=None) -> Dict[str, Any]:
+    di = S.d_inner(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm.d_conv - 1, di), jnp.float32),
+        "ssm": jax.ShapeDtypeStruct((batch, di, cfg.ssm.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(
+    params: Dict[str, Any],
+    x: jax.Array,                    # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    from repro.kernels.ref import selective_scan_step_ref
+
+    B, _, D = x.shape
+    dr = S.dt_rank(cfg)
+    ds = cfg.ssm.d_state
+    dt_ = x.dtype
+
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    xz = h @ params["in_proj"].astype(dt_)
+    xb, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
+    conv_in = jnp.concatenate([cache["conv"].astype(dt_), xb], axis=1)
+    w = params["conv_w"].astype(dt_)                         # (dc, di)
+    xc = jnp.einsum("bcd,cd->bd", conv_in, w) + params["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)                                     # (B, di)
+
+    proj = xc @ params["x_proj"].astype(dt_)
+    dt_low, Bc, Cc = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dtv = jax.nn.softplus(
+        dt_low @ params["dt_w"].astype(dt_) + params["dt_b"].astype(dt_)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_ssm = selective_scan_step_ref(
+        cache["ssm"], xc.astype(jnp.float32), dtv.astype(jnp.float32), A,
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+    )
+    y = y.astype(dt_) + xc * params["D_skip"].astype(dt_)
+    y = (y[:, None, :] * jax.nn.silu(z)) @ params["out_proj"].astype(dt_)
+    new_cache = {"conv": conv_in[:, 1:].astype(jnp.float32), "ssm": new_ssm}
+    return y, new_cache

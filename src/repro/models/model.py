@@ -1,0 +1,451 @@
+"""Model assembly: embedding -> superblock-scanned decoder stack -> chunked
+LM loss; plus prefill and single-token decode with explicit caches.
+
+All entry points are pure functions of (params, batch/cache, cfg, ctx) so
+they jit/pjit cleanly; ``cache_specs``/``batch_specs`` mirror the runtime
+pytrees with ShapeDtypeStructs for the allocation-free dry-run.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_LOCAL,
+    CROSS,
+    MAMBA,
+    MLSTM,
+    SLSTM,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.models import spec as S
+from repro.models.blocks import block_decode, block_parallel
+from repro.models.layers import rms_norm
+from repro.models.mamba import mamba_cache_spec
+from repro.models.xlstm import mlstm_cache_spec, slstm_cache_spec
+from repro.sharding.ctx import ShardCtx, UNSHARDED
+
+from repro.models.init import init_params  # re-export  # noqa: F401
+from repro.models.spec import count_params_analytic  # re-export  # noqa: F401
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def embed(params, tokens: jax.Array, cfg: ModelConfig, ctx: ShardCtx) -> jax.Array:
+    x = jnp.take(params["emb"], tokens, axis=0).astype(compute_dtype(cfg))
+    return ctx.constrain(x, "dp", "sp", None)
+
+
+def head_weights(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["emb"].T
+    return params["head"]
+
+
+def scan_layers(body, carry, xs, ctx: ShardCtx, length: int):
+    """lax.scan over stacked layers — or a fully-unrolled python loop when
+    ctx.force_unroll (used by the dry-run cost probes: XLA's cost analysis
+    does not multiply while-body FLOPs by the trip count)."""
+    if not ctx.force_unroll:
+        return jax.lax.scan(body, carry, xs, unroll=ctx.scan_unroll)
+    ys = []
+    for r in range(length):
+        x_r = jax.tree.map(lambda a: a[r], xs)
+        carry, y = body(carry, x_r)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# stack runners
+def _period_meta(cfg: ModelConfig):
+    period, R, n_tail = S.layout(cfg)
+    kinds = [S.layer_kind_at(cfg, p) for p in range(period)]
+    moes = [cfg.is_moe_layer(p) for p in range(period)]
+    return period, R, n_tail, kinds, moes
+
+
+def encoder_forward(params, frames: jax.Array, cfg: ModelConfig, ctx: ShardCtx):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(compute_dtype(cfg))
+    x = ctx.constrain(x, "dp", "sp", None)
+    positions = jnp.arange(frames.shape[1])
+
+    def layer(x, p):
+        x, _, _ = block_parallel(
+            p, x, ATTN, False, cfg, ctx, positions=positions, causal=False
+        )
+        return x, None
+
+    body = layer
+    if ctx.remat == "block":
+        body = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    n_enc = params["layers"]["ln1"].shape[0]
+    x, _ = scan_layers(body, x, params["layers"], ctx, n_enc)
+    return rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def run_stack(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    positions: jax.Array,
+    memory: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    period, R, n_tail, kinds, moes = _period_meta(cfg)
+    aux = jnp.float32(0.0)
+    has_xa = cfg.enc_dec
+
+    if R > 0:
+        xs = (params["body"], params.get("xattn_body")) if has_xa else (params["body"],)
+
+        def one_layer(p):
+            def f(layer_params, xa_p, x):
+                return block_parallel(
+                    layer_params, x, kinds[p], moes[p], cfg, ctx,
+                    positions=positions, memory=memory, xa_params=xa_p,
+                    causal=causal,
+                )[:2]
+
+            if ctx.remat == "layer":
+                # per-layer checkpoint: backward re-gathers one layer's
+                # FSDP shards at a time instead of a whole superblock's
+                f = jax.checkpoint(
+                    f, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            return f
+
+        layer_fns = [one_layer(p) for p in range(period)]
+
+        def superblock(carry, inp):
+            x, aux = carry
+            if has_xa:
+                p_list, xa_list = inp
+            else:
+                (p_list,) = inp
+                xa_list = None
+            for p in range(period):
+                x, a = layer_fns[p](
+                    p_list[p], xa_list[p] if xa_list is not None else None, x
+                )
+                aux = aux + a
+            return (x, aux), None
+
+        body = superblock
+        if ctx.remat == "block":
+            body = jax.checkpoint(
+                superblock, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, aux), _ = scan_layers(body, (x, aux), xs, ctx, R)
+
+    for j in range(n_tail):
+        li = R * period + j
+        x, a, _ = block_parallel(
+            params["tail"][j], x, S.layer_kind_at(cfg, li), cfg.is_moe_layer(li),
+            cfg, ctx, positions=positions, memory=memory,
+            xa_params=(params["xattn_tail"][j] if has_xa else None),
+            causal=causal,
+        )
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# training forward / loss
+def lm_loss_chunked(
+    xf: jax.Array,        # (B,S,D) final hidden states
+    w: jax.Array,         # (D,V)
+    labels: jax.Array,    # (B,S) int; -1 = ignore
+    ctx: ShardCtx,
+) -> Tuple[jax.Array, jax.Array]:
+    B, Sq, D = xf.shape
+    cs = min(ctx.logit_chunk, Sq)
+    assert Sq % cs == 0
+    n = Sq // cs
+    xr = xf.reshape(B, n, cs, D).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, n, cs).transpose(1, 0, 2)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def one(args):
+        xc, lc = args
+        logits = (xc @ w.astype(xc.dtype)).astype(jnp.float32)   # (B,cs,V)
+        logits = ctx.constrain(logits, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lc, 0)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * valid), jnp.sum(valid)
+
+    losses, counts = jax.lax.map(one, (xr, lr))
+    return jnp.sum(losses), jnp.sum(counts)
+
+
+def forward_train(
+    params, batch: Dict[str, jax.Array], cfg: ModelConfig, ctx: ShardCtx = UNSHARDED,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed(params, tokens, cfg, ctx)
+    positions = jnp.arange(tokens.shape[1])
+
+    memory = None
+    if cfg.enc_dec:
+        memory = encoder_forward(params["encoder"], batch["audio"], cfg, ctx)
+    elif cfg.n_vision_tokens:
+        memory = ctx.constrain(
+            batch["vision"].astype(compute_dtype(cfg)), "dp", None, None
+        )
+
+    x, aux = run_stack(params, x, cfg, ctx, positions, memory=memory)
+    xf = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    total, count = lm_loss_chunked(xf, head_weights(params, cfg), labels, ctx)
+    loss = total / jnp.maximum(count, 1.0)
+    full = loss + cfg.moe.load_balance_coef * aux / max(cfg.n_layers, 1)
+    return full, {"loss": loss, "moe_aux": aux, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# caches
+def _attn_cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    window = cfg.swa_window if (
+        kind == ATTN_LOCAL or (cfg.block_pattern is None and cfg.swa_window)
+    ) else 0
+    return min(seq_len, window) if window else seq_len
+
+
+def layer_cache_spec(
+    cfg: ModelConfig, layer_idx: int, batch: int, seq_len: int, dtype
+) -> Dict[str, Any]:
+    kind = S.layer_kind_at(cfg, layer_idx)
+    Kv, hd = cfg.n_kv_heads, cfg.hd
+    spec: Dict[str, Any] = {}
+    if kind in (ATTN, ATTN_LOCAL, CROSS):
+        sc = _attn_cache_len(cfg, kind, seq_len)
+        spec["k"] = jax.ShapeDtypeStruct((batch, sc, Kv, hd), dtype)
+        spec["v"] = jax.ShapeDtypeStruct((batch, sc, Kv, hd), dtype)
+    if kind == CROSS:
+        spec["xk"] = jax.ShapeDtypeStruct((batch, cfg.n_vision_tokens, Kv, hd), dtype)
+        spec["xv"] = jax.ShapeDtypeStruct((batch, cfg.n_vision_tokens, Kv, hd), dtype)
+    if kind == MAMBA:
+        spec.update(mamba_cache_spec(cfg, batch, dtype))
+    if kind == MLSTM:
+        spec.update(mlstm_cache_spec(cfg, batch))
+    if kind == SLSTM:
+        spec.update(slstm_cache_spec(cfg, batch))
+    if cfg.enc_dec:
+        spec["xk"] = jax.ShapeDtypeStruct((batch, cfg.n_audio_frames, Kv, hd), dtype)
+        spec["xv"] = jax.ShapeDtypeStruct((batch, cfg.n_audio_frames, Kv, hd), dtype)
+    return spec
+
+
+def _stack_specs(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), tree
+    )
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    dtype = compute_dtype(cfg)
+    period, R, n_tail = S.layout(cfg)
+    out: Dict[str, Any] = {"body": [], "tail": []}
+    if R > 0:
+        out["body"] = [
+            _stack_specs(layer_cache_spec(cfg, p, batch, seq_len, dtype), R)
+            for p in range(period)
+        ]
+    out["tail"] = [
+        layer_cache_spec(cfg, R * period + j, batch, seq_len, dtype)
+        for j in range(n_tail)
+    ]
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, seq_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill: run the parallel stack, return (last-token logits, populated cache)
+def prefill(
+    params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+    ctx: ShardCtx = UNSHARDED, *, cache_seq_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    cache_seq_len = cache_seq_len or Sq
+    dtype = compute_dtype(cfg)
+    period, R, n_tail, kinds, moes = _period_meta(cfg)
+
+    x = embed(params, tokens, cfg, ctx)
+    positions = jnp.arange(Sq)
+    memory = None
+    if cfg.enc_dec:
+        memory = encoder_forward(params["encoder"], batch["audio"], cfg, ctx)
+    elif cfg.n_vision_tokens:
+        memory = batch["vision"].astype(dtype)
+
+    has_xa = cfg.enc_dec
+    aux = jnp.float32(0.0)
+    new_body = []
+    if R > 0:
+        xs = (params["body"], params.get("xattn_body")) if has_xa else (params["body"],)
+
+        def superblock(carry, inp):
+            x = carry
+            if has_xa:
+                p_list, xa_list = inp
+            else:
+                (p_list,) = inp
+                xa_list = None
+            caches = []
+            for p in range(period):
+                x, _, kv = block_parallel(
+                    p_list[p], x, kinds[p], moes[p], cfg, ctx,
+                    positions=positions, memory=memory,
+                    xa_params=(xa_list[p] if xa_list is not None else None),
+                    return_kv=True,
+                )
+                caches.append(_kv_cache_entry(dict(kv or {}), p, kinds[p], cfg,
+                                              B, cache_seq_len, dtype))
+            return x, caches
+
+        x, body_caches = scan_layers(superblock, x, xs, ctx, R)
+        new_body = body_caches
+    new_tail = []
+    for j in range(n_tail):
+        li = R * period + j
+        x, _, kv = block_parallel(
+            params["tail"][j], x, S.layer_kind_at(cfg, li), cfg.is_moe_layer(li),
+            cfg, ctx, positions=positions, memory=memory,
+            xa_params=(params["xattn_tail"][j] if has_xa else None),
+            return_kv=True,
+        )
+        new_tail.append(_kv_cache_entry(dict(kv or {}), li,
+                                        S.layer_kind_at(cfg, li), cfg, B,
+                                        cache_seq_len, dtype))
+
+    xf = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (xf[:, -1] @ head_weights(params, cfg).astype(dtype)).astype(jnp.float32)
+    logits = ctx.constrain(logits, "dp", "tp")
+    return logits, {"body": new_body, "tail": new_tail}
+
+
+def _kv_cache_entry(kv, layer_idx, kind, cfg, B, cache_seq_len, dtype):
+    """Build a layer's decode-cache entry from its parallel-pass outputs
+    (attention KV, cross KV, and recurrent final states)."""
+    spec = layer_cache_spec(cfg, layer_idx, B, cache_seq_len, dtype)
+    out = {}
+    for name, sds in spec.items():
+        if name in kv:
+            src = kv[name].astype(sds.dtype)
+            if name in ("k", "v"):
+                sc = sds.shape[1]
+                full = src.shape[1]
+                if full >= sc:
+                    # ring-buffer layout: abs position P lives in slot P % sc
+                    src = jnp.roll(src[:, -sc:], full % sc, axis=1)
+                else:
+                    src = jax.lax.dynamic_update_slice(
+                        jnp.zeros(sds.shape, sds.dtype), src, (0, 0, 0, 0)
+                    )
+            out[name] = src
+        else:
+            out[name] = jnp.zeros(sds.shape, sds.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+def decode_step(
+    params,
+    cache: Dict[str, Any],
+    tokens: jax.Array,        # (B, 1)
+    cache_len: jax.Array,     # scalar int32: #tokens already in cache
+    cfg: ModelConfig,
+    ctx: ShardCtx = UNSHARDED,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    period, R, n_tail, kinds, moes = _period_meta(cfg)
+    x = embed(params, tokens, cfg, ctx)
+    x = ctx.constrain(x, "dp", None, None)
+    has_xa = cfg.enc_dec
+
+    new_cache: Dict[str, Any] = {"body": [], "tail": []}
+    if R > 0:
+        xs = (
+            (params["body"], cache["body"], params.get("xattn_body"))
+            if has_xa
+            else (params["body"], cache["body"])
+        )
+
+        def superblock(x, inp):
+            if has_xa:
+                p_list, c_list, xa_list = inp
+            else:
+                p_list, c_list = inp
+                xa_list = None
+            new_cs = []
+            for p in range(period):
+                x, nc = block_decode(
+                    p_list[p], x, c_list[p], cache_len, kinds[p], moes[p], cfg, ctx,
+                    xa_params=(xa_list[p] if xa_list is not None else None),
+                )
+                new_cs.append(nc)
+            return x, new_cs
+
+        x, new_body = scan_layers(superblock, x, xs, ctx, R)
+        new_cache["body"] = new_body
+
+    for j in range(n_tail):
+        li = R * period + j
+        x, nc = block_decode(
+            params["tail"][j], x, cache["tail"][j], cache_len,
+            S.layer_kind_at(cfg, li), cfg.is_moe_layer(li), cfg, ctx,
+            xa_params=(params["xattn_tail"][j] if has_xa else None),
+        )
+        new_cache["tail"].append(nc)
+
+    xf = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    w = head_weights(params, cfg)
+    logits = (xf[:, 0] @ w.astype(xf.dtype)).astype(jnp.float32)
+    logits = ctx.constrain(logits, "dp", "tp")
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# batch specs (dry-run inputs)
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, Sq = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dtype = compute_dtype(cfg)
+    if shape.mode == "train" or shape.mode == "prefill":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, Sq), i32),
+        }
+        if shape.mode == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, Sq), i32)
+        if cfg.n_vision_tokens:
+            out["vision"] = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), dtype)
+        if cfg.enc_dec:
+            out["audio"] = jax.ShapeDtypeStruct((B, cfg.n_audio_frames, cfg.d_model), dtype)
+        return out
+    # decode: one token + cache of seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": cache_specs(cfg, B, Sq),
+        "cache_len": jax.ShapeDtypeStruct((), i32),
+    }

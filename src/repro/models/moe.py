@@ -1,0 +1,132 @@
+"""Top-k Mixture-of-Experts FFN with *grouped* scatter dispatch.
+
+The GSPMD-canonical design (Mesh-TF Switch / flaxformer / MaxText): tokens
+are reshaped into G groups (G = the data-parallel degree), routing ranks
+and capacity are computed *within* each group, so every dispatch step is
+local to its shard — no global cumsum, no replicated (E, C, D) buffers
+(the naive global-capacity layout makes XLA replicate the whole expert
+batch on every device: ~dp-times the FLOPs and tens of GiB of temps).
+
+Expert compute sharding:
+- E % |tp| == 0 (jamba 16e): experts sharded over 'model' (EP) — GSPMD
+  inserts the canonical all-to-all on the grouped buffer;
+- otherwise (mixtral/grok 8e): d_ff sharded over 'model' (TP-in-expert),
+  groups stay on 'data' — no cross-shard token movement at all.
+
+Tokens beyond an expert's per-group capacity are dropped (standard
+capacity-factor semantics; cf is a config knob).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.sharding.ctx import ShardCtx
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _n_groups(ctx: ShardCtx, n_tokens_rows: int) -> int:
+    g = max(ctx.dp_size, 1)
+    while g > 1 and n_tokens_rows % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_apply(
+    params,
+    x: jax.Array,             # (B, S, D)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    capacity_factor: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balancing loss scalar)."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe.capacity_factor
+    B, Sq, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    dt = x.dtype
+    ep = ctx.enabled and ctx.expert_parallel and E % max(ctx.tp_size, 1) == 0
+
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    T = B * Sq
+    G = _n_groups(ctx, B) if Sq > 1 else _n_groups(ctx, B)
+    # group along the batch axis so groups align with the dp sharding
+    Tg = T // G
+    hf = h.reshape(G, Tg, D)
+    hf = ctx.constrain(hf, "dp", None, None)
+
+    logits = (hf.astype(jnp.float32)) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G, Tg, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)         # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # load-balance aux loss (Switch): E * mean_e(f_e * p_e)
+    pe = jnp.mean(probs, axis=(0, 1))
+    fe = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )
+    aux = E * jnp.sum(pe * fe)
+
+    # rank of each (token, k) slot within its expert, LOCAL to the group
+    flat_e = expert_idx.reshape(G, Tg * K)                  # (G, TgK)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (G, TgK, E)
+    ranks_all = jnp.cumsum(onehot, axis=1) - onehot
+    rank = jnp.take_along_axis(
+        ranks_all, flat_e[..., None], axis=2
+    )[..., 0]                                               # (G, TgK)
+
+    C = round_up(int(capacity_factor * Tg * K / E) or 1, 8)
+    keep = rank < C
+    safe_rank = jnp.where(keep, rank, 0)
+
+    # batched scatter into the grouped (G, E, C, D) buffer. The buffer is
+    # kept E-REPLICATED across 'model' (sharded only on G->dp): the scatter
+    # is then entirely local. Sharding E (or C) here makes GSPMD realize
+    # dispatch/combine as fp32 all-reduces of the full (G, TgK, D) token
+    # tensor over 'model' — measured 1.7e12 B/dev/step on jamba (see
+    # EXPERIMENTS.md §Perf iteration 2).
+    hk = jnp.repeat(hf, K, axis=1)                          # (G, TgK, D)
+    contrib = jnp.where(keep[..., None], hk, 0).astype(dt)
+    gidx = jnp.arange(G)[:, None]
+    buf = jnp.zeros((G, E, C, D), dt).at[gidx, flat_e, safe_rank].add(
+        contrib, mode="drop"
+    )
+    local_spec = P(ctx.axis("dp") if ctx.enabled else None, None, None, None)
+    buf = ctx.constrain_raw(buf, local_spec)
+
+    # expert FFN (SwiGLU). EP: each tp-rank slices its experts (free — buf
+    # is E-replicated) and computes them; the combine all-gathers the
+    # (G_loc, E, C, D) buffer over 'model' once. Non-EP: d_ff is tp-sharded
+    # and the contraction psums the same-sized buffer instead.
+    if ctx.enabled and ep:
+        buf = ctx.constrain_raw(buf, P(ctx.axis("dp"), ctx.tp, None, None))
+    e_wg = params["e_wg"].astype(dt)
+    e_wi = params["e_wi"].astype(dt)
+    e_wo = params["e_wo"].astype(dt)
+    act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, e_wg)) * jnp.einsum(
+        "gecd,edf->gecf", buf, e_wi
+    )
+    out_buf = jnp.einsum("gecf,efd->gecd", act, e_wo)
+    out_buf = ctx.constrain_raw(out_buf, local_spec)
+
+    # gather back + weight by gates (local: out_buf is E-replicated again)
+    y = out_buf[gidx, flat_e, safe_rank]                    # (G, TgK, D)
+    gates = (gate_vals.reshape(G, Tg * K) * keep).astype(dt)
+    y = y * gates[..., None]
+    y = jnp.sum(y.reshape(G, Tg, K, D), axis=2)
+    y = ctx.constrain(y, "dp", None, None)
+    return y.reshape(B, Sq, D), aux.astype(jnp.float32)

@@ -1,0 +1,248 @@
+"""Single source of truth for parameter shapes.
+
+``model_param_specs(cfg)`` returns a pytree of ``jax.ShapeDtypeStruct`` that
+is consumed by (a) random init (``repro.models.init``), (b) the analytic
+parameter counter (MODEL_FLOPS for the roofline), and (c) the multi-pod
+dry-run, which lowers against specs without allocating anything.
+
+Layer layout
+------------
+Layers are grouped into *superblocks* of ``period`` layers (the LCM of the
+block pattern length and the MoE period), so heterogeneous stacks (jamba,
+gemma, xlstm, VLM) scan over identical superblocks. Params of position ``p``
+inside the superblock are stacked over the ``n_repeats`` superblocks
+(leading axis R); any remainder layers live unstacked under ``tail``.
+
+Every layer = mixer (attn / attn_local / cross / mamba / mlstm / slstm)
++ optional FFN (dense or MoE). ``d_ff == 0`` (xlstm) means no FFN — the
+cells carry their own up/down projections.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_LOCAL,
+    CROSS,
+    MAMBA,
+    MLSTM,
+    SLSTM,
+    ModelConfig,
+)
+
+PARAM_DTYPE = jnp.float32     # master dtype; compute casts to cfg.dtype
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def superblock_period(cfg: ModelConfig) -> int:
+    p = len(cfg.block_pattern) if cfg.block_pattern else 1
+    if cfg.moe.n_experts > 0:
+        p = _lcm(p, cfg.moe.period)
+    if cfg.cross_attn_period:
+        p = _lcm(p, cfg.cross_attn_period)
+    return p
+
+
+def layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(period, n_repeats, n_tail) of the decoder stack."""
+    period = superblock_period(cfg)
+    n_repeats = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_repeats * period
+    return period, n_repeats, n_tail
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def slstm_ff(cfg: ModelConfig) -> int:
+    return int(round(cfg.d_model * 4 / 3 / 64)) * 64 or 64
+
+
+def layer_kind_at(cfg: ModelConfig, layer_idx: int) -> str:
+    kind = cfg.layer_kind(layer_idx)
+    if cfg.cross_attn_period and (layer_idx % cfg.cross_attn_period) == (
+        cfg.cross_attn_period - 1
+    ):
+        kind = CROSS
+    return kind
+
+
+def _sds(*shape, dtype=PARAM_DTYPE):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def mixer_specs(cfg: ModelConfig, kind: str, *, causal: bool = True) -> Dict[str, Any]:
+    D, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s: Dict[str, Any] = {"ln1": _sds(D)}
+    if kind in (ATTN, ATTN_LOCAL, CROSS):
+        s.update(
+            wq=_sds(D, H * hd),
+            wk=_sds(D, Kv * hd),
+            wv=_sds(D, Kv * hd),
+            wo=_sds(H * hd, D),
+        )
+        if cfg.qk_norm:
+            s.update(qn=_sds(hd), kn=_sds(hd))
+        if kind == CROSS:
+            s.update(
+                lnx=_sds(D),
+                xq=_sds(D, H * hd),
+                xk=_sds(D, Kv * hd),
+                xv=_sds(D, Kv * hd),
+                xo=_sds(H * hd, D),
+                xgate=_sds(1),
+            )
+    elif kind == MAMBA:
+        di, ds, dc, dr = d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv, dt_rank(cfg)
+        s.update(
+            in_proj=_sds(D, 2 * di),
+            conv_w=_sds(dc, di),
+            conv_b=_sds(di),
+            x_proj=_sds(di, dr + 2 * ds),
+            dt_w=_sds(dr, di),
+            dt_b=_sds(di),
+            A_log=_sds(di, ds),
+            D_skip=_sds(di),
+            out_proj=_sds(di, D),
+        )
+    elif kind == MLSTM:
+        di = d_inner(cfg)
+        nh = cfg.n_heads
+        s.update(
+            up=_sds(D, 2 * di),
+            conv_w=_sds(4, di),
+            conv_b=_sds(di),
+            wq=_sds(di, di),
+            wk=_sds(di, di),
+            wv=_sds(di, di),
+            gi=_sds(di, nh),
+            gf=_sds(di, nh),
+            ln_inner=_sds(di),
+            down=_sds(di, D),
+        )
+    elif kind == SLSTM:
+        D4 = 4 * D
+        nh = cfg.n_heads
+        dh = D // nh
+        ff = slstm_ff(cfg)
+        s.update(
+            w=_sds(D, D4),
+            r=_sds(nh, dh, 4 * dh),
+            b=_sds(D4),
+            ln_inner=_sds(D),
+            up=_sds(D, 2 * ff),
+            down=_sds(ff, D),
+        )
+    else:
+        raise ValueError(f"unknown mixer kind {kind}")
+    return s
+
+
+def ffn_specs(cfg: ModelConfig, is_moe: bool) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    if F == 0:
+        return {}
+    s: Dict[str, Any] = {"ln2": _sds(D)}
+    if is_moe:
+        E = cfg.moe.n_experts
+        s.update(
+            router=_sds(D, E),
+            e_wg=_sds(E, D, F),
+            e_wi=_sds(E, D, F),
+            e_wo=_sds(E, F, D),
+        )
+    else:
+        s.update(wi=_sds(D, F), wo2=_sds(F, D))
+        if mlp_gated(cfg):
+            s["wg"] = _sds(D, F)
+    return s
+
+
+def mlp_gated(cfg: ModelConfig) -> bool:
+    return cfg.family != "audio"   # whisper uses plain GELU MLPs
+
+
+def layer_specs(cfg: ModelConfig, layer_idx: int, *, decoder: bool = True) -> Dict[str, Any]:
+    kind = layer_kind_at(cfg, layer_idx) if decoder else ATTN
+    s = dict(mixer_specs(cfg, kind))
+    s.update(ffn_specs(cfg, decoder and cfg.is_moe_layer(layer_idx)))
+    return s
+
+
+def _stack(spec_tree, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), spec_tree
+    )
+
+
+def model_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    period, n_repeats, n_tail = layout(cfg)
+    specs: Dict[str, Any] = {
+        "emb": _sds(cfg.vocab, cfg.d_model),
+        "final_ln": _sds(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = _sds(cfg.d_model, cfg.vocab)
+    # decoder body: one spec per position in the superblock, stacked R times
+    if n_repeats > 0:
+        specs["body"] = [
+            _stack(layer_specs(cfg, p), n_repeats) for p in range(period)
+        ]
+    else:
+        specs["body"] = []
+    specs["tail"] = [
+        layer_specs(cfg, n_repeats * period + j) for j in range(n_tail)
+    ]
+    if cfg.enc_dec:
+        enc_layer = dict(mixer_specs(cfg, ATTN))
+        enc_layer.update(ffn_specs(cfg, False))
+        specs["encoder"] = {
+            "layers": _stack(enc_layer, cfg.n_enc_layers),
+            "final_ln": _sds(cfg.d_model),
+        }
+        # decoder layers gain cross-attention onto encoder memory
+        xa = {
+            "lnx": _sds(cfg.d_model),
+            "xq": _sds(cfg.d_model, cfg.n_heads * cfg.hd),
+            "xk": _sds(cfg.d_model, cfg.n_kv_heads * cfg.hd),
+            "xv": _sds(cfg.d_model, cfg.n_kv_heads * cfg.hd),
+            "xo": _sds(cfg.n_heads * cfg.hd, cfg.d_model),
+        }
+        if n_repeats > 0:
+            specs["xattn_body"] = [_stack(xa, n_repeats) for _ in range(period)]
+        specs["xattn_tail"] = [dict(xa) for _ in range(n_tail)]
+    return specs
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact element count of model_param_specs; MoE experts scaled by
+    top_k/n_experts when ``active_only`` (for MODEL_FLOPS = 6*N_active*D)."""
+    specs = model_param_specs(cfg)
+    total = 0
+
+    def visit(path: str, leaf):
+        nonlocal total
+        n = int(np.prod(leaf.shape))
+        if active_only and ("/e_w" in path or path.endswith(("e_wg", "e_wi", "e_wo"))):
+            n = n * cfg.moe.top_k // max(cfg.moe.n_experts, 1)
+        total += n
+
+    from repro.utils.tree import tree_map_with_path_names
+
+    tree_map_with_path_names(visit, specs)
+    return total

@@ -1,0 +1,269 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) and strictly
+sequential sLSTM (scalar memory, recurrent gate mixing), both with
+exp-input-gate stabilization (running max exponent m).
+
+mLSTM parallel form is GLA-style: per chunk, an intra-chunk decay-masked
+attention plus an inter-chunk contribution from the carried (C, n, m)
+state; the same recurrence is used step-wise for decode.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import spec as S
+from repro.models.layers import rms_norm
+from repro.sharding.ctx import ShardCtx
+
+NEG = -1e30
+
+
+def _heads(x, nh):
+    b, s, d = x.shape
+    return x.reshape(b, s, nh, d // nh)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+def _mlstm_gates(params, xc, dt):
+    logi = (xc @ params["gi"].astype(dt)).astype(jnp.float32)     # (B,S,nh)
+    logf = jax.nn.log_sigmoid(
+        (xc @ params["gf"].astype(dt)).astype(jnp.float32)
+    )
+    return logi, logf
+
+
+def mlstm_apply(
+    params: Dict[str, Any],
+    x: jax.Array,                # (B,S,D)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    return_state: bool = False,
+):
+    from repro.models.mamba import _causal_conv
+
+    B, Sq, D = x.shape
+    di = S.d_inner(cfg)
+    nh = cfg.n_heads
+    dh = di // nh
+    dt = x.dtype
+    L = min(cfg.ssm.chunk, Sq)
+    pad = (-Sq) % L
+    Sq_orig = Sq
+    Sq = Sq + pad
+    nc = Sq // L
+
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    xm, z = jnp.split(h @ params["up"].astype(dt), 2, axis=-1)     # (B,S,di)
+    xc = jax.nn.silu(_causal_conv(xm, params["conv_w"], params["conv_b"]))
+    q = _heads(xc @ params["wq"].astype(dt), nh).astype(jnp.float32)
+    k = _heads(xc @ params["wk"].astype(dt), nh).astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(dh)
+    )
+    v = _heads(xm @ params["wv"].astype(dt), nh).astype(jnp.float32)
+    logi, logf = _mlstm_gates(params, xc, dt)
+    if pad:
+        # masked padding: no input (logi=-inf), no decay (logf=0) -> the
+        # carried state is untouched by padded steps
+        padT = lambda a, v=0.0: jnp.pad(
+            a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+            constant_values=v)
+        q, k, v = padT(q), padT(k), padT(v)
+        logi = padT(logi, NEG)
+        logf = padT(logf, 0.0)
+
+    # chunk everything: (B, nc, L, ...)
+    def ch(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    qc, kc, vc = ch(q), ch(k), ch(v)              # (nc,B,L,nh,dh)
+    lic, lfc = ch(logi), ch(logf)                 # (nc,B,L,nh)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk(carry, inp):
+        C, n, m = carry                            # (B,nh,dh,dh),(B,nh,dh),(B,nh)
+        qi, ki, vi, li, lf = inp
+        Fl = jnp.cumsum(lf, axis=1)                # (B,L,nh) within-chunk decay
+        Fc = Fl[:, -1]                             # (B,nh)
+        # intra-chunk log-weights w[t,s] = Fl_t - Fl_s + li_s  (s<=t)
+        w = Fl[:, :, None, :] - Fl[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(tri[None, :, :, None], w, NEG)     # (B,L,L,nh)
+        m_intra = jnp.max(w, axis=2)                     # (B,L,nh)
+        m_inter = Fl + m[:, None, :]                     # carry exponent
+        m_new = jnp.maximum(m_intra, m_inter)            # (B,L,nh)
+        # intra attention
+        qk = jnp.einsum("blhd,bshd->blsh", qi, ki)       # (B,L,L,nh)
+        p = jnp.exp(w - m_new[:, :, None, :]) * qk
+        num_intra = jnp.einsum("blsh,bshd->blhd", p, vi)
+        den_intra = jnp.sum(p, axis=2)                   # (B,L,nh)
+        # inter (carried state)
+        scale_inter = jnp.exp(m_inter - m_new)           # (B,L,nh)
+        num_inter = jnp.einsum("blhd,bhde->blhe", qi, C) * scale_inter[..., None]
+        den_inter = jnp.einsum("blhd,bhd->blh", qi, n) * scale_inter
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        hpre = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # carry update to end of chunk
+        m_endc = jnp.maximum(
+            m + Fc, jnp.max(Fc[:, None] - Fl + li, axis=1)
+        )                                               # (B,nh)
+        dec_old = jnp.exp(m + Fc - m_endc)              # (B,nh)
+        wk_end = jnp.exp(Fc[:, None] - Fl + li - m_endc[:, None])  # (B,L,nh)
+        C_new = C * dec_old[..., None, None] + jnp.einsum(
+            "blhd,blhe,blh->bhde", ki, vi, wk_end
+        )
+        n_new = n * dec_old[..., None] + jnp.einsum("blhd,blh->bhd", ki, wk_end)
+        return (C_new, n_new, m_endc), hpre
+
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.full((B, nh), NEG, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(chunk, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    hseq = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, di)[:, :Sq_orig].astype(dt)
+    hseq = rms_norm(hseq, params["ln_inner"], cfg.norm_eps)
+    out = (hseq * jax.nn.silu(z)) @ params["down"].astype(dt)
+    if return_state:
+        state = {
+            "C": Cf, "n": nf, "m": mf,
+            "conv": xm[:, -3:].astype(jnp.float32),
+        }
+        return out, state
+    return out
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    di = S.d_inner(cfg)
+    nh = cfg.n_heads
+    dh = di // nh
+    return {
+        "C": jax.ShapeDtypeStruct((batch, nh, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, di), jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, cache, cfg: ModelConfig, ctx: ShardCtx):
+    B, _, D = x.shape
+    di = S.d_inner(cfg)
+    nh = cfg.n_heads
+    dh = di // nh
+    dt = x.dtype
+
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    xm, z = jnp.split(h @ params["up"].astype(dt), 2, axis=-1)    # (B,1,di)
+    conv_in = jnp.concatenate([cache["conv"].astype(dt), xm], axis=1)
+    w = params["conv_w"].astype(dt)
+    xc = jax.nn.silu(
+        jnp.einsum("bcd,cd->bd", conv_in, w) + params["conv_b"].astype(dt)
+    )                                                             # (B,di)
+    q = (xc @ params["wq"].astype(dt)).reshape(B, nh, dh).astype(jnp.float32)
+    k = (xc @ params["wk"].astype(dt)).reshape(B, nh, dh).astype(jnp.float32)
+    k = k / jnp.sqrt(jnp.float32(dh))
+    v = (xm[:, 0] @ params["wv"].astype(dt)).reshape(B, nh, dh).astype(jnp.float32)
+    li = (xc @ params["gi"].astype(dt)).astype(jnp.float32)       # (B,nh)
+    lf = jax.nn.log_sigmoid((xc @ params["gf"].astype(dt)).astype(jnp.float32))
+
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    a = jnp.exp(lf + m - m_new)
+    b = jnp.exp(li - m_new)
+    C_new = C * a[..., None, None] + b[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = n * a[..., None] + b[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    hvec = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hvec = hvec.reshape(B, di).astype(dt)
+    hvec = rms_norm(hvec, params["ln_inner"], cfg.norm_eps)
+    out = (hvec[:, None, :] * jax.nn.silu(z)) @ params["down"].astype(dt)
+    new_cache = {"C": C_new, "n": n_new, "m": m_new, "conv": conv_in[:, 1:].astype(jnp.float32)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+def _slstm_cell(params, gates_x, carry, nh, dh):
+    """One step. gates_x: (B,4D) precomputed x@W+b; carry: (c,n,h,m)."""
+    c, n, hprev, m = carry
+    B = gates_x.shape[0]
+    D = nh * dh
+    rec = jnp.einsum(
+        "bhd,hde->bhe", hprev.reshape(B, nh, dh), params["r"].astype(jnp.float32)
+    ).reshape(B, 4 * D)
+    g = gates_x + rec
+    ip, fp, zp, op = jnp.split(g, 4, axis=-1)
+    log_i = ip
+    log_f = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(log_f + m, log_i)
+    a = jnp.exp(log_f + m - m_new)
+    b = jnp.exp(log_i - m_new)
+    zt = jnp.tanh(zp)
+    c_new = a * c + b * zt
+    n_new = a * n + b
+    h_new = jax.nn.sigmoid(op) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(params, x, cfg: ModelConfig, ctx: ShardCtx, *,
+                return_state: bool = False):
+    B, Sq, D = x.shape
+    nh = cfg.n_heads
+    dh = D // nh
+    dt = x.dtype
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    gates_x = (h @ params["w"].astype(dt)).astype(jnp.float32) + params["b"].astype(
+        jnp.float32
+    )                                                             # (B,S,4D)
+
+    def step(carry, gx):
+        new = _slstm_cell(params, gx, carry, nh, dh)
+        return new, new[2]
+
+    zeros = jnp.zeros((B, D), jnp.float32)
+    carry0 = (zeros, zeros, zeros, jnp.full((B, D), NEG, jnp.float32))
+    (cf, nf, hf, mf), hs = jax.lax.scan(step, carry0, gates_x.transpose(1, 0, 2))
+    hseq = hs.transpose(1, 0, 2).astype(dt)                       # (B,S,D)
+    hseq = rms_norm(hseq, params["ln_inner"], cfg.norm_eps)
+    u = hseq @ params["up"].astype(dt)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.silu(u1) * u2) @ params["down"].astype(dt)
+    if return_state:
+        return out, {"c": cf, "n": nf, "h": hf, "m": mf}
+    return out
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    f32 = jnp.float32
+    return {
+        "c": jax.ShapeDtypeStruct((batch, D), f32),
+        "n": jax.ShapeDtypeStruct((batch, D), f32),
+        "h": jax.ShapeDtypeStruct((batch, D), f32),
+        "m": jax.ShapeDtypeStruct((batch, D), f32),
+    }
+
+
+def slstm_decode(params, x, cache, cfg: ModelConfig, ctx: ShardCtx):
+    B, _, D = x.shape
+    nh, dh = cfg.n_heads, D // cfg.n_heads
+    dt = x.dtype
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    gx = (h[:, 0] @ params["w"].astype(dt)).astype(jnp.float32) + params["b"].astype(
+        jnp.float32
+    )
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, hn, m = _slstm_cell(params, gx, carry, nh, dh)
+    hvec = rms_norm(hn.astype(dt), params["ln_inner"], cfg.norm_eps)
+    u = hvec @ params["up"].astype(dt)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    out = ((jax.nn.silu(u1) * u2) @ params["down"].astype(dt))[:, None, :]
+    return out, {"c": c, "n": n, "h": hn, "m": m}

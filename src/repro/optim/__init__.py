@@ -1,0 +1,18 @@
+from repro.optim.adamw import AdamW
+from repro.optim.adafactor import Adafactor
+from repro.optim.schedules import constant, cosine_warmup
+from repro.optim.base import Optimizer, clip_by_global_norm
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise KeyError(f"unknown optimizer {name}")
+
+
+def default_optimizer_for(n_params: int) -> str:
+    """Adafactor for >=100B-param models: fp32 Adam moments would not fit
+    256 x 16 GB HBM (see DESIGN.md); AdamW otherwise."""
+    return "adafactor" if n_params >= 100e9 else "adamw"

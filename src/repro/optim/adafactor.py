@@ -1,0 +1,79 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no first
+moment — ~4 bytes/param of optimizer state, which is what lets the 314B /
+398B MoE configs train on a 256-chip v5e pod (see DESIGN.md memory budget).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.base import Schedule
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    lr: Union[float, Schedule] = 1e-2
+    decay: float = 0.8           # t^-decay second-moment decay schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def init(self, params) -> Any:
+        def make(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(make, params, is_leaf=None)}
+
+    def update(self, grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-self.decay)
+        lr = self._lr(step)
+
+        def upd(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if p.ndim >= 2:
+                vr = beta2 * f["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * f["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                v = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_f = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * f["v"] + (1 - beta2) * g2
+                new_f = {"v": v}
+            u = g / jnp.sqrt(jnp.maximum(v, self.eps))
+            # update clipping (RMS <= threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            delta = u
+            if self.weight_decay and p.ndim >= 2:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_f)
+
+        flat = jax.tree.map(upd, grads, state["f"], params)
+        is_pair = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=is_pair)
+        new_f = jax.tree.map(lambda x: x[1], flat, is_leaf=is_pair)
+        return new_params, {"f": new_f}
+
+    def state_pspecs(self, param_specs, param_pspecs):
+        def make(sds, spec):
+            axes = list(spec) + [None] * (len(sds.shape) - len(spec))
+            if len(sds.shape) >= 2:
+                return {"vr": P(*axes[:-1]), "vc": P(*(axes[:-2] + axes[-1:]))}
+            return {"v": P(*axes)}
+
+        return {"f": jax.tree.map(make, param_specs, param_pspecs)}

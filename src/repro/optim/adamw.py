@@ -1,0 +1,58 @@
+"""AdamW with decoupled weight decay; fp32 moments mirroring the params."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Schedule
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Union[float, Schedule] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def init(self, params) -> Any:
+        zeros = lambda tree: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), tree
+        )
+        return {"m": zeros(params), "v": zeros(params)}
+
+    def update(self, grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / (1 - b1**t)
+            vh = v / (1 - b2**t)
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # no decay on norms/biases
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m, v
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda x: x[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda x: x[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda x: x[2], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    def state_pspecs(self, param_specs, param_pspecs):
+        return {"m": param_pspecs, "v": param_pspecs}

@@ -1,0 +1,28 @@
+"""Minimal functional optimizer interface (optax is not available offline;
+the substrate is built here per the reproduction scope)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(Protocol):
+    def init(self, params) -> Any: ...
+
+    def update(self, grads, state, params, step) -> tuple:  # (new_params, new_state)
+        ...
+
+    def state_pspecs(self, param_specs, param_pspecs) -> Any: ...
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    from repro.utils.tree import global_norm
+
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

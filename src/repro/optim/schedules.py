@@ -1,0 +1,23 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.float32(value)
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,3 @@
+from repro.perfmodel.constants import V5E
+from repro.perfmodel.roofline import analytic_roofline
+from repro.perfmodel.workload_gen import lm_jobs_workload, lm_training_job

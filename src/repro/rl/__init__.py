@@ -1,0 +1,2 @@
+from repro.rl.policy import ActorCritic
+from repro.rl.ppo import PPOConfig, ppo_train

@@ -1,0 +1,116 @@
+"""Distributed PPO: shard_map data parallelism over the mesh 'data' axis
+with int8-compressed gradient all-reduce (error feedback).
+
+Each shard rolls out its own slice of the vectorized environments and
+computes local PPO gradients; the only cross-shard communication is the
+compressed psum (4x fewer bytes on the wire than fp32 — the knob the
+brief calls "gradient compression"). Params stay replicated.
+
+Note the VMA detail: params enter the shard_map replicated, so they are
+pcast to "varying" before jax.grad — otherwise shard_map's AD inserts its
+own fp32 psum and the reduction (and the bytes) happen twice.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import AdamW
+from repro.optim.base import clip_by_global_norm
+from repro.optim.compress import compressed_psum
+from repro.rl.gae import gae
+from repro.rl.policy import ActorCritic
+from repro.rl.ppo import PPOConfig, Transition, make_rollout, ppo_loss
+
+
+def make_distributed_grad_step(
+    env, policy: ActorCritic, cfg: PPOConfig, mesh, *, axis: str = "data",
+    compress: bool = True,
+):
+    """Returns grad_step(params, env_states, key, error) ->
+    (grads, env_states, new_error, stats); rollout+GAE+grad run per shard,
+    gradients cross the wire int8-compressed."""
+    n_shards = mesh.shape[axis]
+    assert cfg.n_envs % n_shards == 0
+    local_cfg = PPOConfig(**{**cfg.__dict__, "n_envs": cfg.n_envs // n_shards})
+    rollout = make_rollout(env, policy, local_cfg)
+
+    def local(params, env_states, key, error):
+        key = key[0]          # (1,) shard slice of the per-shard key array
+        error = jax.tree.map(lambda e: e[0], error)
+        params = jax.tree.map(
+            lambda x: jax.lax.pcast(x, axis, to="varying"), params
+        )
+        env_states, batch, last_val, fin_ret = rollout(params, env_states, key)
+        adv, ret = gae(batch.reward, batch.value, batch.done, last_val,
+                       gamma=cfg.gamma, lam=cfg.lam)
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: ppo_loss(policy, p, flat, adv.reshape(-1),
+                               ret.reshape(-1), cfg), has_aux=True
+        )(params)
+        if compress:
+            grads, error = compressed_psum(grads, axis, error)
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+        stats = {
+            "loss": jax.lax.pmean(loss, axis),
+            "mean_episode_return": jax.lax.pmean(jnp.mean(fin_ret), axis),
+        }
+        return grads, env_states, jax.tree.map(lambda e: e[None], error), stats
+
+    def spec_like(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    def grad_step(params, env_states, keys, error):
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), spec_like(env_states, P(axis)), P(axis),
+                      spec_like(error, P(axis))),
+            out_specs=(P(), spec_like(env_states, P(axis)),
+                       spec_like(error, P(axis)), P()),
+        )(params, env_states, keys, error)
+
+    return grad_step
+
+
+def distributed_ppo_train(
+    env, mesh, *, cfg: PPOConfig = PPOConfig(), n_iterations: int = 10,
+    seed: int = 0, compress: bool = True, axis: str = "data",
+):
+    """End-to-end distributed PPO (used on multi-host topologies; exercised
+    on fake devices in tests)."""
+    policy = ActorCritic(env.obs_dim, env.n_actions)
+    opt = AdamW(lr=cfg.lr, b2=0.999, weight_decay=0.0)
+    key = jax.random.key(seed)
+    key, kp, ke = jax.random.split(key, 3)
+    params = policy.init(kp)
+    opt_state = opt.init(params)
+    env_states, _ = jax.vmap(env.reset)(jax.random.split(ke, cfg.n_envs))
+    n_shards = mesh.shape[axis]
+    # per-shard error-feedback state: leading axis = shard
+    error = jax.tree.map(
+        lambda p: jnp.zeros((n_shards,) + p.shape, jnp.float32), params)
+
+    grad_step = make_distributed_grad_step(
+        env, policy, cfg, mesh, axis=axis, compress=compress)
+
+    history = []
+    with mesh:
+        step_jit = jax.jit(grad_step)
+        for it in range(n_iterations):
+            key, kr = jax.random.split(key)
+            keys = jax.random.split(kr, n_shards)
+            grads, env_states, error, stats = step_jit(
+                params, env_states, keys, error)
+            grads, _ = clip_by_global_norm(grads, cfg.max_grad_norm)
+            params, opt_state = opt.update(grads, opt_state, params,
+                                           jnp.int32(it))
+            history.append({k: float(v) for k, v in stats.items()})
+    return params, history

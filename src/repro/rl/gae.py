@@ -1,0 +1,26 @@
+"""Generalized Advantage Estimation (reverse scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gae(rewards, values, dones, last_value, *, gamma=0.99, lam=0.95):
+    """All inputs (T, N). Returns (advantages, returns) each (T, N)."""
+
+    def body(carry, inp):
+        adv_next, v_next = carry
+        r, v, d = inp
+        nonterm = 1.0 - d
+        delta = r + gamma * v_next * nonterm - v
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, v), adv
+
+    # derive from last_value so the carry keeps its VMA type under shard_map
+    zeros = last_value * 0.0
+    (_, _), advs = jax.lax.scan(
+        body, (zeros, last_value), (rewards, values, dones.astype(jnp.float32)),
+        reverse=True,
+    )
+    return advs, advs + values

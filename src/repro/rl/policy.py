@@ -1,0 +1,45 @@
+"""MLP actor-critic (shared torso, categorical policy head + value head)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ActorCritic:
+    def __init__(self, obs_dim: int, n_actions: int, hidden=(128, 128)):
+        self.obs_dim = obs_dim
+        self.n_actions = n_actions
+        self.hidden = tuple(hidden)
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        sizes = (self.obs_dim,) + self.hidden
+        params: Dict[str, Any] = {}
+        keys = jax.random.split(key, len(sizes) + 2)
+        for i in range(len(sizes) - 1):
+            std = np.sqrt(2.0 / sizes[i])
+            params[f"w{i}"] = std * jax.random.normal(keys[i], (sizes[i], sizes[i + 1]))
+            params[f"b{i}"] = jnp.zeros((sizes[i + 1],))
+        params["w_pi"] = 0.01 * jax.random.normal(keys[-2], (sizes[-1], self.n_actions))
+        params["b_pi"] = jnp.zeros((self.n_actions,))
+        params["w_v"] = 1.0 * jax.random.normal(keys[-1], (sizes[-1], 1)) / np.sqrt(sizes[-1])
+        params["b_v"] = jnp.zeros((1,))
+        return jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+    def apply(self, params, obs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        h = obs
+        for i in range(len(self.hidden)):
+            h = jnp.tanh(h @ params[f"w{i}"] + params[f"b{i}"])
+        logits = h @ params["w_pi"] + params["b_pi"]
+        value = (h @ params["w_v"] + params["b_v"])[..., 0]
+        return logits, value
+
+    def act(self, params, obs, key):
+        logits, value = self.apply(params, obs)
+        action = jax.random.categorical(key, logits)
+        logp = jax.nn.log_softmax(logits)
+        lp = jnp.take_along_axis(logp, action[..., None], axis=-1)[..., 0]
+        return action, lp, value

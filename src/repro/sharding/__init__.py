@@ -1,0 +1,2 @@
+from repro.sharding.ctx import ShardCtx
+from repro.sharding.specs import param_pspecs, train_state_pspecs

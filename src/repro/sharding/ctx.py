@@ -1,0 +1,101 @@
+"""Logical-axis sharding context threaded through the model code.
+
+Model code annotates activations with *logical* axes ('dp', 'tp', 'sp',
+'fsdp', None); the context maps them onto physical mesh axes and emits
+``with_sharding_constraint`` — or nothing when running unsharded (CPU
+smoke tests), so the same model code serves both worlds.
+
+Physical mapping (production mesh):
+  dp   -> ('pod', 'data')   batch
+  tp   -> 'model'           heads / d_ff / experts / vocab
+  sp   -> 'model'           sequence parallelism for the residual stream
+  fsdp -> ('pod', 'data')   parameter & optimizer-state sharding (ZeRO-3)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    enabled: bool = False
+    dp: Tuple[str, ...] = ("data",)
+    tp: Optional[str] = "model"
+    # feature flags (hillclimb knobs)
+    seq_parallel: bool = True        # shard residual stream's seq dim over tp
+    fsdp: bool = True                # shard params over dp axes
+    expert_parallel: bool = True     # shard MoE experts over tp when divisible
+    decode_kv_shard: str = "seq"     # 'seq' | 'seq2d' | 'head' | 'none'
+    attention_impl: str = "auto"     # 'auto' | 'full' | 'chunked' | 'pallas'
+    tp_size: int = 16                # |model| axis (for divisibility checks)
+    dp_size: int = 1                 # |data(*pod)| product (MoE groups)
+    force_unroll: bool = False       # unroll layer scans (cost probes)
+    cast_params_bf16: bool = True    # cast-then-gather: FSDP gathers move
+                                     # bf16, halving ICI bytes + live temps
+    block_q: int = 512
+    block_k: int = 1024
+    logit_chunk: int = 1024          # seq-chunked loss for big vocabs
+    scan_unroll: int = 1             # layer-scan unroll (overlap knob)
+    remat: str = "block"             # 'none' | 'block' (superblock) | 'layer'
+                                     # 'layer': per-layer checkpoints inside
+                                     # the scan body — FSDP-gathered weights
+                                     # of only ~1 layer live at a time
+
+    def axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "dp":
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if logical == "fsdp":
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if logical == "sp":
+            return self.tp if self.seq_parallel else None
+        if logical == "tp":
+            return self.tp
+        raise ValueError(f"unknown logical axis {logical}")
+
+    def pspec(self, *logical) -> P:
+        return P(*[self.axis(a) for a in logical])
+
+    def constrain(self, x: jax.Array, *logical) -> jax.Array:
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.pspec(*logical))
+
+    def constrain_raw(self, x: jax.Array, spec: P) -> jax.Array:
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def kv_cache_pspec(self) -> P:
+        """PartitionSpec for a (B, S, Kv, hd) decode KV cache."""
+        if not self.enabled or self.decode_kv_shard == "none":
+            return P()
+        if self.decode_kv_shard == "seq":
+            return P(self.axis("dp"), self.tp, None, None)
+        if self.decode_kv_shard == "seq2d":
+            # batch too small to shard: spread the sequence over every axis
+            return P(None, tuple(self.dp) + (self.tp,), None, None)
+        if self.decode_kv_shard == "head":
+            return P(self.axis("dp"), None, self.tp, None)
+        raise ValueError(self.decode_kv_shard)
+
+    def with_(self, **kw) -> "ShardCtx":
+        return replace(self, **kw)
+
+    def heads_axis(self, n_heads: int):
+        """'model' if the head count divides evenly, else None (replicate)."""
+        return self.tp if (self.tp and n_heads % max(self.tp_size, 1) == 0) else None
+
+
+UNSHARDED = ShardCtx(enabled=False)
+
+
+def make_ctx(multi_pod: bool, **kw) -> ShardCtx:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardCtx(enabled=True, dp=dp, tp="model", **kw)

@@ -1,0 +1,3 @@
+from repro.train.state import TrainState, abstract_train_state, create_train_state
+from repro.train.train_step import make_train_step
+from repro.train.serve_step import make_decode_step, make_prefill_step

@@ -1,0 +1,72 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token/step),
+with greedy/temperature sampling. Both lower cleanly onto the production
+mesh: KV caches are sharded (batch -> dp, sequence -> tp) so decode
+attention runs as distributed flash-decode (see models/layers.py).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill
+from repro.sharding.ctx import ShardCtx, UNSHARDED
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx = UNSHARDED,
+                      *, cache_seq_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, ctx, cache_seq_len=cache_seq_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx = UNSHARDED,
+                     *, temperature: float = 0.0) -> Callable:
+    def step(params, cache, tokens, cache_len, key=None):
+        logits, cache = decode_step(params, cache, tokens, cache_len, cfg, ctx)
+        if temperature > 0.0 and key is not None:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], logits, cache
+
+    return step
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompt: jax.Array,            # (B, S)
+    n_tokens: int,
+    *,
+    ctx: ShardCtx = UNSHARDED,
+    cache_seq_len: Optional[int] = None,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+    extras: Optional[dict] = None,
+) -> jax.Array:
+    """Simple generation driver (prefill + scan of decode steps)."""
+    B, S = prompt.shape
+    cache_seq_len = cache_seq_len or (S + n_tokens)
+    batch = {"tokens": prompt, **(extras or {})}
+    logits, cache = prefill(params, batch, cfg, ctx, cache_seq_len=cache_seq_len)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    dstep = make_decode_step(cfg, ctx, temperature=temperature)
+
+    def body(carry, i):
+        tok, cache, key = carry
+        if key is not None:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None
+        nxt, _, cache = dstep(params, cache, tok, S + i, sub)
+        return (nxt, cache, key), nxt[:, 0]
+
+    (_, _, _), toks = jax.lax.scan(
+        body, (first, cache, key), jnp.arange(n_tokens - 1)
+    )
+    return jnp.concatenate([first, toks.T], axis=1)

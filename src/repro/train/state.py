@@ -1,0 +1,39 @@
+"""Train state (params + optimizer state + step) and its sharding specs."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params, model_param_specs
+from repro.sharding.ctx import ShardCtx
+from repro.sharding.specs import param_pspecs
+
+TrainState = Dict[str, Any]   # {"params", "opt", "step"}
+
+
+def create_train_state(cfg: ModelConfig, optimizer, rng: jax.Array) -> TrainState:
+    params = init_params(cfg, rng)
+    return {"params": params, "opt": optimizer.init(params), "step": jnp.int32(0)}
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer) -> TrainState:
+    """ShapeDtypeStruct mirror — used by the dry-run (never allocated)."""
+    specs = model_param_specs(cfg)
+    opt = jax.eval_shape(lambda s: optimizer.init(s), specs)
+    return {
+        "params": specs,
+        "opt": opt,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def train_state_pspecs(cfg: ModelConfig, ctx: ShardCtx, optimizer, mesh=None):
+    from jax.sharding import PartitionSpec as P
+
+    p_specs = param_pspecs(cfg, ctx, mesh)
+    opt_specs = optimizer.state_pspecs(model_param_specs(cfg), p_specs)
+    return {"params": p_specs, "opt": opt_specs, "step": P()}

@@ -1,0 +1,107 @@
+"""The pjit-able training step: loss -> grads -> (clip, compress, guard)
+-> optimizer update.
+
+Features (each a hillclimb/robustness knob):
+- gradient (micro)accumulation: batch split into M microbatches scanned
+  sequentially — caps activation memory at 1/M for the same global batch;
+- global-norm clipping;
+- non-finite guard: a step whose gradients contain inf/nan is *skipped*
+  (params/opt unchanged, step still advances) — blast containment for
+  straggler-induced partial batches or loss spikes at scale;
+- optional int8 gradient compression with error feedback (halves/quarters
+  DCN all-reduce bytes on the pod axis; see optim/compress.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_train
+from repro.optim.base import clip_by_global_norm
+from repro.sharding.ctx import ShardCtx, UNSHARDED
+from repro.utils.tree import all_finite
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    ctx: ShardCtx = UNSHARDED,
+    *,
+    microbatches: int = 1,
+    grad_clip: float = 1.0,
+    compress: Optional[str] = None,     # None | 'int8'
+) -> Callable:
+    def loss_fn(params, batch):
+        if ctx.cast_params_bf16 and cfg.dtype == "bfloat16":
+            # cast-then-gather: the bf16 cast happens on the fp32 *shard*,
+            # so FSDP all-gathers move half the bytes (and the gathered
+            # per-layer weights live in VMEM/HBM at half size). Autodiff
+            # through the cast still accumulates fp32 master grads.
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p,
+                params,
+            )
+        return forward_train(params, batch, cfg, ctx)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def reshape(x):
+            b = x.shape[0]
+            assert b % microbatches == 0
+            y = x.reshape((microbatches, b // microbatches) + x.shape[1:])
+            return ctx.constrain(y, None, "dp") if y.ndim >= 2 else y
+
+        mb = jax.tree.map(reshape, batch)
+
+        def acc(carry, mb_i):
+            g_acc, l_acc = carry
+            (loss, metrics), g = grad_fn(params, mb_i)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss), metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_sum, l_sum), metrics = jax.lax.scan(acc, (g0, jnp.float32(0)), mb)
+        grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return l_sum / microbatches, metrics, grads
+
+    def train_step(state: Dict[str, Any], batch) -> tuple:
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+        loss, metrics, grads = compute_grads(params, batch)
+
+        if compress == "int8":
+            from repro.optim.compress import quantize_dequantize
+
+            grads = quantize_dequantize(grads)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        good = all_finite(grads) & jnp.isfinite(loss)
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        params = jax.tree.map(
+            lambda n, o: jnp.where(good, n, o), new_params, params
+        )
+        opt_state = jax.tree.map(
+            lambda n, o: jnp.where(good, n, o), new_opt, opt_state
+        )
+        new_state = {"params": params, "opt": opt_state, "step": step + 1}
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "skipped": (~good).astype(jnp.float32),
+            **metrics,
+        }
+        return new_state, out_metrics
+
+    return train_step

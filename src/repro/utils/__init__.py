@@ -1,0 +1,2 @@
+from repro.utils.registry import Registry
+from repro.utils.tree import tree_bytes, tree_count, tree_map_with_path_names

@@ -1,0 +1,50 @@
+"""Pytree helpers shared across the stack."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of elements in a pytree of arrays."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree) if hasattr(x, "shape")))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (uses dtype itemsize)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return int(total)
+
+
+def tree_map_with_path_names(fn, tree):
+    """tree_map where fn receives ('/'-joined key path, leaf)."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda path, leaf: fn(_name(path), leaf), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def all_finite(tree) -> jax.Array:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)]
+    return jnp.all(jnp.stack(leaves))

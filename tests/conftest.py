@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override is ONLY
+# for the dry-run); keep any user XLA_FLAGS out of the test environment.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,108 @@
+"""HLO collective parser + sharding-spec unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.sharding.ctx import make_ctx
+from repro.sharding.specs import cache_pspecs, param_pspecs
+from repro.utils.hlo import parse_collectives
+
+HLO_SAMPLE = """
+HloModule jit_step
+%fused (a: bf16[8,128]) -> bf16[8,128] { ... }
+%ag = bf16[16,4096]{1,0} all-gather(%x), replica_groups={{0,1}}
+%ar = f32[256]{0} all-reduce(%y), to_apply=%add
+%rs = f32[32,16]{1,0} reduce-scatter(%z), dimensions={0}
+%a2a = bf16[4,64]{1,0} all-to-all(%w), dimensions={0}
+%cp = u8[1024]{0} collective-permute(%v), source_target_pairs={{0,1}}
+%ars = f32[256]{0} all-reduce-start(%y2), to_apply=%add
+%ard = f32[256]{0} all-reduce-done(%ars)
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = parse_collectives(HLO_SAMPLE)
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 16 * 4096 * 2
+    assert stats.bytes_by_kind["all-reduce"] == 256 * 4 * 2  # incl. -start
+    assert stats.count_by_kind["all-reduce"] == 2
+    assert stats.bytes_by_kind["reduce-scatter"] == 32 * 16 * 4
+    assert stats.bytes_by_kind["all-to-all"] == 4 * 64 * 2
+    assert stats.bytes_by_kind["collective-permute"] == 1024
+    # -done lines are not double counted
+    assert stats.total_count == 6
+
+
+def test_parse_collectives_ignores_non_collective_lines():
+    stats = parse_collectives("%x = f32[8] add(%a, %b)\n%y = call()")
+    assert stats.total_bytes == 0
+
+
+def _mesh_sizes():
+    return {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mixtral-8x22b",
+                                  "jamba-1.5-large-398b", "gemma3-1b"])
+def test_param_pspecs_divide_evenly(arch):
+    """Every sharded dim must divide by the mesh axes product — the specs
+    builder drops shardings that don't divide."""
+    cfg = get_arch(arch)
+    ctx = make_ctx(False)
+    from repro.models.spec import model_param_specs
+    from repro.utils.tree import tree_map_with_path_names
+
+    specs = model_param_specs(cfg)
+    pspecs = param_pspecs(cfg, ctx)
+    sizes = _mesh_sizes()
+
+    def check(name, sds):
+        spec = ref_specs[name]
+        for dim, ax in zip(sds.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            assert dim % total == 0, f"{name}: {dim} % {total}"
+        return sds
+
+    ref_specs = {}
+    tree_map_with_path_names(lambda n, p: ref_specs.__setitem__(n, p) or p,
+                             pspecs)
+    tree_map_with_path_names(check, specs)
+
+
+def test_expert_parallel_only_when_divisible():
+    ctx = make_ctx(False)
+    jam = param_pspecs(get_arch("jamba-1.5-large-398b"), ctx)   # 16 experts
+    mix = param_pspecs(get_arch("mixtral-8x22b"), ctx)          # 8 experts
+    from repro.utils.tree import tree_map_with_path_names
+
+    found = {}
+
+    def grab(tag):
+        def f(n, p):
+            if n.endswith("e_wg"):
+                found.setdefault(tag, p)
+            return p
+        return f
+
+    tree_map_with_path_names(grab("jamba"), jam)
+    tree_map_with_path_names(grab("mixtral"), mix)
+    assert found["jamba"][1] == "model"      # stacked: (None, E='model', ...)
+    assert found["mixtral"][1] is None       # experts not sharded
+
+
+def test_cache_pspecs_structure_matches_cache():
+    from repro.models.model import cache_specs
+
+    cfg = get_arch("jamba-1.5-large-398b")
+    ctx = make_ctx(False)
+    ps = cache_pspecs(cfg, ctx)
+    specs = cache_specs(cfg, 8, 64)
+    assert jax.tree.structure(ps) == jax.tree.structure(
+        jax.tree.map(lambda s: P(), specs))

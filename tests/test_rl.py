@@ -1,0 +1,93 @@
+"""RL stack: env API contracts, GAE math, PPO end-to-end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.sim import tiny_cluster
+from repro.data import synth_workload
+from repro.envs import SchedEnv
+from repro.rl import ActorCritic, PPOConfig, ppo_train
+from repro.rl.gae import gae
+
+
+@pytest.fixture(scope="module")
+def env():
+    cfg = tiny_cluster(sched_max_candidates=4)
+    wls = [synth_workload(cfg, 24, 900.0, seed=s) for s in range(2)]
+    return SchedEnv(cfg, wls, episode_steps=8, sim_steps_per_action=5)
+
+
+def test_env_reset_and_step_contract(env):
+    st, obs = env.reset(jax.random.key(0))
+    assert obs.shape == (env.obs_dim,)
+    assert np.all(np.isfinite(np.asarray(obs)))
+    for a in range(env.n_actions):
+        st2, obs2, r, done, info = env.step(st, jnp.int32(a))
+        assert obs2.shape == (env.obs_dim,)
+        assert np.isfinite(float(r))
+        assert info["facility_w"] > 0
+
+
+def test_env_vmaps(env):
+    keys = jax.random.split(jax.random.key(0), 4)
+    sts, obs = jax.vmap(env.reset)(keys)
+    assert obs.shape == (4, env.obs_dim)
+    sts2, obs2, r, d, _ = jax.vmap(env.step)(sts, jnp.zeros(4, jnp.int32))
+    assert r.shape == (4,)
+
+
+def test_dispatch_action_starts_job(env):
+    st, obs = env.reset(jax.random.key(1))
+    # action 0 = dispatch first queue candidate (feasible at t=0 for tiny)
+    st2, *_ = env.step(st, jnp.int32(0))
+    running_before = int(jnp.sum(st.sim.jstate == 2))
+    running_after = int(jnp.sum(st2.sim.jstate == 2))
+    assert running_after >= running_before
+
+
+def test_gae_matches_manual_computation():
+    rewards = jnp.array([[1.0], [1.0], [1.0]])
+    values = jnp.array([[0.5], [0.5], [0.5]])
+    dones = jnp.zeros((3, 1))
+    last = jnp.array([0.5])
+    adv, ret = gae(rewards, values, dones, last, gamma=0.9, lam=0.8)
+    # manual reverse recursion
+    a2 = 1.0 + 0.9 * 0.5 - 0.5
+    a1 = (1.0 + 0.9 * 0.5 - 0.5) + 0.9 * 0.8 * a2
+    a0 = (1.0 + 0.9 * 0.5 - 0.5) + 0.9 * 0.8 * a1
+    np.testing.assert_allclose(np.asarray(adv[:, 0]), [a0, a1, a2], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ret), np.asarray(adv + values))
+
+
+def test_gae_resets_at_episode_boundary():
+    rewards = jnp.ones((3, 1))
+    values = jnp.zeros((3, 1))
+    dones = jnp.array([[0.0], [1.0], [0.0]])
+    adv, _ = gae(rewards, values, dones, jnp.array([10.0]), gamma=1.0, lam=1.0)
+    # step 1 is terminal: its advantage must not bootstrap step 2's value
+    assert float(adv[1, 0]) == 1.0
+
+
+def test_policy_shapes_and_grads():
+    pol = ActorCritic(12, 5)
+    params = pol.init(jax.random.key(0))
+    obs = jnp.ones((7, 12))
+    logits, value = pol.apply(params, obs)
+    assert logits.shape == (7, 5) and value.shape == (7,)
+    g = jax.grad(lambda p: pol.apply(p, obs)[0].sum())(params)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+
+def test_ppo_trains_and_checkpoints(env, tmp_path):
+    params, hist = ppo_train(
+        env, cfg=PPOConfig(n_envs=4, rollout_len=8, n_epochs=2,
+                           n_minibatches=2),
+        n_iterations=3, checkpoint_dir=str(tmp_path), checkpoint_every=2,
+    )
+    assert len(hist) == 3
+    assert all(np.isfinite(h["mean_reward"]) for h in hist)
+    from repro.checkpoint import latest_step
+
+    assert latest_step(str(tmp_path)) is not None

@@ -1,0 +1,145 @@
+"""Scheduler policy unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.sim import tiny_cluster
+from repro.core import build_statics, init_state, load_jobs, run_episode, summary
+from repro.core import schedulers as sched
+from repro.core.state import QUEUED
+
+
+def _state_with(cfg, submit, dur, n_nodes, prio=None):
+    statics = build_statics(cfg)
+    state = init_state(cfg, statics, jax.random.key(0))
+    n = len(submit)
+    jobs = {
+        "submit_t": np.asarray(submit, np.float32),
+        "dur": np.asarray(dur, np.float32),
+        "n_nodes": np.asarray(n_nodes, np.int32),
+        "req": np.tile(np.array([[4.0], [0.0], [8.0]], np.float32), (1, n)),
+        "priority": np.asarray(prio if prio is not None else submit, np.float32),
+    }
+    return statics, load_jobs(state, jobs)._replace(t=jnp.float32(100.0))
+
+
+def test_fcfs_picks_earliest_submitted():
+    cfg = tiny_cluster()
+    _, state = _state_with(cfg, [5.0, 1.0, 3.0], [60, 60, 60], [1, 1, 1])
+    assert int(sched.select_fcfs(cfg, state)) == 1
+
+
+def test_sjf_picks_shortest():
+    cfg = tiny_cluster()
+    _, state = _state_with(cfg, [1, 2, 3], [500, 50, 100], [1, 1, 1])
+    assert int(sched.select_sjf(cfg, state)) == 1
+
+
+def test_priority_picks_highest():
+    cfg = tiny_cluster()
+    _, state = _state_with(cfg, [1, 2, 3], [10, 10, 10], [1, 1, 1],
+                           prio=[0.0, 9.0, 4.0])
+    assert int(sched.select_priority(cfg, state)) == 1
+
+
+def test_replay_waits_for_recorded_start():
+    cfg = tiny_cluster()
+    _, state = _state_with(cfg, [0.0, 0.0], [60, 60], [1, 1],
+                           prio=[500.0, 50.0])  # recorded starts
+    # t=100: only job 1 (start 50) is due
+    assert int(sched.select_replay(cfg, state)) == 1
+
+
+def test_first_fit_respects_capacity():
+    cfg = tiny_cluster()
+    _, state = _state_with(cfg, [0.0], [60], [3])
+    row, ok = sched.first_fit(state, jnp.int32(0), cfg.max_nodes_per_job)
+    assert bool(ok)
+    row = np.asarray(row)
+    assert (row[:3] >= 0).all() and (row[3:] == -1).all()
+    assert len(set(row[:3].tolist())) == 3  # distinct nodes
+
+
+def test_first_fit_infeasible_when_too_large():
+    cfg = tiny_cluster()
+    _, state = _state_with(cfg, [0.0], [60], [cfg.max_nodes_per_job])
+    # request more nodes than exist with gpu=0 requirement -> feasible count
+    state = state._replace(n_nodes=state.n_nodes.at[0].set(cfg.n_nodes + 1))
+    _, ok = sched.first_fit(state, jnp.int32(0), cfg.max_nodes_per_job)
+    assert not bool(ok)
+
+
+def test_easy_backfills_short_job_past_blocked_head():
+    """Node-exclusive jobs: job0 holds 7/8 nodes; the head wants all 8 and
+    must wait; a short 1-node job backfills into the free node under EASY
+    but NOT under plain FCFS."""
+    from repro.configs.sim import NodeType, SimConfig
+    from repro.core.sim import make_step
+
+    cfg = SimConfig(
+        name="uniform",
+        node_types=(NodeType("n", 8, 16, 0, 64.0, 100.0, 200.0, 0.0, 0.0,
+                             1000.0),),
+        max_jobs=16, max_nodes_per_job=8, sched_max_candidates=4,
+    )
+    statics = build_statics(cfg)
+    jobs = {
+        "submit_t": np.array([0.0, 1.0, 2.0], np.float32),
+        "dur": np.array([1000.0, 1000.0, 30.0], np.float32),
+        "n_nodes": np.array([7, 8, 1], np.int32),
+        # 16 cores/node = node-exclusive
+        "req": np.tile(np.array([[16.0], [0.0], [1.0]], np.float32), (1, 3)),
+        "priority": np.zeros(3, np.float32),
+    }
+    results = {}
+    for sched_name in ("easy", "fcfs"):
+        state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+        step = jax.jit(make_step(cfg, statics, sched_name))
+        s = state
+        for _ in range(20):
+            s, _ = step(s, jnp.int32(-1))
+        results[sched_name] = np.asarray(s.jstate)[:3]
+    assert results["easy"][0] == 2     # job0 running
+    assert results["easy"][1] == 1     # head blocked (reserved)
+    assert results["easy"][2] == 2     # short job backfilled
+    assert results["fcfs"][2] == 1     # FCFS head-of-line blocks it
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    submit=st.lists(st.floats(0, 500), min_size=3, max_size=12),
+    durs=st.lists(st.floats(10, 800), min_size=3, max_size=12),
+)
+def test_property_selection_always_valid(submit, durs):
+    n = min(len(submit), len(durs))
+    cfg = tiny_cluster()
+    _, state = _state_with(cfg, submit[:n], durs[:n], [1] * n)
+    for name, fn in sched.SCHEDULERS.items():
+        j = int(fn(cfg, state))
+        queued = np.asarray(sched.queued_mask(state))
+        if j >= 0:
+            assert queued[j], f"{name} picked a non-queued job"
+        else:
+            if name not in ("replay",):  # replay may legitimately wait
+                assert not queued.any(), f"{name} returned -1 with queued jobs"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 30))
+def test_property_rl_candidates_are_queued_fcfs_prefix(seed):
+    from repro.data import synth_workload
+
+    cfg = tiny_cluster()
+    jobs, bank = synth_workload(cfg, 24, 600.0, seed=seed)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    state = state._replace(t=jnp.float32(300.0))
+    cands = np.asarray(sched.rl_candidates(cfg, state))
+    queued = np.asarray(sched.queued_mask(state))
+    subs = np.asarray(state.submit_t)
+    valid = cands[cands >= 0]
+    assert queued[valid].all()
+    # FCFS-ordered
+    assert (np.diff(subs[valid]) >= -1e-6).all()

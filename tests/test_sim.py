@@ -1,0 +1,114 @@
+"""Simulator invariants (unit + hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.sim import tiny_cluster
+from repro.core import (
+    QUEUED,
+    RUNNING,
+    build_statics,
+    init_state,
+    load_jobs,
+    make_step,
+    run_episode,
+    summary,
+)
+from repro.data import synth_workload
+
+
+def _setup(seed=0, n_jobs=32, horizon=1200.0, **cfg_kw):
+    cfg = tiny_cluster(**cfg_kw)
+    jobs, bank = synth_workload(cfg, n_jobs, horizon, seed=seed)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(seed)), jobs)
+    return cfg, statics, state, jobs
+
+
+def test_resources_never_oversubscribed():
+    cfg, statics, state, _ = _setup()
+    step = make_step(cfg, statics, "fcfs")
+
+    s = state
+    for _ in range(300):
+        s, _ = jax.jit(step)(s, jnp.int32(-1))
+    free = np.asarray(s.free)
+    cap = np.asarray(statics.capacity)
+    assert (free >= -1e-3).all(), "negative free resources"
+    assert (free <= cap + 1e-3).all(), "free exceeds capacity"
+
+
+def test_energy_accounting_consistent():
+    cfg, statics, state, _ = _setup()
+    fs, outs = jax.jit(
+        lambda s: run_episode(cfg, statics, s, 600, "fcfs")
+    )(state)
+    # facility energy equals the per-step integral
+    total = float(jnp.sum(outs.energy_kwh_step))
+    assert abs(total - float(fs.energy_kwh)) < 1e-3
+    # facility = IT + losses + cooling
+    parts = (float(fs.it_energy_kwh) + float(fs.loss_energy_kwh)
+             + float(fs.cool_energy_kwh))
+    assert abs(parts - total) / max(total, 1e-9) < 1e-3
+    # PUE sane
+    s = summary(fs)
+    assert 1.0 < s["avg_pue"] < 2.0
+
+
+def test_idle_datacenter_power_is_idle_only():
+    cfg = tiny_cluster()
+    statics = build_statics(cfg)
+    state = init_state(cfg, statics, jax.random.key(0))
+    fs, outs = jax.jit(lambda s: run_episode(cfg, statics, s, 10, "fcfs"))(state)
+    expect_it = float(jnp.sum(statics.idle_w))
+    np.testing.assert_allclose(np.asarray(outs.it_w), expect_it, rtol=1e-5)
+
+
+def test_completed_jobs_eventually_all_finish():
+    cfg, statics, state, jobs = _setup(n_jobs=16, horizon=600.0)
+    fs, _ = jax.jit(lambda s: run_episode(cfg, statics, s, 8000, "fcfs"))(state)
+    assert float(fs.n_completed) == 16
+
+
+def test_failures_requeue_and_stats():
+    cfg, statics, state, _ = _setup(node_mtbf_hours=0.05, node_repair_hours=0.01)
+    fs, _ = jax.jit(lambda s: run_episode(cfg, statics, s, 3000, "fcfs"))(state)
+    assert float(fs.n_killed) > 0, "MTBF 3 min should kill some jobs"
+    # killed jobs are requeued and eventually complete or remain queued —
+    # never lost
+    states = np.asarray(fs.jstate)
+    assert (states <= 3).all()
+
+
+def test_sjf_improves_mean_wait_over_fcfs_on_bimodal_load():
+    cfg, statics, state, _ = _setup(n_jobs=40, horizon=300.0, seed=3)
+    r = {}
+    for sched in ("fcfs", "sjf"):
+        fs, _ = jax.jit(
+            lambda s, sched=sched: run_episode(cfg, statics, s, 4000, sched)
+        )(state)
+        r[sched] = summary(fs)
+    assert r["sjf"]["mean_slowdown"] <= r["fcfs"]["mean_slowdown"] * 1.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), sched=st.sampled_from(["fcfs", "sjf", "easy"]))
+def test_property_invariants_random_workloads(seed, sched):
+    cfg, statics, state, _ = _setup(seed=seed, n_jobs=24, horizon=900.0)
+    fs, outs = jax.jit(
+        lambda s: run_episode(cfg, statics, s, 500, sched)
+    )(state)
+    # power within physical bounds
+    pmax = float(jnp.sum(statics.node_max_w)) * 1.4 / 0.9 + 1.0
+    assert float(jnp.max(outs.facility_w)) <= pmax
+    assert float(jnp.min(outs.facility_w)) >= 0.0
+    # job-state machine: no job both running and done; counts conserved
+    js = np.asarray(fs.jstate)
+    assert ((js >= 0) & (js <= 3)).all()
+    # completions monotone: completed_now never negative
+    assert float(jnp.min(outs.completed_now)) >= 0.0
+    # free resources bounded
+    assert (np.asarray(fs.free) >= -1e-3).all()
