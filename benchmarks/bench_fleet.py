@@ -1,0 +1,57 @@
+"""Fleet-scale scenario-sweep benchmark: aggregate env-steps/sec of the
+vmapped twin (``run_fleet``) vs replica count, with heterogeneous grid
+scenarios (the workload the ROADMAP's "as many scenarios as you can
+imagine" north-star asks for)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]
+
+
+def bench_fleet() -> List[Row]:
+    import numpy as np
+
+    from repro.configs.sim import tiny_cluster
+    from repro.core import build_statics, init_state, load_jobs, run_fleet
+    from repro.data import synth_workload
+    from repro.scenarios import sample_scenarios
+
+    cfg = tiny_cluster()
+    jobs, bank = synth_workload(cfg, 32, 900.0, seed=0)
+    statics = build_statics(cfg, bank)
+    st = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    n_steps = 200
+
+    rows: List[Row] = []
+    base_sps = None
+    for R in (1, 16, 64, 256):
+        scns = sample_scenarios(cfg, R, seed=R)
+
+        def run(state):
+            return run_fleet(cfg, statics, state, n_steps, "fcfs",
+                             scenarios=scns)
+
+        fs, _ = run(st)  # compile
+        jax.block_until_ready(fs.t)
+        t0 = time.perf_counter()
+        n_rep = 3
+        for _ in range(n_rep):
+            fs, _ = run(st)
+        jax.block_until_ready(fs.t)
+        dt = (time.perf_counter() - t0) / n_rep
+
+        sps = n_steps * R / dt
+        if base_sps is None:
+            base_sps = sps
+        n_capped = int(np.sum(np.asarray(scns.power_cap.cap_w).max(-1) > 0))
+        rows.append((
+            f"fleet_{R}replicas", dt / n_steps * 1e6,
+            f"agg_steps_per_s={sps:,.0f};speedup_vs_1={sps/base_sps:.1f}x;"
+            f"dr_scenarios={n_capped}/{R}",
+        ))
+    return rows

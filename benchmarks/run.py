@@ -7,6 +7,7 @@
   power_prediction_replay  Fig 2 bottom    (power prediction from replay)
   congestion_bw_*          network-congestion model [14]
   vmapped_sim_*            beyond-paper: vectorized-twin RL throughput
+  fleet_*replicas          beyond-paper: scenario-sweep fleet throughput
   pallas_*                 kernel microbenches vs oracles
   train/decode_reduced_*   LM substrate throughput (reduced configs)
   roofline_flops_crosscheck  analytic perfmodel vs compiled dry-run
@@ -20,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
+    from benchmarks.bench_fleet import bench_fleet
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_lm import (
         bench_decode_reduced,
@@ -42,6 +44,7 @@ def main() -> None:
         bench_congestion_model,
         bench_rl_training,
         bench_vectorized_envs,
+        bench_fleet,
         bench_kernels,
         bench_train_reduced,
         bench_decode_reduced,

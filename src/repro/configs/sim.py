@@ -56,6 +56,9 @@ class SimConfig:
     carbon_mean: float = 380.0
     carbon_amp: float = 120.0
     day_seconds: float = 86_400.0
+    # electricity price (diurnal, $/kWh; evening peak)
+    price_mean_usd_kwh: float = 0.11
+    price_amp_usd_kwh: float = 0.04
     # network (inter-job congestion; Lassen-style bytes in/out coupling)
     bisection_gbps: float = 2_400.0   # system bisection bandwidth
     congestion_exp: float = 1.5       # slowdown = (1 + load^exp) beyond knee
@@ -79,6 +82,16 @@ class SimConfig:
     @property
     def n_types(self) -> int:
         return len(self.node_types)
+
+    @property
+    def nameplate_it_w(self) -> float:
+        """All-nodes-at-full-load IT power (sum of per-node node_max_w);
+        the reference scale for sizing demand-response caps."""
+        return sum(
+            t.count * (t.idle_w + t.gpus * t.gpu_idle_w + t.cpu_dyn_w
+                       + t.gpus * t.gpu_dyn_w)
+            for t in self.node_types
+        )
 
 
 def tx_gaia(**overrides) -> SimConfig:

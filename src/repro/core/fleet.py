@@ -1,0 +1,81 @@
+"""Vmapped fleet runner: N datacenter replicas, heterogeneous grid
+scenarios, one compiled call.
+
+``run_fleet`` broadcasts one initial ``SimState``/``Statics`` across R
+replicas, installs a per-replica ``Scenario`` (batched pytree from
+``scenarios.stack_scenarios`` / ``sample_scenarios``), splits the PRNG key
+per replica, and runs ``vmap(lax.scan(step))`` under a single ``jit`` —
+the scenario-sweep engine for the paper's sustainability-policy studies.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.sim import SimConfig
+from repro.core.sim import StepOut, run_episode, summary
+from repro.core.state import SimState, Statics
+from repro.scenarios.scenario import Scenario, n_replicas, stack_scenarios
+
+
+def _ensure_batched(scenarios) -> Scenario:
+    # NB: Scenario is itself a (Named)tuple — test for it first
+    if isinstance(scenarios, Scenario):
+        return scenarios
+    return stack_scenarios(list(scenarios))
+
+
+# Module-level so repeated run_fleet calls with the same static config reuse
+# the compiled executable (cfg is a frozen dataclass => hashable; statics /
+# scenarios / state / keys are traced).
+@partial(jax.jit, static_argnames=("cfg", "n_steps", "scheduler", "kw_items"))
+def _fleet(cfg, statics, scenarios, state, keys, n_steps, scheduler, kw_items):
+    kw = dict(kw_items)
+
+    def one(scn: Scenario, key: jax.Array):
+        st = state._replace(key=key)
+        stt = statics._replace(scenario=scn)
+        return run_episode(cfg, stt, st, n_steps, scheduler, **kw)
+
+    return jax.vmap(one)(scenarios, keys)
+
+
+def run_fleet(
+    cfg: SimConfig,
+    statics: Statics,
+    state: SimState,
+    n_steps: int,
+    scheduler: str = "fcfs",
+    *,
+    scenarios: Scenario | Sequence[Scenario] | None = None,
+    **kw,
+) -> Tuple[SimState, StepOut]:
+    """Simulate R replicas of the twin for ``n_steps`` in one jitted call.
+
+    ``scenarios``: batched Scenario (leading replica axis), a list of
+    Scenarios (stacked here), or None (R=1, the statics' own scenario).
+    All other statics (node constants, telemetry bank) and the initial
+    state are shared and broadcast; each replica gets its own PRNG stream.
+
+    Returns (final_states, outs) with a leading replica axis on every leaf.
+    """
+    if scenarios is None:
+        scenarios = stack_scenarios([statics.scenario])
+    else:
+        scenarios = _ensure_batched(scenarios)
+    R = n_replicas(scenarios)
+    keys = jax.random.split(state.key, R)
+    kw_items = tuple(sorted(kw.items()))
+    return _fleet(cfg, statics, scenarios, state, keys, n_steps, scheduler,
+                  kw_items)
+
+
+def fleet_summary(final_states: SimState) -> List[Dict[str, float]]:
+    """Per-replica ``summary`` dicts from batched final states."""
+    host = jax.device_get(final_states)        # one transfer, not R x fields
+    R = int(np.shape(host.t)[0])
+    return [summary(jax.tree.map(lambda a: a[i], host)) for i in range(R)]

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.sim import SimConfig
 from repro.core.state import RUNNING, NRES, SimState, Statics
 from repro.kernels.ref import node_power_ref
+from repro.scenarios.signals import eval_signal
 
 
 class PowerOut(NamedTuple):
@@ -67,12 +68,16 @@ def node_loads(cfg: SimConfig, state: SimState, statics: Statics,
 
 
 def wetbulb_c(cfg: SimConfig, t: jax.Array) -> jax.Array:
+    """Legacy parametric wetbulb; ``default_scenario`` reproduces this.
+    The sim itself now reads ``statics.scenario.wetbulb``."""
     phase = 2 * jnp.pi * (t / cfg.day_seconds)
     return cfg.wetbulb_mean_c + cfg.wetbulb_amp_c * jnp.sin(phase - jnp.pi / 2)
 
 
 def carbon_intensity(cfg: SimConfig, t: jax.Array) -> jax.Array:
-    """gCO2/kWh, diurnal (higher at night when solar is absent)."""
+    """Legacy parametric gCO2/kWh (higher at night when solar is absent);
+    ``default_scenario`` reproduces this. The sim itself now reads
+    ``statics.scenario.carbon``."""
     phase = 2 * jnp.pi * (t / cfg.day_seconds)
     return cfg.carbon_mean - cfg.carbon_amp * jnp.sin(phase - jnp.pi / 2)
 
@@ -104,8 +109,9 @@ def compute_power(cfg: SimConfig, state: SimState, statics: Statics,
 
     it_w = jnp.sum(node_it)
     input_w = jnp.sum(node_input)
+    wb = eval_signal(statics.scenario.wetbulb, state.t)
     cop = jnp.maximum(
-        cfg.cop_base + cfg.cop_wetbulb_coef * (wetbulb_c(cfg, state.t) - cfg.wetbulb_ref_c),
+        cfg.cop_base + cfg.cop_wetbulb_coef * (wb - cfg.wetbulb_ref_c),
         1.5,
     )
     cooling_w = input_w / cop

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 from repro.configs.sim import SimConfig
 from repro.core import schedulers as sched
 from repro.core.network import congestion_slowdown
-from repro.core.power import PowerOut, carbon_intensity, compute_power
+from repro.core.power import PowerOut, compute_power
+from repro.scenarios.events import power_cap_at
+from repro.scenarios.signals import eval_signal
 from repro.core.state import (
     DONE,
     EMPTY,
@@ -48,6 +50,12 @@ class StepOut(NamedTuple):
     carbon_kg_step: jax.Array
     net_load: jax.Array
     reward: jax.Array
+    # grid-signal telemetry (scenario engine)
+    carbon_gkwh: jax.Array     # instantaneous grid carbon intensity
+    price_usd_kwh: jax.Array   # instantaneous electricity price
+    power_cap_w: jax.Array     # effective facility cap (0 = uncapped)
+    cost_usd_step: jax.Array   # electricity cost of this step
+    throttle: jax.Array        # DVFS clock fraction applied [floor, 1]
 
 
 # ---------------------------------------------------------------------------
@@ -141,18 +149,22 @@ def make_step(
     scheduler: str = "fcfs",
     *,
     starts_per_step: int = 2,
-    reward_weights: Tuple[float, float, float, float] = (1.0, 1.0, 1.0, 0.05),
+    reward_weights: Tuple[float, ...] = (1.0, 1.0, 1.0, 0.05),
     use_power_kernel: bool = False,
 ):
     """Returns step(state, action) -> (state, StepOut).
 
     ``action``: int32 — for the 'rl' scheduler, index into
     ``rl_candidates`` (k = no-op at index k); ignored otherwise.
-    reward_weights = (w_throughput, w_energy, w_carbon, w_queue).
+    reward_weights = (w_throughput, w_energy, w_carbon, w_queue[, w_cost]);
+    w_cost scales the electricity-price penalty (default 0 — off).
     """
     if scheduler != "rl" and scheduler not in sched.SCHEDULERS:
         raise KeyError(f"unknown scheduler {scheduler}")
-    w_thr, w_en, w_co2, w_q = reward_weights
+    if len(reward_weights) not in (4, 5):
+        raise ValueError("reward_weights must have 4 or 5 entries")
+    w_thr, w_en, w_co2, w_q = reward_weights[:4]
+    w_cost = reward_weights[4] if len(reward_weights) == 5 else 0.0
 
     def step(state: SimState, action: jax.Array) -> Tuple[SimState, StepOut]:
         state = state._replace(t=state.t + cfg.dt)
@@ -174,25 +186,34 @@ def make_step(
         # --- power chain (pre-throttle)
         p: PowerOut = compute_power(cfg, state, statics, use_kernel=use_power_kernel)
 
+        # --- grid signals at t (scenario engine)
+        scn = statics.scenario
+        carbon_g = eval_signal(scn.carbon, state.t)          # gCO2/kWh
+        price = eval_signal(scn.price, state.t)              # $/kWh
+        cap_w = power_cap_at(scn.power_cap, state.t)         # W; 0 = uncapped
+
         # --- demand response: DVFS-throttle to the facility power cap
-        # (DCFlex-style [3]; linear dynamic-power/progress model)
-        throttle = jnp.float32(1.0)
-        if cfg.power_cap_w > 0:
-            idle_total = jnp.sum(statics.idle_w * state.node_up)
-            dyn = jnp.maximum(p.it_w - idle_total, 0.0)
-            # facility ~ it * overhead; solve idle + a*dyn <= cap/overhead
-            overhead = p.facility_w / jnp.maximum(p.it_w, 1.0)
-            cap_it = cfg.power_cap_w / jnp.maximum(overhead, 1e-6)
-            throttle = jnp.clip(
-                (cap_it - idle_total) / jnp.maximum(dyn, 1.0),
-                cfg.throttle_floor, 1.0,
-            )
-            r = (idle_total + throttle * dyn) / jnp.maximum(p.it_w, 1.0)
-            p = p._replace(
-                it_w=p.it_w * r, input_w=p.input_w * r,
-                cooling_w=p.cooling_w * r, facility_w=p.facility_w * r,
-                gflops=p.gflops * throttle,
-            )
+        # (DCFlex-style [3]; linear dynamic-power/progress model). The cap
+        # is a traced value so scheduled events switch inside one compiled
+        # step; `capped` gates the rescale exactly off when uncapped.
+        capped = cap_w > 0.0
+        idle_total = jnp.sum(statics.idle_w * state.node_up)
+        dyn = jnp.maximum(p.it_w - idle_total, 0.0)
+        # facility ~ it * overhead; solve idle + a*dyn <= cap/overhead
+        overhead = p.facility_w / jnp.maximum(p.it_w, 1.0)
+        cap_it = cap_w / jnp.maximum(overhead, 1e-6)
+        throttle = jnp.clip(
+            (cap_it - idle_total) / jnp.maximum(dyn, 1.0),
+            cfg.throttle_floor, 1.0,
+        )
+        throttle = jnp.where(capped, throttle, 1.0)
+        r = (idle_total + throttle * dyn) / jnp.maximum(p.it_w, 1.0)
+        r = jnp.where(capped, r, 1.0)
+        p = p._replace(
+            it_w=p.it_w * r, input_w=p.input_w * r,
+            cooling_w=p.cooling_w * r, facility_w=p.facility_w * r,
+            gflops=p.gflops * throttle,
+        )
 
         # --- progress (congestion- and throttle-aware)
         rate, net_load = congestion_slowdown(cfg, state, statics)
@@ -203,7 +224,8 @@ def make_step(
         it_step = p.it_w * dt_h / 1000.0
         loss_step = (p.input_w - p.it_w) * dt_h / 1000.0
         cool_step = p.cooling_w * dt_h / 1000.0
-        co2_step = e_step * carbon_intensity(cfg, state.t) / 1000.0  # kg
+        co2_step = e_step * carbon_g / 1000.0                # kg
+        cost_step = e_step * price                           # $
 
         running = jnp.sum(state.jstate == RUNNING).astype(jnp.float32)
         queued = jnp.sum(sched.queued_mask(state)).astype(jnp.float32)
@@ -220,6 +242,7 @@ def make_step(
             loss_energy_kwh=state.loss_energy_kwh + loss_step,
             cool_energy_kwh=state.cool_energy_kwh + cool_step,
             carbon_kg=state.carbon_kg + co2_step,
+            elec_cost_usd=state.elec_cost_usd + cost_step,
             flops_integral=state.flops_integral + p.gflops * cfg.dt,
             sum_power_w=state.sum_power_w + p.facility_w,
             n_steps=state.n_steps + 1.0,
@@ -232,6 +255,9 @@ def make_step(
             - w_en * e_step / jnp.maximum(cfg.n_nodes * 0.4 * dt_h, 1e-9) * 0.1
             - w_co2 * co2_step / jnp.maximum(cfg.n_nodes * 0.15 * dt_h, 1e-9) * 0.1
             - w_q * queued * 0.01
+            - w_cost * cost_step
+            / jnp.maximum(cfg.n_nodes * 0.4 * dt_h * cfg.price_mean_usd_kwh, 1e-9)
+            * 0.1
         )
 
         out = StepOut(
@@ -239,6 +265,8 @@ def make_step(
             queue_len=queued, running=running, completed_now=n_done,
             energy_kwh_step=e_step, carbon_kg_step=co2_step,
             net_load=net_load, reward=reward,
+            carbon_gkwh=carbon_g, price_usd_kwh=price, power_cap_w=cap_w,
+            cost_usd_step=cost_step, throttle=throttle,
         )
         return state, out
 
@@ -274,6 +302,7 @@ def summary(state: SimState) -> dict:
         "loss_energy_kwh": float(state.loss_energy_kwh),
         "cooling_energy_kwh": float(state.cool_energy_kwh),
         "carbon_kg": float(state.carbon_kg),
+        "elec_cost_usd": float(state.elec_cost_usd),
         "mean_power_w": float(state.sum_power_w) / max(float(state.n_steps), 1.0),
         "mean_wait_s": float(state.sum_wait) / n,
         "mean_slowdown": float(state.sum_slowdown) / n,

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.sim import SimConfig
+from repro.scenarios.scenario import Scenario, default_scenario
 
 EMPTY, QUEUED, RUNNING, DONE = 0, 1, 2, 3
 NRES = 3  # cpu cores, gpus, mem_gb
@@ -32,6 +33,8 @@ class Statics(NamedTuple):
     cpu_trace: jax.Array       # (J, Q) in [0,1]
     gpu_trace: jax.Array       # (J, Q)
     net_tx: jax.Array          # (J,) GB/s per job (congestion model)
+    # grid context: carbon/price/wetbulb signals + power-cap events
+    scenario: Scenario
 
 
 class SimState(NamedTuple):
@@ -59,6 +62,7 @@ class SimState(NamedTuple):
     loss_energy_kwh: jax.Array  # rectification+conversion losses
     cool_energy_kwh: jax.Array
     carbon_kg: jax.Array
+    elec_cost_usd: jax.Array   # facility energy x price signal
     flops_integral: jax.Array  # GFLOP delivered (utilization-weighted)
     n_completed: jax.Array
     n_killed: jax.Array
@@ -68,7 +72,11 @@ class SimState(NamedTuple):
     n_steps: jax.Array
 
 
-def build_statics(cfg: SimConfig, trace_bank: Dict[str, Any] | None = None) -> Statics:
+def build_statics(
+    cfg: SimConfig,
+    trace_bank: Dict[str, Any] | None = None,
+    scenario: Scenario | None = None,
+) -> Statics:
     """Expand per-type node constants into per-node arrays."""
     caps, types, idle, cdyn, gdyn, nmax, gflops = [], [], [], [], [], [], []
     for ti, t in enumerate(cfg.node_types):
@@ -99,6 +107,7 @@ def build_statics(cfg: SimConfig, trace_bank: Dict[str, Any] | None = None) -> S
         cpu_trace=jnp.asarray(trace_bank["cpu"], jnp.float32),
         gpu_trace=jnp.asarray(trace_bank["gpu"], jnp.float32),
         net_tx=jnp.asarray(trace_bank["net_tx"], jnp.float32),
+        scenario=scenario if scenario is not None else default_scenario(cfg),
     )
 
 
@@ -130,6 +139,7 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
         loss_energy_kwh=f(0.0),
         cool_energy_kwh=f(0.0),
         carbon_kg=f(0.0),
+        elec_cost_usd=f(0.0),
         flops_integral=f(0.0),
         n_completed=f(0.0),
         n_killed=f(0.0),

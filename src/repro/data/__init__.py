@@ -1,3 +1,8 @@
+from repro.data.grid_signals import (
+    load_signal_csv,
+    synth_grid_trace,
+    write_signal_csv,
+)
 from repro.data.synth_trace import synth_workload
 from repro.data.trace_io import load_supercloud, write_supercloud_csvs
 from repro.data.synth_lm import lm_batches, lm_batch_at

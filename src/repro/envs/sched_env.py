@@ -21,8 +21,8 @@ import numpy as np
 
 from repro.configs.sim import SimConfig
 from repro.core import schedulers as sched
-from repro.core.power import carbon_intensity
 from repro.core.sim import make_step
+from repro.scenarios import Scenario, eval_signal, power_cap_at
 from repro.core.state import (
     QUEUED,
     RUNNING,
@@ -51,8 +51,10 @@ class SchedEnv:
         episode_steps: int = 512,
         sim_steps_per_action: int = 15,
         reward_weights=(1.0, 1.0, 1.0, 0.05),
+        scenario: Scenario | None = None,
     ):
         self.cfg = cfg
+        self.reward_weights = tuple(reward_weights)
         self.episode_steps = episode_steps
         self.k = cfg.sched_max_candidates
         self.n_actions = self.k + 1
@@ -98,10 +100,10 @@ class SchedEnv:
             for name in padded[0]
         }
         self.n_workloads = len(workloads)
-        self._base_statics = build_statics(cfg)  # node constants
-        self._step_fn = make_step(
-            cfg, self._base_statics, "rl", reward_weights=reward_weights
-        )
+        # node constants + grid scenario (default: legacy diurnal sinusoids)
+        self._base_statics = build_statics(cfg, scenario=scenario)
+        # validate weights eagerly (step() builds the real step fn per call)
+        make_step(cfg, self._base_statics, "rl", reward_weights=reward_weights)
         self.obs_dim = int(self._obs_spec())
 
     # ------------------------------------------------------------------ api
@@ -134,8 +136,7 @@ class SchedEnv:
         self, st: EnvState, action: jax.Array
     ) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
         step_fn = make_step(
-            self.cfg, st.statics, "rl",
-            reward_weights=self._step_fn_weights()
+            self.cfg, st.statics, "rl", reward_weights=self.reward_weights
         )
 
         def sub(carry, i):
@@ -160,22 +161,25 @@ class SchedEnv:
         }
         return st, self.observe(st), reward, done, info
 
-    def _step_fn_weights(self):
-        return (1.0, 1.0, 1.0, 0.05)
-
     # ------------------------------------------------------------ features
     def _obs_spec(self) -> int:
         n_types = self.cfg.n_types
-        return 8 + 3 * n_types + 8 * self.k
+        return 10 + 3 * n_types + 8 * self.k
 
     def observe(self, st: EnvState) -> jax.Array:
         cfg, sim, statics = self.cfg, st.sim, st.statics
         day = 2 * jnp.pi * sim.t / cfg.day_seconds
         queued = jnp.sum(sched.queued_mask(sim)).astype(jnp.float32)
         running = jnp.sum(sim.jstate == RUNNING).astype(jnp.float32)
-        co2 = carbon_intensity(cfg, sim.t) / max(cfg.carbon_mean, 1.0)
+        scn = statics.scenario
+        co2 = eval_signal(scn.carbon, sim.t) / max(cfg.carbon_mean, 1.0)
+        price = eval_signal(scn.price, sim.t) / max(cfg.price_mean_usd_kwh, 1e-6)
+        # cap as a fraction of nameplate node power; 1 = effectively uncapped
+        cap_w = power_cap_at(scn.power_cap, sim.t)
+        nameplate = jnp.maximum(jnp.sum(statics.node_max_w), 1.0)
+        cap_frac = jnp.where(cap_w > 0, jnp.minimum(cap_w / nameplate, 1.0), 1.0)
         glob = jnp.stack([
-            jnp.sin(day), jnp.cos(day), co2,
+            jnp.sin(day), jnp.cos(day), co2, price, cap_frac,
             queued / cfg.max_jobs, running / cfg.max_jobs,
             jnp.sum(sim.node_up) / cfg.n_nodes,
             sim.t / cfg.day_seconds,

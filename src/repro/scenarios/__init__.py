@@ -1,0 +1,24 @@
+"""Grid-signal scenario engine: pluggable, jit-able time-varying carbon /
+price / weather signals and demand-response power-cap events for the twin."""
+
+from repro.scenarios.events import CapSchedule, cap_events, no_cap, power_cap_at
+from repro.scenarios.scenario import (
+    SCENARIOS,
+    Scenario,
+    carbon_trace,
+    default_scenario,
+    demand_response,
+    heatwave,
+    n_replicas,
+    sample_scenarios,
+    solar_heavy,
+    stack_scenarios,
+)
+from repro.scenarios.signals import (
+    Signal,
+    constant,
+    eval_signal,
+    from_trace,
+    sinusoid,
+    to_trace,
+)

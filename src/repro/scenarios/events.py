@@ -1,0 +1,71 @@
+"""Scheduled demand-response events: time-windowed facility power caps.
+
+A ``CapSchedule`` holds up to E events, each ``[start_t, end_t)`` with a
+facility-power cap in watts, plus a standing base cap. ``power_cap_at``
+returns the effective cap at time t (the tightest of base + active events),
+with 0.0 meaning "uncapped" — matching the legacy ``cfg.power_cap_w``
+convention consumed by the DVFS throttle in ``core/sim.py``.
+
+Fixed shape (E is padded, inactive slots have cap 0) so schedules vmap
+across fleet replicas.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INF = jnp.float32(jnp.inf)
+
+
+class CapSchedule(NamedTuple):
+    start_t: jax.Array     # (E,) event window start [s]
+    end_t: jax.Array       # (E,) event window end [s] (exclusive)
+    cap_w: jax.Array       # (E,) facility cap during event [W]; 0 = padding
+    base_cap_w: jax.Array  # scalar standing cap [W]; 0 = uncapped
+
+
+def no_cap(base_cap_w: float = 0.0, n_events: int = 1) -> CapSchedule:
+    """Schedule with no events (only the standing base cap, if any)."""
+    E = max(n_events, 1)
+    z = jnp.zeros((E,), jnp.float32)
+    return CapSchedule(start_t=z, end_t=z, cap_w=z,
+                       base_cap_w=jnp.float32(base_cap_w))
+
+
+def cap_events(
+    starts: Sequence[float],
+    ends: Sequence[float],
+    caps_w: Sequence[float],
+    base_cap_w: float = 0.0,
+    *,
+    n_events: int | None = None,
+) -> CapSchedule:
+    """Build a schedule from parallel event lists, padded to ``n_events``."""
+    s = np.asarray(starts, np.float32).reshape(-1)
+    e = np.asarray(ends, np.float32).reshape(-1)
+    c = np.asarray(caps_w, np.float32).reshape(-1)
+    if not (s.shape == e.shape == c.shape):
+        raise ValueError("starts/ends/caps_w must have equal lengths")
+    if np.any(e < s):
+        raise ValueError("event end_t before start_t")
+    E = max(n_events or s.size, s.size, 1)
+    pad = E - s.size
+    if pad:
+        s = np.concatenate([s, np.zeros(pad, np.float32)])
+        e = np.concatenate([e, np.zeros(pad, np.float32)])
+        c = np.concatenate([c, np.zeros(pad, np.float32)])
+    return CapSchedule(start_t=jnp.asarray(s), end_t=jnp.asarray(e),
+                       cap_w=jnp.asarray(c), base_cap_w=jnp.float32(base_cap_w))
+
+
+def power_cap_at(sched: CapSchedule, t: jax.Array) -> jax.Array:
+    """Effective facility cap [W] at time t; 0.0 when uncapped."""
+    active = (t >= sched.start_t) & (t < sched.end_t) & (sched.cap_w > 0.0)
+    event_cap = jnp.min(jnp.where(active, sched.cap_w, _INF))
+    base = jnp.where(sched.base_cap_w > 0.0, sched.base_cap_w, _INF)
+    cap = jnp.minimum(event_cap, base)
+    return jnp.where(jnp.isfinite(cap), cap, 0.0)

@@ -1,0 +1,117 @@
+"""Jit-able time-series grid signals.
+
+A ``Signal`` is a fixed-shape pytree that evaluates to a scalar at any sim
+time ``t`` under jit/vmap/scan. Two families share one representation so a
+single compiled ``step`` serves both:
+
+  * parametric — sinusoid (mean, amp, period, phase) plus an optional
+    deterministic multi-harmonic "weather noise" term (no PRNG key needed,
+    so evaluation stays a pure function of ``t``);
+  * trace — a sampled array linearly interpolated at ``t`` (edge-hold
+    outside the sampled range), for replaying real grid-operator data.
+
+``use_trace`` selects the family at evaluation time, which keeps the pytree
+structure identical across scenarios — the property that lets a fleet of
+replicas with heterogeneous scenarios run in one ``vmap``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Signal(NamedTuple):
+    """Scalar time series; evaluate with ``eval_signal(sig, t)``."""
+
+    mean: jax.Array        # parametric: offset
+    amp: jax.Array         # parametric: sinusoid amplitude
+    period_s: jax.Array    # parametric: sinusoid period [s]
+    phase: jax.Array       # parametric: phase [rad]
+    noise_amp: jax.Array   # parametric: amplitude of harmonic noise
+    noise_seed: jax.Array  # parametric: phase-offset seed for the noise
+    values: jax.Array      # trace: (T,) samples, T >= 2
+    t0: jax.Array          # trace: time of values[0] [s]
+    dt: jax.Array          # trace: sample spacing [s]
+    use_trace: jax.Array   # {0., 1.}: trace vs parametric family
+
+
+def _f(x) -> jax.Array:
+    return jnp.asarray(x, jnp.float32)
+
+
+def sinusoid(
+    mean: float,
+    amp: float = 0.0,
+    period_s: float = 86_400.0,
+    phase: float = 0.0,
+    *,
+    noise_amp: float = 0.0,
+    noise_seed: float = 0.0,
+) -> Signal:
+    """``mean + amp * sin(2*pi*t/period + phase) [+ noise]``."""
+    return Signal(
+        mean=_f(mean), amp=_f(amp), period_s=_f(period_s), phase=_f(phase),
+        noise_amp=_f(noise_amp), noise_seed=_f(noise_seed),
+        values=jnp.zeros((2,), jnp.float32), t0=_f(0.0), dt=_f(1.0),
+        use_trace=_f(0.0),
+    )
+
+
+def constant(value: float) -> Signal:
+    return sinusoid(value, 0.0)
+
+
+def from_trace(values, dt: float, t0: float = 0.0) -> Signal:
+    """Sampled trace, linearly interpolated; edge-hold outside [t0, t_end]."""
+    v = np.asarray(values, np.float32).reshape(-1)
+    if v.size == 0:
+        raise ValueError("trace signal needs at least one sample")
+    if v.size == 1:
+        v = np.repeat(v, 2)
+    return Signal(
+        mean=_f(float(v.mean())), amp=_f(0.0), period_s=_f(86_400.0),
+        phase=_f(0.0), noise_amp=_f(0.0), noise_seed=_f(0.0),
+        values=jnp.asarray(v), t0=_f(t0), dt=_f(dt), use_trace=_f(1.0),
+    )
+
+
+# incommensurate harmonic multipliers: noise never repeats within a period
+_NOISE_HARMONICS = (2.718, 5.196, 9.424, 17.03)
+
+
+def _harmonic_noise(sig: Signal, t: jax.Array) -> jax.Array:
+    """Deterministic O(1)-amplitude wander, a cheap stand-in for weather /
+    grid-mix stochasticity that keeps eval a pure function of t."""
+    h = jnp.asarray(_NOISE_HARMONICS, jnp.float32)
+    w = 2.0 * jnp.pi * h / jnp.maximum(sig.period_s, 1e-6)
+    # golden-angle phase spread; seed shifts all phases together
+    ph = sig.noise_seed * (1.0 + jnp.arange(h.shape[0], dtype=jnp.float32)) * 2.39996
+    return jnp.sum(jnp.sin(w * t + ph)) / jnp.sqrt(jnp.float32(len(_NOISE_HARMONICS)))
+
+
+def eval_signal(sig: Signal, t: jax.Array) -> jax.Array:
+    """Evaluate ``sig`` at time ``t`` (scalar f32). Pure & jit/vmap-safe."""
+    x = 2.0 * jnp.pi * t / jnp.maximum(sig.period_s, 1e-6) + sig.phase
+    para = sig.mean + sig.amp * jnp.sin(x) + sig.noise_amp * _harmonic_noise(sig, t)
+
+    T = sig.values.shape[0]
+    u = (t - sig.t0) / jnp.maximum(sig.dt, 1e-6)
+    i0 = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, T - 2)
+    frac = jnp.clip(u - i0.astype(jnp.float32), 0.0, 1.0)
+    trace = sig.values[i0] * (1.0 - frac) + sig.values[i0 + 1] * frac
+
+    return jnp.where(sig.use_trace > 0.5, trace, para)
+
+
+def to_trace(sig: Signal, horizon_s: float, dt: float) -> Signal:
+    """Materialize any signal onto a uniform grid (useful for stacking
+    scenarios whose parametric/trace families differ in cost, or for
+    exporting a parametric scenario as CSV)."""
+    n = max(int(np.ceil(horizon_s / dt)) + 1, 2)
+    ts = jnp.arange(n, dtype=jnp.float32) * dt
+    vals = jax.vmap(lambda t: eval_signal(sig, t))(ts)
+    return from_trace(np.asarray(vals), dt, 0.0)

@@ -1,0 +1,241 @@
+"""Scenario engine tests: signal families, power-cap events, fleet runner."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.sim import tiny_cluster
+from repro.core import (
+    build_statics,
+    init_state,
+    load_jobs,
+    run_episode,
+    run_fleet,
+    summary,
+)
+from repro.core.power import carbon_intensity, wetbulb_c
+from repro.data import load_signal_csv, synth_grid_trace, synth_workload, write_signal_csv
+from repro.scenarios import (
+    cap_events,
+    default_scenario,
+    demand_response,
+    eval_signal,
+    from_trace,
+    heatwave,
+    no_cap,
+    power_cap_at,
+    sample_scenarios,
+    sinusoid,
+    stack_scenarios,
+)
+
+
+def _setup(seed=0, n_jobs=24, horizon=600.0, **cfg_kw):
+    cfg = tiny_cluster(**cfg_kw)
+    jobs, bank = synth_workload(cfg, n_jobs, horizon, seed=seed)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(seed)), jobs)
+    return cfg, statics, state
+
+
+# ----------------------------------------------------------------- signals
+def test_default_scenario_matches_legacy_sinusoids():
+    cfg = tiny_cluster()
+    scn = default_scenario(cfg)
+    for t in np.linspace(0.0, 2 * cfg.day_seconds, 29, dtype=np.float32):
+        t = jnp.float32(t)
+        np.testing.assert_allclose(
+            eval_signal(scn.carbon, t), carbon_intensity(cfg, t),
+            rtol=2e-5, atol=1e-3)
+        np.testing.assert_allclose(
+            eval_signal(scn.wetbulb, t), wetbulb_c(cfg, t),
+            rtol=2e-5, atol=1e-3)
+
+
+def test_trace_signal_equals_parametric_at_sample_points():
+    para = sinusoid(380.0, 120.0, 86_400.0, phase=np.pi / 2)
+    dt = 300.0
+    ts = np.arange(0, 86_400.0 + dt, dt, dtype=np.float32)
+    vals = np.asarray([eval_signal(para, jnp.float32(t)) for t in ts])
+    trace = from_trace(vals, dt)
+    for t in ts[:: 17]:
+        np.testing.assert_allclose(
+            eval_signal(trace, jnp.float32(t)),
+            eval_signal(para, jnp.float32(t)), rtol=1e-5, atol=1e-2)
+    # between samples: linear interp stays within neighbor bounds
+    mid = jnp.float32(ts[3] + dt / 2)
+    lo, hi = sorted([vals[3], vals[4]])
+    assert lo - 1e-3 <= float(eval_signal(trace, mid)) <= hi + 1e-3
+
+
+def test_trace_signal_edge_hold():
+    trace = from_trace([1.0, 2.0, 3.0], dt=10.0)
+    assert float(eval_signal(trace, jnp.float32(-100.0))) == 1.0
+    assert float(eval_signal(trace, jnp.float32(1e6))) == 3.0
+
+
+# ------------------------------------------------------------------ events
+def test_power_cap_event_activation_and_deactivation():
+    sched = cap_events([100.0, 200.0], [300.0, 250.0], [5000.0, 3000.0],
+                       base_cap_w=0.0)
+    t = lambda x: jnp.float32(x)
+    assert float(power_cap_at(sched, t(50.0))) == 0.0      # before: uncapped
+    assert float(power_cap_at(sched, t(150.0))) == 5000.0  # first event
+    assert float(power_cap_at(sched, t(220.0))) == 3000.0  # overlap: tightest
+    assert float(power_cap_at(sched, t(260.0))) == 5000.0  # second ended
+    assert float(power_cap_at(sched, t(300.0))) == 0.0     # end exclusive
+
+
+def test_power_cap_base_combines_with_events():
+    sched = cap_events([100.0], [200.0], [5000.0], base_cap_w=4000.0)
+    assert float(power_cap_at(sched, jnp.float32(50.0))) == 4000.0
+    assert float(power_cap_at(sched, jnp.float32(150.0))) == 4000.0
+    sched = cap_events([100.0], [200.0], [3000.0], base_cap_w=4000.0)
+    assert float(power_cap_at(sched, jnp.float32(150.0))) == 3000.0
+    assert float(power_cap_at(no_cap(), jnp.float32(0.0))) == 0.0
+
+
+def test_cap_event_throttles_mid_episode_only():
+    cfg, statics, state = _setup()
+    base, t0, t1 = statics, 120.0, 300.0
+    fs_u, outs_u = jax.jit(
+        lambda s: run_episode(cfg, base, s, 500, "fcfs"))(state)
+    cap = float(jnp.max(outs_u.facility_w)) * 0.7
+    scn = default_scenario(cfg)._replace(
+        power_cap=cap_events([t0], [t1], [cap]))
+    capped = base._replace(scenario=scn)
+    fs_c, outs_c = jax.jit(
+        lambda s: run_episode(cfg, capped, s, 500, "fcfs"))(state)
+
+    tgrid = np.arange(1, 501, dtype=np.float32) * cfg.dt
+    inside = (tgrid >= t0) & (tgrid < t1)
+    fac = np.asarray(outs_c.facility_w)
+    assert (np.asarray(outs_c.power_cap_w)[inside] == np.float32(cap)).all()
+    assert (fac[inside] <= cap * 1.02).all()
+    assert (np.asarray(outs_c.throttle)[inside] <= 1.0).all()
+    # before the event both runs are bit-identical
+    np.testing.assert_allclose(fac[tgrid < t0],
+                               np.asarray(outs_u.facility_w)[tgrid < t0])
+    # event really bound at least once
+    assert float(np.asarray(outs_c.throttle)[inside].min()) < 1.0
+
+
+# ------------------------------------------------------------------- fleet
+def test_run_fleet_matches_independent_episodes():
+    cfg, statics, state = _setup()
+    scns = [
+        default_scenario(cfg),
+        demand_response(cfg, cap_w=3000.0, event_start_s=60.0,
+                        event_len_s=240.0),
+        heatwave(cfg),
+    ]
+    finals, outs = run_fleet(cfg, statics, state, 400, "fcfs",
+                             scenarios=scns)
+    assert finals.t.shape == (3,) and outs.facility_w.shape == (3, 400)
+
+    keys = jax.random.split(state.key, 3)
+    for i, scn in enumerate(scns):
+        st_i = statics._replace(scenario=scn)
+        fs, out = jax.jit(
+            lambda s, st_i=st_i: run_episode(cfg, st_i, s, 400, "fcfs")
+        )(state._replace(key=keys[i]))
+        np.testing.assert_allclose(
+            np.asarray(outs.facility_w[i]), np.asarray(out.facility_w),
+            rtol=1e-6)
+        for field in ("energy_kwh", "carbon_kg", "elec_cost_usd",
+                      "n_completed"):
+            np.testing.assert_allclose(
+                float(getattr(finals, field)[i]), float(getattr(fs, field)),
+                rtol=1e-6, err_msg=field)
+
+
+def test_run_fleet_64_replicas_3_scenario_kinds_one_call():
+    """Acceptance: >= 64 replicas, parametric + trace + scheduled-cap
+    scenarios, one jitted call."""
+    cfg, statics, state = _setup(n_jobs=16, horizon=300.0)
+    values, dt = synth_grid_trace("carbon", 1200.0, dt=60.0, seed=2)
+    kinds = [
+        lambda i: default_scenario(cfg),
+        lambda i: default_scenario(cfg)._replace(
+            carbon=from_trace(values, dt)),
+        lambda i: demand_response(cfg, cap_w=2500.0 + 10 * i,
+                                  event_start_s=50.0, event_len_s=150.0),
+    ]
+    scns = stack_scenarios([kinds[i % 3](i) for i in range(64)])
+    finals, outs = run_fleet(cfg, statics, state, 300, "fcfs",
+                             scenarios=scns)
+    assert finals.t.shape == (64,)
+    assert np.isfinite(np.asarray(outs.facility_w)).all()
+    e = np.asarray(finals.energy_kwh)
+    # compare whole kind-triples only (64 = 21 triples + 1 leftover)
+    n = 63
+    # demand-response replicas must differ from uncapped ones
+    assert not np.allclose(e[0:n:3], e[2:n:3])
+    # carbon differs between parametric and trace carbon at equal energy
+    np.testing.assert_allclose(e[0:n:3], e[1:n:3], rtol=1e-5)
+    assert not np.allclose(np.asarray(finals.carbon_kg)[0:n:3],
+                           np.asarray(finals.carbon_kg)[1:n:3])
+
+
+def test_sample_scenarios_shapes_and_fleet():
+    cfg, statics, state = _setup(n_jobs=8, horizon=200.0)
+    scns = sample_scenarios(cfg, 8, seed=5)
+    assert scns.carbon.mean.shape == (8,)
+    finals, _ = run_fleet(cfg, statics, state, 50, "fcfs", scenarios=scns)
+    assert np.isfinite(np.asarray(finals.energy_kwh)).all()
+
+
+# ----------------------------------------------------------- cost accounting
+def test_electricity_cost_accounting():
+    cfg, statics, state = _setup()
+    fs, outs = jax.jit(lambda s: run_episode(cfg, statics, s, 300, "fcfs"))(state)
+    total = float(jnp.sum(outs.cost_usd_step))
+    assert abs(total - float(fs.elec_cost_usd)) < 1e-4
+    assert total > 0.0
+    assert "elec_cost_usd" in summary(fs)
+    # price signal telemetry is the configured diurnal price
+    p = np.asarray(outs.price_usd_kwh)
+    assert (p > 0).all() and p.std() > 0
+
+
+# -------------------------------------------------------------------- IO
+def test_signal_csv_roundtrip(tmp_path):
+    values, dt = synth_grid_trace("price", 7200.0, dt=300.0, seed=3)
+    path = write_signal_csv(os.path.join(tmp_path, "price.csv"), values, dt)
+    sig = load_signal_csv(path)
+    for i in (0, 5, len(values) - 1):
+        np.testing.assert_allclose(
+            float(eval_signal(sig, jnp.float32(i * dt))), values[i],
+            rtol=1e-4)
+
+
+def test_synth_grid_trace_kinds():
+    for kind, lo, hi in (("carbon", 40.0, 900.0), ("price", 0.005, 2.0),
+                         ("wetbulb", -20.0, 45.0)):
+        v, dt = synth_grid_trace(kind, 86_400.0, seed=1)
+        assert v.dtype == np.float32 and dt == 300.0
+        assert np.isfinite(v).all() and (v >= lo).all() and (v <= hi).all()
+
+
+# ------------------------------------------------------------------- envs
+def test_sched_env_exposes_grid_signals_in_obs():
+    from repro.envs import SchedEnv
+
+    cfg = tiny_cluster(sched_max_candidates=4)
+    wls = [synth_workload(cfg, 16, 600.0, seed=s) for s in range(2)]
+    scn = demand_response(cfg, cap_w=3000.0, event_start_s=0.0,
+                          event_len_s=1e6)
+    env = SchedEnv(cfg, wls, episode_steps=4, sim_steps_per_action=5,
+                   scenario=scn)
+    st, obs = env.reset(jax.random.key(0))
+    assert obs.shape == (env.obs_dim,)
+    assert np.isfinite(np.asarray(obs)).all()
+    # obs[4] is the cap fraction: capped env reads < 1
+    assert float(obs[4]) < 1.0
+    env_u = SchedEnv(cfg, wls, episode_steps=4, sim_steps_per_action=5)
+    _, obs_u = env_u.reset(jax.random.key(0))
+    assert float(obs_u[4]) == 1.0
+    st2, obs2, r, done, info = jax.jit(env.step)(st, jnp.int32(0))
+    assert np.isfinite(float(r))
