@@ -1,0 +1,120 @@
+"""Dispatch/placement microbenchmarks — the simulator's per-step hot path.
+
+Rows:
+  dispatch_first_fit_*      sort-free cumsum placement vs the legacy argsort
+                            path, vmapped over a batch of random states
+  dispatch_wavefront_jaxpr  jaxpr size of the fori_loop dispatch wavefront
+                            vs attempts (stays ~constant; the unrolled loop
+                            grew linearly)
+  power_scatter_fused       fused job-table -> node-power Pallas pass vs the
+                            two-pass scatter + node-power path
+
+``smoke=True`` shrinks every size so the whole bench runs in seconds (the
+CI benchmark smoke job).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, *args, n=10):
+    jax.block_until_ready(fn(*args))  # compile + flush async dispatch
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def _random_states(cfg, statics, st, B, n_jobs):
+    """Batch of states with randomized free pools / clocks (queue churn)."""
+    keys = jax.random.split(jax.random.key(1), B)
+
+    def perturb(s, key):
+        k1, k2 = jax.random.split(key)
+        return s._replace(
+            free=s.free * jax.random.uniform(k1, s.free.shape),
+            t=jax.random.uniform(k2, (), minval=0.0, maxval=3600.0),
+        )
+
+    states = jax.vmap(perturb, in_axes=(None, 0))(st, keys)
+    jobs = jax.random.randint(jax.random.key(2), (B,), 0, n_jobs)
+    return states, jobs
+
+
+def bench_dispatch(smoke: bool = False) -> List[Row]:
+    from repro.configs.sim import tiny_cluster, tx_gaia
+    from repro.core import build_statics, init_state, load_jobs, make_step
+    from repro.core import schedulers as sched
+    from repro.data import synth_workload
+
+    if smoke:
+        cfg = tiny_cluster()
+        B, n_jobs, n_iter = 8, 16, 2
+    else:
+        cfg = tx_gaia(max_jobs=256, max_nodes_per_job=16)
+        B, n_jobs, n_iter = 256, 200, 20
+    jobs, bank = synth_workload(cfg, n_jobs, 3600.0, seed=0)
+    statics = build_statics(cfg, bank)
+    st = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    states, jobsel = _random_states(cfg, statics, st, B, n_jobs)
+    K = cfg.max_nodes_per_job
+
+    ff_old = jax.jit(jax.vmap(
+        lambda s, j: sched.first_fit_argsort(s, j, K)))
+    ff_new = jax.jit(jax.vmap(lambda s, j: sched.first_fit(s, j, K)))
+    dt_old = _timeit(ff_old, states, jobsel, n=n_iter)
+    dt_new = _timeit(ff_new, states, jobsel, n=n_iter)
+    r_old, ok_old = ff_old(states, jobsel)
+    r_new, ok_new = ff_new(states, jobsel)
+    equal = bool(
+        (np.asarray(r_old) == np.asarray(r_new)).all()
+        and (np.asarray(ok_old) == np.asarray(ok_new)).all()
+    )
+    rows: List[Row] = [
+        (f"dispatch_first_fit_argsort_B{B}_N{cfg.n_nodes}", dt_old * 1e6,
+         f"placements_per_s={B/dt_old:,.0f}"),
+        (f"dispatch_first_fit_cumsum_B{B}_N{cfg.n_nodes}", dt_new * 1e6,
+         f"placements_per_s={B/dt_new:,.0f};speedup_vs_argsort="
+         f"{dt_old/dt_new:.2f}x;bit_equal={equal}"),
+    ]
+
+    # jaxpr growth vs dispatch attempts (fori_loop wavefront => ~constant)
+    sizes = []
+    for spp in (1, 8):
+        step = make_step(cfg, statics, "fcfs", starts_per_step=spp)
+        sizes.append(len(jax.make_jaxpr(step)(st, jnp.int32(-1)).jaxpr.eqns))
+    rows.append((
+        "dispatch_wavefront_jaxpr", 0.0,
+        f"eqns_1_attempt={sizes[0]};eqns_8_attempts={sizes[1]};"
+        f"growth={sizes[1]/max(sizes[0],1):.2f}x",
+    ))
+
+    # fused power-scatter kernel vs the two-pass scatter + power path
+    from repro.core.power import compute_power
+
+    s_mid, _ = jax.jit(
+        lambda s: jax.lax.scan(
+            lambda c, _: (step(c, jnp.int32(-1))[0], None), s, None,
+            length=10 if smoke else 100)
+    )(st)
+    two_pass = jax.jit(
+        lambda s: compute_power(cfg, s, statics, use_kernel=False).node_it_w)
+    fused = jax.jit(
+        lambda s: compute_power(cfg, s, statics, use_kernel=True).node_it_w)
+    dt_2p = _timeit(two_pass, s_mid, n=n_iter)
+    dt_f = _timeit(fused, s_mid, n=n_iter)
+    err = float(jnp.max(jnp.abs(two_pass(s_mid) - fused(s_mid))))
+    rows.append((
+        f"power_scatter_fused_N{cfg.n_nodes}", dt_f * 1e6,
+        f"two_pass_us={dt_2p*1e6:.1f};max_err={err:.1e}",
+    ))
+    return rows

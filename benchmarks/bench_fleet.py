@@ -54,4 +54,27 @@ def bench_fleet() -> List[Row]:
             f"agg_steps_per_s={sps:,.0f};speedup_vs_1={sps/base_sps:.1f}x;"
             f"dr_scenarios={n_capped}/{R}",
         ))
+
+    # constant-memory telemetry: summary_only carries windowed reductions in
+    # the scan instead of stacking 16 StepOut fields x n_steps x R
+    R, long_steps = 64, 2000
+    scns = sample_scenarios(cfg, R, seed=R)
+
+    def run_summary(state):
+        return run_fleet(cfg, statics, state, long_steps, "fcfs",
+                         scenarios=scns, summary_only=True)
+
+    fs, tel = run_summary(st)
+    jax.block_until_ready(fs.t)
+    t0 = time.perf_counter()
+    fs, tel = run_summary(st)
+    jax.block_until_ready(fs.t)
+    dt = time.perf_counter() - t0
+    out_floats = sum(int(np.size(np.asarray(x))) for x in tel)
+    rows.append((
+        f"fleet_{R}replicas_summary_only_{long_steps}steps",
+        dt / long_steps * 1e6,
+        f"agg_steps_per_s={long_steps*R/dt:,.0f};"
+        f"telemetry_floats={out_floats} (vs {long_steps*R*16} stacked)",
+    ))
     return rows

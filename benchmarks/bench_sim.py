@@ -17,7 +17,9 @@ Row = Tuple[str, float, str]
 
 
 def _timeit(fn, *args, n=3):
-    fn(*args)  # compile
+    # block on the warm-up: otherwise async dispatch/compile of the first
+    # call leaks into the first timed iteration
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*args)

@@ -1,4 +1,5 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV and
+# write a BENCH_<n>.json perf-trajectory artifact.
 """Benchmark harness — one bench per paper table/figure:
 
   replay_tx_gaia_1h        Fig 2 top-left  (throughput/energy during replay)
@@ -8,19 +9,55 @@
   congestion_bw_*          network-congestion model [14]
   vmapped_sim_*            beyond-paper: vectorized-twin RL throughput
   fleet_*replicas          beyond-paper: scenario-sweep fleet throughput
+  dispatch_* / power_scatter_*  sort-free placement + fused power kernel
   pallas_*                 kernel microbenches vs oracles
   train/decode_reduced_*   LM substrate throughput (reduced configs)
   roofline_flops_crosscheck  analytic perfmodel vs compiled dry-run
+
+Every run appends to the perf trajectory: results land in
+``benchmarks/BENCH_<n>.json`` (n = 1 + highest existing), so successive
+PRs can diff hot-path numbers against the recorded baseline. See
+``docs/performance.md`` for how to read the artifact.
+
+Usage:
+  python benchmarks/run.py            # full suite
+  python benchmarks/run.py --smoke    # tiny configs, seconds (CI gate)
+  python benchmarks/run.py --out P    # write the artifact to path P
 """
 
+import argparse
+import glob
+import json
 import os
+import re
 import sys
+import time
 import traceback
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)   # so `benchmarks.*` imports work as a script
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
 
-def main() -> None:
+def _next_artifact_path() -> str:
+    taken = [
+        int(m.group(1))
+        for p in glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json"))
+        if (m := re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p)))
+    ]
+    return os.path.join(BENCH_DIR, f"BENCH_{max(taken, default=0) + 1}.json")
+
+
+def _benches(smoke: bool):
+    from benchmarks.bench_dispatch import bench_dispatch
+
+    if smoke:
+        from benchmarks.bench_sim import bench_vectorized_envs
+
+        return [lambda: bench_dispatch(smoke=True), bench_vectorized_envs]
+
     from benchmarks.bench_fleet import bench_fleet
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_lm import (
@@ -37,29 +74,60 @@ def main() -> None:
         bench_vectorized_envs,
     )
 
-    benches = [
+    return [
         bench_replay_throughput,
         bench_scheduler_comparison,
         bench_power_prediction,
         bench_congestion_model,
         bench_rl_training,
         bench_vectorized_envs,
+        bench_dispatch,
         bench_fleet,
         bench_kernels,
         bench_train_reduced,
         bench_decode_reduced,
         bench_roofline_crosscheck,
     ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs only (CI benchmark smoke gate)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: benchmarks/BENCH_<n>.json)")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
-    failed = []
-    for bench in benches:
+    rows, failed = [], []
+    for bench in _benches(args.smoke):
         try:
             for name, us, derived in bench():
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                rows.append(
+                    {"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
-            failed.append(bench.__name__)
-            print(f"{bench.__name__},nan,FAILED:{e!r}", flush=True)
+            name = getattr(bench, "__name__", repr(bench))
+            failed.append(name)
+            print(f"{name},nan,FAILED:{e!r}", flush=True)
+
+    # smoke numbers (tiny configs) must not enter the BENCH_<n> trajectory
+    if args.out:
+        out = args.out
+    elif args.smoke:
+        out = os.path.join(BENCH_DIR, "BENCH_smoke.json")
+    else:
+        out = _next_artifact_path()
+    with open(out, "w") as f:
+        json.dump({
+            "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "mode": "smoke" if args.smoke else "full",
+            "failed": failed,
+            "rows": rows,
+        }, f, indent=1)
+    print(f"# perf artifact -> {out}", file=sys.stderr)
     if failed:
         raise SystemExit(f"benches failed: {failed}")
 

@@ -64,13 +64,15 @@ def main():
     names, scns = build_scenarios(cfg, args.replicas, horizon)
     print(f"fleet: {args.replicas} replicas x {args.steps} steps, "
           f"scheduler={args.scheduler}, one jitted vmap+scan call")
-    finals, outs = run_fleet(cfg, statics, state, args.steps, args.scheduler,
-                             scenarios=scns)
+    # summary_only: windowed reductions in the scan carry — fleet memory is
+    # O(replicas), independent of --steps (full per-step traces: drop it)
+    finals, tel = run_fleet(cfg, statics, state, args.steps, args.scheduler,
+                            scenarios=scns, summary_only=True)
     rows = fleet_summary(finals)
 
     print(f"\n{'scenario':16s} {'n':>3s} {'energy_kwh':>11s} {'carbon_kg':>10s} "
           f"{'cost_usd':>9s} {'completed':>9s} {'peak_kw':>8s}")
-    peak_w = np.asarray(outs.facility_w).max(axis=1)
+    peak_w = np.asarray(tel.max_facility_w)
     for fam in dict.fromkeys(names):
         idx = [i for i, n in enumerate(names) if n == fam]
         print(f"{fam:16s} {len(idx):3d} "

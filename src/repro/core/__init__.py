@@ -4,7 +4,13 @@ network congestion, failures — as a pure-JAX vectorized simulator.
 """
 
 from repro.core.fleet import fleet_summary, run_fleet
-from repro.core.sim import StepOut, make_step, run_episode, summary
+from repro.core.sim import (
+    StepOut,
+    TelemetrySummary,
+    make_step,
+    run_episode,
+    summary,
+)
 from repro.core.state import (
     DONE,
     EMPTY,

@@ -6,6 +6,13 @@ replicas, installs a per-replica ``Scenario`` (batched pytree from
 ``scenarios.stack_scenarios`` / ``sample_scenarios``), splits the PRNG key
 per replica, and runs ``vmap(lax.scan(step))`` under a single ``jit`` —
 the scenario-sweep engine for the paper's sustainability-policy studies.
+
+Memory notes: the replica-batched state and key buffers are DONATED to the
+compiled call (XLA reuses them for the final states), and the telemetry
+knobs (``telemetry_every`` / ``summary_only``, forwarded to
+``run_episode``) replace the O(R * n_steps * 16) stacked ``StepOut`` with
+windowed or O(R * 16) episode-wide reductions — fleet-sweep memory then no
+longer scales with ``n_steps``.
 """
 
 from __future__ import annotations
@@ -14,10 +21,11 @@ from functools import partial
 from typing import Dict, List, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.sim import SimConfig
-from repro.core.sim import StepOut, run_episode, summary
+from repro.core.sim import StepOut, TelemetrySummary, run_episode, summary
 from repro.core.state import SimState, Statics
 from repro.scenarios.scenario import Scenario, n_replicas, stack_scenarios
 
@@ -31,17 +39,19 @@ def _ensure_batched(scenarios) -> Scenario:
 
 # Module-level so repeated run_fleet calls with the same static config reuse
 # the compiled executable (cfg is a frozen dataclass => hashable; statics /
-# scenarios / state / keys are traced).
-@partial(jax.jit, static_argnames=("cfg", "n_steps", "scheduler", "kw_items"))
+# scenarios / state / keys are traced). ``state``/``keys`` arrive replica-
+# batched and are donated: XLA reuses their buffers for the final states.
+@partial(jax.jit, static_argnames=("cfg", "n_steps", "scheduler", "kw_items"),
+         donate_argnames=("state", "keys"))
 def _fleet(cfg, statics, scenarios, state, keys, n_steps, scheduler, kw_items):
     kw = dict(kw_items)
 
-    def one(scn: Scenario, key: jax.Array):
-        st = state._replace(key=key)
+    def one(scn: Scenario, key: jax.Array, st: SimState):
+        st = st._replace(key=key)
         stt = statics._replace(scenario=scn)
         return run_episode(cfg, stt, st, n_steps, scheduler, **kw)
 
-    return jax.vmap(one)(scenarios, keys)
+    return jax.vmap(one)(scenarios, keys, state)
 
 
 def run_fleet(
@@ -53,13 +63,23 @@ def run_fleet(
     *,
     scenarios: Scenario | Sequence[Scenario] | None = None,
     **kw,
-) -> Tuple[SimState, StepOut]:
+) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Simulate R replicas of the twin for ``n_steps`` in one jitted call.
 
     ``scenarios``: batched Scenario (leading replica axis), a list of
     Scenarios (stacked here), or None (R=1, the statics' own scenario).
-    All other statics (node constants, telemetry bank) and the initial
-    state are shared and broadcast; each replica gets its own PRNG stream.
+    All other statics (node constants, telemetry bank) are shared and
+    broadcast; each replica gets its own PRNG stream.
+
+    ``state`` may be a single SimState (broadcast to R replicas here) or
+    an already replica-batched one — e.g. the final states of a previous
+    ``run_fleet`` call for chained sweeps. A batched state's buffers are
+    donated to the compiled call and must not be reused afterwards.
+
+    ``**kw`` forwards to ``run_episode``/``make_step`` — in particular
+    ``summary_only=True`` returns per-replica ``TelemetrySummary`` with
+    peak memory independent of ``n_steps``, and ``telemetry_every=k``
+    stacks one windowed summary per k steps.
 
     Returns (final_states, outs) with a leading replica axis on every leaf.
     """
@@ -68,7 +88,19 @@ def run_fleet(
     else:
         scenarios = _ensure_batched(scenarios)
     R = n_replicas(scenarios)
-    keys = jax.random.split(state.key, R)
+    if jnp.ndim(state.t) == 0:
+        keys = jax.random.split(state.key, R)
+        state = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (R,) + jnp.shape(a)), state)
+    else:
+        if int(jnp.shape(state.t)[0]) != R:
+            raise ValueError(
+                f"batched state has {jnp.shape(state.t)[0]} replicas, "
+                f"scenarios have {R}")
+        # advance each replica's stream into a FRESH buffer: state and keys
+        # are both donated, so aliasing keys to the state.key leaf would
+        # donate one buffer twice
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, 1))(state.key)
     kw_items = tuple(sorted(kw.items()))
     return _fleet(cfg, statics, scenarios, state, keys, n_steps, scheduler,
                   kw_items)

@@ -4,8 +4,10 @@ carbon intensity and GFLOPS/W.
 
 The per-node aggregation is the simulator's compute hot-spot (it runs every
 step for every vectorized environment); ``repro.kernels.node_power``
-provides the Pallas TPU kernel, ``kernels.ref.node_power_ref`` the oracle
-used here on CPU.
+provides the Pallas TPU kernels — including the fused placement-scatter +
+power-chain pass (``power_scatter_pallas``) that turns the job table into
+per-node IT power in one kernel — with oracles in ``kernels.ref`` used
+here on CPU.
 """
 
 from __future__ import annotations
@@ -42,6 +44,21 @@ def job_utilization(cfg: SimConfig, state: SimState, statics: Statics):
     cpu = jnp.take_along_axis(statics.cpu_trace, qi[:, None], axis=1)[:, 0]
     gpu = jnp.take_along_axis(statics.gpu_trace, qi[:, None], axis=1)[:, 0]
     return cpu * running, gpu * running
+
+
+def placement_amounts(state: SimState, cpu_util: jax.Array,
+                      gpu_util: jax.Array):
+    """Flattened per-placement-slot absolute utilized resources.
+
+    Returns (place_flat (J*K,) int32, cpu_abs (J*K,), gpu_abs (J*K,)) —
+    the job-table form the fused power-scatter kernel consumes directly
+    (invalid slots carry place=-1 and zero amounts).
+    """
+    place = state.placement                       # (J,K)
+    w = (place >= 0).astype(jnp.float32)
+    cpu_abs = (state.req[0][:, None] * cpu_util[:, None]) * w
+    gpu_abs = (state.req[1][:, None] * gpu_util[:, None]) * w
+    return place.reshape(-1), cpu_abs.reshape(-1), gpu_abs.reshape(-1)
 
 
 def node_loads(cfg: SimConfig, state: SimState, statics: Statics,
@@ -85,18 +102,24 @@ def carbon_intensity(cfg: SimConfig, t: jax.Array) -> jax.Array:
 def compute_power(cfg: SimConfig, state: SimState, statics: Statics,
                   *, use_kernel: bool = False) -> PowerOut:
     cpu_util, gpu_util = job_utilization(cfg, state, statics)
-    cpu_frac, gpu_frac = node_loads(cfg, state, statics, cpu_util, gpu_util)
 
     if use_kernel:
+        # fused path: job table -> per-node IT power in ONE Pallas pass
+        # (placement scatter + power chain; no (N,) load intermediates)
         from repro.kernels import ops as kops
 
-        node_it, node_input = kops.node_power(
-            cpu_frac, gpu_frac, statics.idle_w, statics.cpu_dyn_w,
+        place_flat, cpu_abs, gpu_abs = placement_amounts(
+            state, cpu_util, gpu_util)
+        node_it, node_input, cpu_frac, gpu_frac = kops.power_scatter(
+            place_flat, cpu_abs, gpu_abs, statics.capacity[0],
+            statics.capacity[1], statics.idle_w, statics.cpu_dyn_w,
             statics.gpu_dyn_w, state.node_up, statics.node_max_w,
             rect_peak=cfg.rect_eff_peak, rect_load=cfg.rect_eff_load,
             rect_curv=cfg.rect_eff_curv, conv_eff=cfg.conv_eff,
         )
     else:
+        cpu_frac, gpu_frac = node_loads(cfg, state, statics, cpu_util,
+                                        gpu_util)
         # loads are already per-node fractions; inline oracle math
         it = statics.idle_w + cpu_frac * statics.cpu_dyn_w + gpu_frac * statics.gpu_dyn_w
         it = it * state.node_up

@@ -34,10 +34,30 @@ def feasible_nodes(state: SimState, job: jax.Array) -> jax.Array:
 
 
 def first_fit(state: SimState, job: jax.Array, K: int) -> Tuple[jax.Array, jax.Array]:
-    """Choose `n_nodes[job]` lowest-index feasible nodes.
+    """Choose `n_nodes[job]` lowest-index feasible nodes, sort-free.
+
+    O(N + K log N) cumsum ranking instead of the O(N log N) argsort: the
+    rank of a feasible node among feasible nodes is ``cumsum(ok) - 1``
+    (feasibility order == index order), so the node filling placement slot
+    ``s`` is the first index where the monotone cumsum reaches ``s + 1`` —
+    a binary search, no sort and no scatter. Bit-equivalent to
+    ``first_fit_argsort`` (property-tested).
 
     Returns (placement_row (K,), feasible bool).
     """
+    ok = feasible_nodes(state, job)
+    n_req = state.n_nodes[job]
+    csum = jnp.cumsum(ok)
+    slots = jnp.arange(K)
+    idx = jnp.searchsorted(csum, slots + 1).astype(jnp.int32)
+    row = jnp.where(slots < n_req, idx, -1)
+    enough = csum[-1] >= n_req
+    return jnp.where(enough, row, -1), enough
+
+
+def first_fit_argsort(state: SimState, job: jax.Array, K: int) -> Tuple[jax.Array, jax.Array]:
+    """Legacy argsort placement — kept as the equivalence oracle for
+    ``first_fit`` (tests + ``benchmarks/bench_dispatch.py``)."""
     N = state.free.shape[1]
     ok = feasible_nodes(state, job)
     n_req = state.n_nodes[job]
@@ -131,10 +151,14 @@ SCHEDULERS = {
 
 
 def rl_candidates(cfg: SimConfig, state: SimState) -> jax.Array:
-    """Top-k FCFS-ordered queued jobs the RL agent chooses among. (k,) int."""
+    """Top-k FCFS-ordered queued jobs the RL agent chooses among. (k,) int.
+
+    ``lax.top_k`` (O(J log k)) instead of a full O(J log J) argsort; both
+    break ties by lowest index, so the candidate order is unchanged.
+    """
     k = cfg.sched_max_candidates
     m = queued_mask(state)
     score = jnp.where(m, state.submit_t, BIG)
-    idx = jnp.argsort(score)[:k]
+    _, idx = jax.lax.top_k(-score, k)
     ok = jnp.take(m, idx)
-    return jnp.where(ok, idx, -1)
+    return jnp.where(ok, idx.astype(jnp.int32), -1)

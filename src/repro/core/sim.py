@@ -178,10 +178,15 @@ def make_step(
             job = jnp.where(action < k, cands[jnp.clip(action, 0, k - 1)], -1)
             state = _try_start(cfg, state, job)
         else:
+            # single fori_loop wavefront: the jaxpr holds ONE copy of the
+            # select+place body regardless of starts_per_step (the unrolled
+            # loop grew trace size/compile time linearly with attempts)
             select = sched.SCHEDULERS[scheduler]
-            for _ in range(starts_per_step):
-                job = select(cfg, state)
-                state = _try_start(cfg, state, job)
+
+            def dispatch(_, s: SimState) -> SimState:
+                return _try_start(cfg, s, select(cfg, s))
+
+            state = jax.lax.fori_loop(0, starts_per_step, dispatch, state)
 
         # --- power chain (pre-throttle)
         p: PowerOut = compute_power(cfg, state, statics, use_kernel=use_power_kernel)
@@ -273,44 +278,156 @@ def make_step(
     return step
 
 
+class TelemetrySummary(NamedTuple):
+    """Windowed reductions of ``StepOut`` — the constant-memory telemetry
+    carried through the scan instead of stacking 16 fields per step.
+
+    Totals are sums over the window; ``mean_*`` are per-step means and
+    ``max_*`` maxima. ``n_steps`` is the window length.
+    """
+
+    # additive totals
+    completed: jax.Array
+    energy_kwh: jax.Array
+    carbon_kg: jax.Array
+    cost_usd: jax.Array
+    reward: jax.Array
+    # per-step means
+    mean_facility_w: jax.Array
+    mean_it_w: jax.Array
+    mean_pue: jax.Array
+    mean_util: jax.Array
+    mean_queue_len: jax.Array
+    mean_running: jax.Array
+    mean_net_load: jax.Array
+    mean_carbon_gkwh: jax.Array
+    mean_price_usd_kwh: jax.Array
+    mean_throttle: jax.Array
+    # extremes
+    max_facility_w: jax.Array
+    max_queue_len: jax.Array
+    n_steps: jax.Array
+
+
+def _telem_zero() -> TelemetrySummary:
+    z = jnp.float32(0.0)
+    return TelemetrySummary(*([z] * len(TelemetrySummary._fields)))
+
+
+def _telem_update(acc: TelemetrySummary, out: StepOut) -> TelemetrySummary:
+    # mean_* fields hold running sums until _telem_finalize divides by n
+    return TelemetrySummary(
+        completed=acc.completed + out.completed_now,
+        energy_kwh=acc.energy_kwh + out.energy_kwh_step,
+        carbon_kg=acc.carbon_kg + out.carbon_kg_step,
+        cost_usd=acc.cost_usd + out.cost_usd_step,
+        reward=acc.reward + out.reward,
+        mean_facility_w=acc.mean_facility_w + out.facility_w,
+        mean_it_w=acc.mean_it_w + out.it_w,
+        mean_pue=acc.mean_pue + out.pue,
+        mean_util=acc.mean_util + out.util,
+        mean_queue_len=acc.mean_queue_len + out.queue_len,
+        mean_running=acc.mean_running + out.running,
+        mean_net_load=acc.mean_net_load + out.net_load,
+        mean_carbon_gkwh=acc.mean_carbon_gkwh + out.carbon_gkwh,
+        mean_price_usd_kwh=acc.mean_price_usd_kwh + out.price_usd_kwh,
+        mean_throttle=acc.mean_throttle + out.throttle,
+        max_facility_w=jnp.maximum(acc.max_facility_w, out.facility_w),
+        max_queue_len=jnp.maximum(acc.max_queue_len, out.queue_len),
+        n_steps=acc.n_steps + 1.0,
+    )
+
+
+def _telem_finalize(acc: TelemetrySummary) -> TelemetrySummary:
+    n = jnp.maximum(acc.n_steps, 1.0)
+    return acc._replace(**{
+        f: getattr(acc, f) / n
+        for f in TelemetrySummary._fields if f.startswith("mean_")
+    })
+
+
 def run_episode(
     cfg: SimConfig,
     statics: Statics,
     state: SimState,
     n_steps: int,
     scheduler: str = "fcfs",
+    *,
+    telemetry_every: int = 1,
+    summary_only: bool = False,
     **kw,
-) -> Tuple[SimState, StepOut]:
-    """Scan `n_steps` of the twin under a non-RL policy. Returns final state
-    + stacked per-step outputs (power history etc.)."""
+) -> Tuple[SimState, StepOut | TelemetrySummary]:
+    """Scan `n_steps` of the twin under a non-RL policy.
+
+    Telemetry modes (both static, so each compiles once):
+      - default: stacked per-step ``StepOut`` — O(n_steps * 16) memory;
+      - ``telemetry_every=k``: one ``TelemetrySummary`` per k-step window
+        (stacked, length ``n_steps // k``) — O(n_steps/k) memory;
+      - ``summary_only=True``: a single episode-wide ``TelemetrySummary``
+        accumulated in the scan carry — O(1) memory in ``n_steps``.
+    """
     step = make_step(cfg, statics, scheduler, **kw)
 
     def body(s, _):
         return step(s, jnp.int32(-1))
 
-    return jax.lax.scan(body, state, None, length=n_steps)
+    def accum_body(carry, _):
+        s, acc = carry
+        s, out = step(s, jnp.int32(-1))
+        return (s, _telem_update(acc, out)), None
+
+    if summary_only:
+        if telemetry_every > 1:
+            raise ValueError(
+                "summary_only=True is episode-wide; it conflicts with "
+                f"telemetry_every={telemetry_every} (pick one)"
+            )
+        (fs, acc), _ = jax.lax.scan(
+            accum_body, (state, _telem_zero()), None, length=n_steps
+        )
+        return fs, _telem_finalize(acc)
+
+    if telemetry_every <= 1:
+        return jax.lax.scan(body, state, None, length=n_steps)
+
+    if n_steps % telemetry_every:
+        raise ValueError(
+            f"n_steps={n_steps} not divisible by telemetry_every={telemetry_every}"
+        )
+
+    def window(s, _):
+        (s, acc), _ = jax.lax.scan(
+            accum_body, (s, _telem_zero()), None, length=telemetry_every
+        )
+        return s, _telem_finalize(acc)
+
+    return jax.lax.scan(window, state, None,
+                        length=n_steps // telemetry_every)
 
 
 def summary(state: SimState) -> dict:
-    n = max(float(state.n_completed), 1.0)
+    # one device->host transfer (the per-field float() path issued ~16
+    # separate D2H copies; fleet_summary already batches the same way)
+    s = jax.device_get(state)
+    n = max(float(s.n_completed), 1.0)
     return {
-        "t_end_s": float(state.t),
-        "completed": float(state.n_completed),
-        "killed_by_failures": float(state.n_killed),
-        "energy_kwh": float(state.energy_kwh),
-        "it_energy_kwh": float(state.it_energy_kwh),
-        "loss_energy_kwh": float(state.loss_energy_kwh),
-        "cooling_energy_kwh": float(state.cool_energy_kwh),
-        "carbon_kg": float(state.carbon_kg),
-        "elec_cost_usd": float(state.elec_cost_usd),
-        "mean_power_w": float(state.sum_power_w) / max(float(state.n_steps), 1.0),
-        "mean_wait_s": float(state.sum_wait) / n,
-        "mean_slowdown": float(state.sum_slowdown) / n,
+        "t_end_s": float(s.t),
+        "completed": float(s.n_completed),
+        "killed_by_failures": float(s.n_killed),
+        "energy_kwh": float(s.energy_kwh),
+        "it_energy_kwh": float(s.it_energy_kwh),
+        "loss_energy_kwh": float(s.loss_energy_kwh),
+        "cooling_energy_kwh": float(s.cool_energy_kwh),
+        "carbon_kg": float(s.carbon_kg),
+        "elec_cost_usd": float(s.elec_cost_usd),
+        "mean_power_w": float(s.sum_power_w) / max(float(s.n_steps), 1.0),
+        "mean_wait_s": float(s.sum_wait) / n,
+        "mean_slowdown": float(s.sum_slowdown) / n,
         "gflops_per_watt": (
-            float(state.flops_integral) / 3600.0 / 1000.0
-            / max(float(state.energy_kwh), 1e-9)
+            float(s.flops_integral) / 3600.0 / 1000.0
+            / max(float(s.energy_kwh), 1e-9)
         ),
         "avg_pue": (
-            float(state.energy_kwh) / max(float(state.it_energy_kwh), 1e-9)
+            float(s.energy_kwh) / max(float(s.it_energy_kwh), 1e-9)
         ),
     }

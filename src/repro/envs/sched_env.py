@@ -139,25 +139,37 @@ class SchedEnv:
             self.cfg, st.statics, "rl", reward_weights=self.reward_weights
         )
 
+        # accumulate the reductions in the scan carry (constant memory)
+        # instead of stacking a full StepOut per sub-step and reducing after
         def sub(carry, i):
-            s, _ = carry
+            s, acc = carry
             a = jnp.where(i == 0, action, jnp.int32(self.n_actions - 1))
             s, out = step_fn(s, a)
-            return (s, out.reward), out
+            acc = {
+                "reward": acc["reward"] + out.reward,
+                "completed": acc["completed"] + out.completed_now,
+                "energy_kwh": acc["energy_kwh"] + out.energy_kwh_step,
+                "carbon_kg": acc["carbon_kg"] + out.carbon_kg_step,
+                "facility_w": out.facility_w,
+                "queue_len": out.queue_len,
+            }
+            return (s, acc), None
 
-        (sim, _), outs = jax.lax.scan(
-            (lambda c, i: sub(c, i)), (st.sim, st.sim.t * 0.0),
-            jnp.arange(self.sim_steps_per_action),
+        z = jnp.float32(0.0)
+        acc0 = {"reward": z, "completed": z, "energy_kwh": z,
+                "carbon_kg": z, "facility_w": z, "queue_len": z}
+        (sim, acc), _ = jax.lax.scan(
+            sub, (st.sim, acc0), jnp.arange(self.sim_steps_per_action),
         )
-        reward = jnp.sum(outs.reward)
+        reward = acc["reward"]
         st = EnvState(sim=sim, statics=st.statics, step_count=st.step_count + 1)
         done = st.step_count >= self.episode_steps
         info = {
-            "facility_w": outs.facility_w[-1],
-            "queue_len": outs.queue_len[-1],
-            "completed": jnp.sum(outs.completed_now),
-            "energy_kwh": jnp.sum(outs.energy_kwh_step),
-            "carbon_kg": jnp.sum(outs.carbon_kg_step),
+            "facility_w": acc["facility_w"],
+            "queue_len": acc["queue_len"],
+            "completed": acc["completed"],
+            "energy_kwh": acc["energy_kwh"],
+            "carbon_kg": acc["carbon_kg"],
         }
         return st, self.observe(st), reward, done, info
 

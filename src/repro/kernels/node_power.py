@@ -8,7 +8,9 @@ read once from HBM, two outputs written once — no intermediate arrays,
 which is the memory-bound optimum (the XLA path materializes the eta and
 load_frac temporaries).
 
-Validated against ``ref.node_power_ref``.
+Validated against ``ref.node_power_ref``. ``power_scatter_pallas`` goes
+one step further and fuses the job-table placement scatter into the same
+pass (oracle: ``ref.power_scatter_ref``).
 """
 
 from __future__ import annotations
@@ -103,3 +105,97 @@ def node_power_pallas(
     if squeeze:
         it, inp = it[0], inp[0]
     return it, inp
+
+
+# ---------------------------------------------------------------------------
+# fused placement-scatter + power chain: job table -> per-node IT power in
+# one pass. The host-side scatter-add (node_loads) materialized two (N,)
+# load arrays in HBM before the power kernel could run; here each node
+# block builds its loads from the (J*K,) placement table via a one-hot
+# contraction on the MXU and applies the power chain without leaving VMEM.
+def _power_scatter_kernel(
+    place_ref, cabs_ref, gabs_ref,                 # (JK,)
+    capc_ref, capg_ref, idle_ref, cdyn_ref, gdyn_ref, up_ref, maxw_ref,  # (bn,)
+    it_ref, inp_ref, cf_ref, gf_ref,               # (bn,)
+    *,
+    block_n: int,
+    rect_peak: float,
+    rect_load: float,
+    rect_curv: float,
+    conv_eff: float,
+):
+    j = pl.program_id(0)
+    ids = j * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    onehot = (place_ref[...][:, None] == ids).astype(jnp.float32)  # (JK, bn)
+    cpu_node = jnp.dot(cabs_ref[...][None, :], onehot,
+                       preferred_element_type=jnp.float32)[0]
+    gpu_node = jnp.dot(gabs_ref[...][None, :], onehot,
+                       preferred_element_type=jnp.float32)[0]
+    cf = jnp.clip(cpu_node / jnp.maximum(capc_ref[...], 1e-6), 0.0, 1.0)
+    gf = jnp.clip(gpu_node / jnp.maximum(capg_ref[...], 1e-6), 0.0, 1.0)
+    it = (idle_ref[...] + cf * cdyn_ref[...] + gf * gdyn_ref[...]) * up_ref[...]
+    load = jnp.clip(it / jnp.maximum(maxw_ref[...], 1.0), 0.0, 1.2)
+    eta = jnp.clip(rect_peak - rect_curv * jnp.square(load - rect_load), 0.5, 1.0)
+    it_ref[...] = it.astype(it_ref.dtype)
+    inp_ref[...] = (it / (eta * conv_eff)).astype(inp_ref.dtype)
+    cf_ref[...] = cf.astype(cf_ref.dtype)
+    gf_ref[...] = gf.astype(gf_ref.dtype)
+
+
+def power_scatter_pallas(
+    place_flat: jax.Array,    # (JK,) int32 node ids; -1 = unused slot
+    cpu_abs: jax.Array,       # (JK,) utilized cpu cores per slot
+    gpu_abs: jax.Array,       # (JK,)
+    cap_cpu: jax.Array,       # (N,)
+    cap_gpu: jax.Array,       # (N,)
+    idle_w: jax.Array,        # (N,)
+    cpu_dyn_w: jax.Array,
+    gpu_dyn_w: jax.Array,
+    node_up: jax.Array,       # (N,)
+    node_max_w: jax.Array,    # (N,)
+    *,
+    rect_peak: float,
+    rect_load: float,
+    rect_curv: float,
+    conv_eff: float,
+    block_n: int = 128,
+    interpret: bool = True,
+):
+    """Returns (node_it_w, node_input_w, cpu_frac, gpu_frac), each (N,).
+
+    Validated against ``ref.power_scatter_ref``. vmap adds a leading grid
+    dim, so the vectorized twin batches replicas for free.
+    """
+    n = idle_w.shape[0]
+    jk = place_flat.shape[0]
+    block_n = min(block_n, n)
+    pad_n = (-n) % block_n
+    if pad_n:
+        padN = lambda a, v=0.0: jnp.pad(a, (0, pad_n), constant_values=v)
+        cap_cpu, cap_gpu = padN(cap_cpu), padN(cap_gpu)
+        idle_w, cpu_dyn_w, gpu_dyn_w = (
+            padN(idle_w), padN(cpu_dyn_w), padN(gpu_dyn_w))
+        node_up, node_max_w = padN(node_up), padN(node_max_w, 1.0)
+    pad_jk = (-jk) % 128                 # lane-align the placement table
+    if pad_jk:
+        place_flat = jnp.pad(place_flat, (0, pad_jk), constant_values=-1)
+        cpu_abs = jnp.pad(cpu_abs, (0, pad_jk))
+        gpu_abs = jnp.pad(gpu_abs, (0, pad_jk))
+    nb = (n + pad_n) // block_n
+
+    kernel = functools.partial(
+        _power_scatter_kernel, block_n=block_n, rect_peak=rect_peak,
+        rect_load=rect_load, rect_curv=rect_curv, conv_eff=conv_eff,
+    )
+    full = pl.BlockSpec((jk + pad_jk,), lambda j: (0,))
+    blk = pl.BlockSpec((block_n,), lambda j: (j,))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[full, full, full] + [blk] * 7,
+        out_specs=[blk] * 4,
+        out_shape=[jax.ShapeDtypeStruct((n + pad_n,), jnp.float32)] * 4,
+        interpret=interpret,
+    )(place_flat, cpu_abs, gpu_abs, cap_cpu, cap_gpu, idle_w, cpu_dyn_w,
+      gpu_dyn_w, node_up, node_max_w)
+    return tuple(o[:n] for o in outs)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attn import flash_attention_fwd
 from repro.kernels.mamba_scan import selective_scan_pallas
-from repro.kernels.node_power import node_power_pallas
+from repro.kernels.node_power import node_power_pallas, power_scatter_pallas
 
 
 def _default_interpret() -> bool:
@@ -92,6 +92,19 @@ def node_power(cpu_frac, gpu_frac, idle_w, cpu_dyn_w, gpu_dyn_w, node_up,
                node_max_w, *, rect_peak, rect_load, rect_curv, conv_eff):
     return node_power_pallas(
         cpu_frac, gpu_frac, idle_w, cpu_dyn_w, gpu_dyn_w, node_up, node_max_w,
+        rect_peak=rect_peak, rect_load=rect_load, rect_curv=rect_curv,
+        conv_eff=conv_eff, interpret=_default_interpret(),
+    )
+
+
+def power_scatter(place_flat, cpu_abs, gpu_abs, cap_cpu, cap_gpu, idle_w,
+                  cpu_dyn_w, gpu_dyn_w, node_up, node_max_w, *,
+                  rect_peak, rect_load, rect_curv, conv_eff):
+    """Fused placement-scatter + power chain (job table -> per-node power).
+    Returns (node_it_w, node_input_w, cpu_frac, gpu_frac)."""
+    return power_scatter_pallas(
+        place_flat, cpu_abs, gpu_abs, cap_cpu, cap_gpu, idle_w, cpu_dyn_w,
+        gpu_dyn_w, node_up, node_max_w,
         rect_peak=rect_peak, rect_load=rect_load, rect_curv=rect_curv,
         conv_eff=conv_eff, interpret=_default_interpret(),
     )

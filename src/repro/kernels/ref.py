@@ -140,3 +140,39 @@ def node_power_ref(
     )
     input_w = it / (eta_rect * conv_eff)
     return it, input_w
+
+
+def power_scatter_ref(
+    place_flat,       # (J*K,) int32 node ids, -1 = unused placement slot
+    cpu_abs,          # (J*K,) absolute utilized cpu cores per slot
+    gpu_abs,          # (J*K,) absolute utilized gpus per slot
+    cap_cpu,          # (N,) node cpu capacity
+    cap_gpu,          # (N,)
+    idle_w,           # (N,)
+    cpu_dyn_w,        # (N,)
+    gpu_dyn_w,        # (N,)
+    node_up,          # (N,) 1.0 if node is healthy
+    node_max_w,       # (N,)
+    *,
+    rect_peak: float,
+    rect_load: float,
+    rect_curv: float,
+    conv_eff: float,
+):
+    """Fused placement-scatter + power-chain oracle: job table -> per-node
+    IT/input power and load fractions in one logical pass.
+
+    Returns (node_it_w, node_input_w, cpu_frac, gpu_frac), each (N,).
+    """
+    N = idle_w.shape[0]
+    safe = jnp.where(place_flat >= 0, place_flat, 0)   # invalid slots add 0
+    cpu_node = jnp.zeros((N,), jnp.float32).at[safe].add(cpu_abs, mode="drop")
+    gpu_node = jnp.zeros((N,), jnp.float32).at[safe].add(gpu_abs, mode="drop")
+    cpu_frac = jnp.clip(cpu_node / jnp.maximum(cap_cpu, 1e-6), 0.0, 1.0)
+    gpu_frac = jnp.clip(gpu_node / jnp.maximum(cap_gpu, 1e-6), 0.0, 1.0)
+    it, input_w = node_power_ref(
+        cpu_frac, gpu_frac, idle_w, cpu_dyn_w, gpu_dyn_w, node_up,
+        node_max_w, rect_peak=rect_peak, rect_load=rect_load,
+        rect_curv=rect_curv, conv_eff=conv_eff,
+    )
+    return it, input_w, cpu_frac, gpu_frac

