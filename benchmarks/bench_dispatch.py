@@ -3,11 +3,18 @@
 Rows:
   dispatch_first_fit_*      sort-free cumsum placement vs the legacy argsort
                             path, vmapped over a batch of random states
+  placement_<strategy>_*    the two-stage engine's placement strategies
+                            (best_fit/spread/partition/green vs first_fit),
+                            vmapped over the same batch
   dispatch_wavefront_jaxpr  jaxpr size of the fori_loop dispatch wavefront
                             vs attempts (stays ~constant; the unrolled loop
                             grew linearly)
   power_scatter_fused       fused job-table -> node-power Pallas pass vs the
                             two-pass scatter + node-power path
+  policy_grid_*             (bench_policy_grid) the policy-as-data engine:
+                            a full selection x placement grid through ONE
+                            compiled run_fleet call vs one jit compile per
+                            eager policy pair
 
 ``smoke=True`` shrinks every size so the whole bench runs in seconds (the
 CI benchmark smoke job).
@@ -87,6 +94,20 @@ def bench_dispatch(smoke: bool = False) -> List[Row]:
          f"{dt_old/dt_new:.2f}x;bit_equal={equal}"),
     ]
 
+    # placement-strategy microbench: every strategy of the two-stage
+    # engine, vmapped over the same randomized batch
+    from repro.core import placement as plc
+
+    for pname, pfn in plc.PLACEMENTS.items():
+        pf = jax.jit(jax.vmap(
+            lambda s, j, pfn=pfn: pfn(s, statics, j)))
+        dt_p = _timeit(pf, states, jobsel, n=n_iter)
+        rows.append((
+            f"placement_{pname}_B{B}_N{cfg.n_nodes}", dt_p * 1e6,
+            f"placements_per_s={B/dt_p:,.0f};"
+            f"vs_first_fit={dt_p/dt_new:.2f}x",
+        ))
+
     # jaxpr growth vs dispatch attempts (fori_loop wavefront => ~constant)
     sizes = []
     for spp in (1, 8):
@@ -118,3 +139,104 @@ def bench_dispatch(smoke: bool = False) -> List[Row]:
         f"two_pass_us={dt_2p*1e6:.1f};max_err={err:.1e}",
     ))
     return rows
+
+
+def bench_policy_grid(smoke: bool = False) -> List[Row]:
+    """Policy-as-data vs per-policy recompiles — the refactor's headline.
+
+    Sweeps the FULL selection x placement grid two ways, timed COLD
+    (compile included, because compile time is exactly what the
+    policy-as-data engine amortizes):
+
+      - single-compile: all P policies as traced (select_id, place_id)
+        int32s down one vmapped ``run_fleet`` call (one executable);
+      - per-policy: one eager ``make_step``/``run_episode`` jit per
+        (selection, placement) pair — P compilations.
+
+    A third row times both paths WARM (executables cached): under vmap
+    the ``lax.switch`` engine executes every selection/placement branch
+    per lane, so its steady-state step is costlier than an eager
+    single-policy step — the row exposes that branch overhead so the
+    cold speedup is never mistaken for a steady-state one.
+    """
+    from repro.configs.sim import NodeType, SimConfig, tiny_cluster
+    from repro.core import (
+        PLACEMENTS,
+        SCHEDULERS,
+        build_statics,
+        init_state,
+        load_jobs,
+        policy_grid,
+        run_episode,
+        run_fleet,
+    )
+    from repro.data import synth_workload
+
+    if smoke:
+        cfg = tiny_cluster()
+        n_jobs, n_steps = 16, 20
+        selects, places = ["fcfs", "sjf"], ["first_fit", "best_fit", "green"]
+    else:
+        # a TX-GAIA rack pair (same scale as bench_sim's scheduler table)
+        cfg = SimConfig(
+            name="tx-gaia-racks",
+            node_types=(
+                NodeType("txg-v100", 48, 40, 2, 384.0, 240.0, 260.0, 55.0,
+                         245.0, 17_900.0),
+                NodeType("xeon-p8", 16, 48, 0, 192.0, 160.0, 330.0, 0.0, 0.0,
+                         3_300.0),
+            ),
+            max_jobs=256, max_nodes_per_job=16,
+        )
+        n_jobs, n_steps = 180, 240
+        selects, places = list(SCHEDULERS), list(PLACEMENTS)
+    jobs, bank = synth_workload(cfg, n_jobs, 900.0, seed=3)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+
+    names, grid = policy_grid(selects, places)
+    P = len(names)
+
+    # --- single compile: the whole grid is one vmapped jitted call
+    t0 = time.perf_counter()
+    fs, tel = run_fleet(cfg, statics, state, n_steps, policies=grid,
+                        summary_only=True)
+    jax.block_until_ready(tel)
+    dt_grid = time.perf_counter() - t0
+
+    # --- per-policy eager: one fresh executable per (select, place) pair
+    t0 = time.perf_counter()
+    eager_runs = []
+    for name in names:
+        sel, pl = name.split("+")
+        run = jax.jit(lambda s, sel=sel, pl=pl: run_episode(
+            cfg, statics, s, n_steps, sel, placement=pl, summary_only=True))
+        jax.block_until_ready(run(state))
+        eager_runs.append(run)
+    dt_eager = time.perf_counter() - t0
+
+    # --- warm steady state: cached executables, same sweeps again
+    t0 = time.perf_counter()
+    _, tel2 = run_fleet(cfg, statics, state, n_steps, policies=grid,
+                        summary_only=True)
+    jax.block_until_ready(tel2)
+    warm_grid = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for run in eager_runs:
+        jax.block_until_ready(run(state))
+    warm_eager = time.perf_counter() - t0
+
+    return [
+        (f"policy_grid_single_compile_P{P}", dt_grid / P * 1e6,
+         f"policies={P};steps={n_steps};wall_s={dt_grid:.2f};"
+         f"compiles=1;cold=TRUE"),
+        (f"policy_grid_per_policy_recompile_P{P}", dt_eager / P * 1e6,
+         f"wall_s={dt_eager:.2f};compiles={P};"
+         f"single_compile_speedup={dt_eager/dt_grid:.2f}x;cold=TRUE"),
+        (f"policy_grid_warm_P{P}",
+         warm_grid / P / n_steps * 1e6,
+         f"us_per_policy_step_grid={warm_grid/P/n_steps*1e6:.1f};"
+         f"us_per_policy_step_eager={warm_eager/P/n_steps*1e6:.1f};"
+         f"switch_branch_overhead={warm_grid/max(warm_eager,1e-9):.2f}x;"
+         f"cold=FALSE"),
+    ]

@@ -50,13 +50,25 @@ def _next_artifact_path() -> str:
     return os.path.join(BENCH_DIR, f"BENCH_{max(taken, default=0) + 1}.json")
 
 
+def _named(fn, name, **kw):
+    def run():
+        return fn(**kw)
+
+    run.__name__ = name
+    return run
+
+
 def _benches(smoke: bool):
-    from benchmarks.bench_dispatch import bench_dispatch
+    from benchmarks.bench_dispatch import bench_dispatch, bench_policy_grid
 
     if smoke:
         from benchmarks.bench_sim import bench_vectorized_envs
 
-        return [lambda: bench_dispatch(smoke=True), bench_vectorized_envs]
+        return [
+            _named(bench_dispatch, "bench_dispatch", smoke=True),
+            bench_vectorized_envs,
+            _named(bench_policy_grid, "bench_policy_grid", smoke=True),
+        ]
 
     from benchmarks.bench_fleet import bench_fleet
     from benchmarks.bench_kernels import bench_kernels
@@ -82,6 +94,7 @@ def _benches(smoke: bool):
         bench_rl_training,
         bench_vectorized_envs,
         bench_dispatch,
+        bench_policy_grid,
         bench_fleet,
         bench_kernels,
         bench_train_reduced,
@@ -96,11 +109,24 @@ def main(argv=None) -> None:
                     help="tiny configs only (CI benchmark smoke gate)")
     ap.add_argument("--out", default=None,
                     help="artifact path (default: benchmarks/BENCH_<n>.json)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filter on bench function "
+                         "names (e.g. --only policy_grid,dispatch)")
     args = ap.parse_args(argv)
+
+    benches = _benches(args.smoke)
+    if args.only:
+        pats = [p.strip() for p in args.only.split(",") if p.strip()]
+        benches = [
+            b for b in benches
+            if any(p in getattr(b, "__name__", repr(b)) for p in pats)
+        ]
+        if not benches:
+            raise SystemExit(f"--only {args.only!r} matched no benches")
 
     print("name,us_per_call,derived")
     rows, failed = [], []
-    for bench in _benches(args.smoke):
+    for bench in benches:
         try:
             for name, us, derived in bench():
                 print(f"{name},{us:.1f},{derived}", flush=True)
@@ -113,9 +139,16 @@ def main(argv=None) -> None:
             failed.append(name)
             print(f"{name},nan,FAILED:{e!r}", flush=True)
 
-    # smoke numbers (tiny configs) must not enter the BENCH_<n> trajectory
+    # smoke numbers (tiny configs) and --only subsets must not claim a
+    # numbered BENCH_<n> trajectory slot by default: numbered artifacts are
+    # diffed row-by-row across PRs, so partial row sets break the
+    # comparison (pass --out explicitly to place one deliberately).
+    # --only wins over --smoke so a filtered smoke run can never overwrite
+    # the full-row BENCH_smoke.json either.
     if args.out:
         out = args.out
+    elif args.only:
+        out = os.path.join(BENCH_DIR, "BENCH_partial.json")
     elif args.smoke:
         out = os.path.join(BENCH_DIR, "BENCH_smoke.json")
     else:
@@ -124,6 +157,7 @@ def main(argv=None) -> None:
         json.dump({
             "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "mode": "smoke" if args.smoke else "full",
+            "only": args.only,
             "failed": failed,
             "rows": rows,
         }, f, indent=1)

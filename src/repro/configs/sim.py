@@ -94,6 +94,18 @@ class SimConfig:
         )
 
 
+def partition_type_indices(cfg: SimConfig) -> Tuple[int, int]:
+    """(first GPU-bearing type index, first CPU-only type index) — THE
+    partition-tag fallback rule, shared by the workload loaders
+    (``data.synth_trace`` / ``data.trace_io``). -1 = the config has no
+    type of that kind, so jobs get tag -1 (any node)."""
+    gpu_ti = next((i for i, t in enumerate(cfg.node_types) if t.gpus > 0),
+                  -1)
+    cpu_ti = next((i for i, t in enumerate(cfg.node_types) if t.gpus == 0),
+                  -1)
+    return gpu_ti, cpu_ti
+
+
 def tx_gaia(**overrides) -> SimConfig:
     """MIT SuperCloud TX-GAIA twin (GPU partition + CPU partition)."""
     types = (

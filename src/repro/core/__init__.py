@@ -3,7 +3,16 @@ digital twin — trace replay, rescheduling, power/cooling/carbon chain,
 network congestion, failures — as a pure-JAX vectorized simulator.
 """
 
-from repro.core.fleet import fleet_summary, run_fleet
+from repro.core.fleet import fleet_summary, policy_scenario_grid, run_fleet
+from repro.core.placement import (
+    PLACE_IDS,
+    PLACEMENTS,
+    Policy,
+    make_policy,
+    policy_grid,
+    stack_policies,
+)
+from repro.core.schedulers import SCHEDULERS, SELECT_IDS
 from repro.core.sim import (
     StepOut,
     TelemetrySummary,

@@ -1,11 +1,15 @@
 """Vmapped fleet runner: N datacenter replicas, heterogeneous grid
-scenarios, one compiled call.
+scenarios AND heterogeneous scheduling policies, one compiled call.
 
 ``run_fleet`` broadcasts one initial ``SimState``/``Statics`` across R
 replicas, installs a per-replica ``Scenario`` (batched pytree from
-``scenarios.stack_scenarios`` / ``sample_scenarios``), splits the PRNG key
+``scenarios.stack_scenarios`` / ``sample_scenarios``) and optionally a
+per-replica ``placement.Policy`` (batched (select_id, place_id) int32s
+from ``placement.stack_policies`` / ``policy_grid``), splits the PRNG key
 per replica, and runs ``vmap(lax.scan(step))`` under a single ``jit`` —
-the scenario-sweep engine for the paper's sustainability-policy studies.
+the policy x scenario sweep engine for the paper's sustainability-policy
+studies. Because policies are data (ids resolved by ``lax.switch`` inside
+the step), the whole grid costs ONE compilation, not one per policy.
 
 Memory notes: the replica-batched state and key buffers are DONATED to the
 compiled call (XLA reuses them for the final states), and the telemetry
@@ -25,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.sim import SimConfig
+from repro.core.placement import Policy, make_policy, stack_policies
 from repro.core.sim import StepOut, TelemetrySummary, run_episode, summary
 from repro.core.state import SimState, Statics
 from repro.scenarios.scenario import Scenario, n_replicas, stack_scenarios
@@ -37,21 +42,79 @@ def _ensure_batched(scenarios) -> Scenario:
     return stack_scenarios(list(scenarios))
 
 
+def _as_policy(p) -> Policy:
+    # NB: Policy is itself a (Named)tuple — test for it before the
+    # (select, place) name-tuple form
+    if isinstance(p, Policy):
+        return p
+    return make_policy(*p)
+
+
+def _policy_list(policies) -> List[Policy]:
+    """Normalize any accepted policies input — a single Policy, a batched
+    Policy (leading replica axis, e.g. from ``policy_grid``), or a list of
+    Policies / (select, place) name tuples — to a list of scalar
+    Policies."""
+    if isinstance(policies, Policy):
+        if jnp.ndim(policies.select) == 0:
+            return [policies]
+        return [jax.tree.map(lambda a: a[i], policies)
+                for i in range(int(jnp.shape(policies.select)[0]))]
+    return [_as_policy(p) for p in policies]
+
+
+def _ensure_batched_policies(policies) -> Policy:
+    if isinstance(policies, Policy) and jnp.ndim(policies.select) == 1:
+        return policies
+    return stack_policies(_policy_list(policies))
+
+
+def _scenario_list(scenarios) -> List[Scenario]:
+    """Normalize a single Scenario, a batched Scenario (leading replica
+    axis), or an iterable of Scenarios to a list of unbatched Scenarios —
+    iterating a Scenario NamedTuple directly would yield its FIELDS, not
+    its replicas."""
+    if isinstance(scenarios, Scenario):
+        if jnp.ndim(scenarios.carbon.mean) == 0:
+            return [scenarios]
+        return [jax.tree.map(lambda a: a[i], scenarios)
+                for i in range(n_replicas(scenarios))]
+    return list(scenarios)
+
+
+def policy_scenario_grid(
+    policies, scenarios: Scenario | Sequence[Scenario]
+) -> Tuple[Policy, Scenario]:
+    """Cross P policies x S scenarios -> (batched Policy, batched Scenario)
+    of length P*S, ready for ``run_fleet`` (replica i = policy i // S with
+    scenario i % S). ``policies``: an already-batched Policy (e.g. from
+    ``policy_grid``), Policy instances, or (select, place) name tuples;
+    ``scenarios``: an already-batched Scenario (e.g. from
+    ``sample_scenarios``) or a list of Scenarios."""
+    pols = _policy_list(policies)
+    scns = _scenario_list(scenarios)
+    crossed = stack_policies([p for p in pols for _ in scns])
+    return crossed, stack_scenarios(scns * len(pols))
+
+
 # Module-level so repeated run_fleet calls with the same static config reuse
 # the compiled executable (cfg is a frozen dataclass => hashable; statics /
-# scenarios / state / keys are traced). ``state``/``keys`` arrive replica-
-# batched and are donated: XLA reuses their buffers for the final states.
+# scenarios / policies / state / keys are traced). ``state``/``keys``
+# arrive replica-batched and are donated: XLA reuses their buffers for the
+# final states.
 @partial(jax.jit, static_argnames=("cfg", "n_steps", "scheduler", "kw_items"),
          donate_argnames=("state", "keys"))
-def _fleet(cfg, statics, scenarios, state, keys, n_steps, scheduler, kw_items):
+def _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
+           scheduler, kw_items):
     kw = dict(kw_items)
 
-    def one(scn: Scenario, key: jax.Array, st: SimState):
+    def one(scn: Scenario, pol, key: jax.Array, st: SimState):
         st = st._replace(key=key)
         stt = statics._replace(scenario=scn)
-        return run_episode(cfg, stt, st, n_steps, scheduler, **kw)
+        who = scheduler if pol is None else pol
+        return run_episode(cfg, stt, st, n_steps, who, **kw)
 
-    return jax.vmap(one)(scenarios, keys, state)
+    return jax.vmap(one)(scenarios, policies, keys, state)
 
 
 def run_fleet(
@@ -59,15 +122,27 @@ def run_fleet(
     statics: Statics,
     state: SimState,
     n_steps: int,
-    scheduler: str = "fcfs",
+    scheduler: str | None = None,
     *,
     scenarios: Scenario | Sequence[Scenario] | None = None,
+    policies: Policy | Sequence[Policy | Tuple[str, str]] | None = None,
     **kw,
 ) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Simulate R replicas of the twin for ``n_steps`` in one jitted call.
 
+    ``scheduler``: eager selection-policy name every replica runs
+    (default 'fcfs'); mutually exclusive with ``policies`` (which carry
+    the selection stage per replica — passing both is a loud error, not
+    a silent override).
     ``scenarios``: batched Scenario (leading replica axis), a list of
-    Scenarios (stacked here), or None (R=1, the statics' own scenario).
+    Scenarios (stacked here), or None (the statics' own scenario).
+    ``policies``: the per-replica POLICY axis — a batched ``Policy``, a
+    list of Policies or (select, place) name tuples, or None (every
+    replica runs the eager ``scheduler`` string). When both axes are
+    given their lengths must already match; build the cross product with
+    ``policy_scenario_grid`` (or ``placement.policy_grid`` + scenario
+    tiling). Policies are traced data, so ANY mix of selection x
+    placement rides the same compiled executable.
     All other statics (node constants, telemetry bank) are shared and
     broadcast; each replica gets its own PRNG stream.
 
@@ -83,7 +158,26 @@ def run_fleet(
 
     Returns (final_states, outs) with a leading replica axis on every leaf.
     """
-    if scenarios is None:
+    if policies is not None and scheduler is not None:
+        raise ValueError(
+            f"both scheduler={scheduler!r} and policies= given — policies "
+            "carry the selection stage, so the scheduler name would be "
+            "silently ignored; pass exactly one")
+    if scheduler is None:
+        scheduler = "fcfs"
+    if policies is not None:
+        policies = _ensure_batched_policies(policies)
+        P = int(jnp.shape(policies.select)[0])
+        if scenarios is None:
+            scenarios = stack_scenarios([statics.scenario] * P)
+        else:
+            scenarios = _ensure_batched(scenarios)
+            if n_replicas(scenarios) != P:
+                raise ValueError(
+                    f"{P} policies vs {n_replicas(scenarios)} scenarios — "
+                    "axes must match; build the cross product with "
+                    "policy_scenario_grid(policies, scenarios)")
+    elif scenarios is None:
         scenarios = stack_scenarios([statics.scenario])
     else:
         scenarios = _ensure_batched(scenarios)
@@ -102,8 +196,8 @@ def run_fleet(
         # donate one buffer twice
         keys = jax.vmap(lambda k: jax.random.fold_in(k, 1))(state.key)
     kw_items = tuple(sorted(kw.items()))
-    return _fleet(cfg, statics, scenarios, state, keys, n_steps, scheduler,
-                  kw_items)
+    return _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
+                  scheduler, kw_items)
 
 
 def fleet_summary(final_states: SimState) -> List[Dict[str, float]]:

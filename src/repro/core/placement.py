@@ -1,0 +1,217 @@
+"""Node-placement strategies — stage (b) of the two-stage policy engine.
+
+Selection (``repro.core.schedulers``) answers *which job* to dispatch;
+placement answers *which nodes* host it. Every strategy shares one
+signature::
+
+    place(state, statics, job) -> (row (K,) int32 node ids, feasible bool)
+
+Strategies (RAPS/Slurm-style, [Maiterth et al. 2025] policy grids):
+
+- ``first_fit``  lowest-index feasible nodes (the sort-free cumsum path).
+- ``best_fit``   pack: feasible nodes with the LEAST remaining free
+                 capacity first — consolidates load, keeps whole nodes
+                 empty for large jobs (and for powering down).
+- ``spread``     balance: feasible nodes with the MOST remaining free
+                 capacity first — spreads heat/network load.
+- ``partition``  TX-GAIA partition semantics: a job tagged with node-type
+                 ``state.part[job]`` may only land on nodes of that type
+                 (tag -1 = any). First-fit order within the partition.
+- ``green``      sustainability: score nodes by (idle + dynamic) watts per
+                 peak GFLOP/s so placement prefers energy-efficient
+                 hardware; ties (homogeneous clusters) fall back to index
+                 order.
+
+Policy-as-data: ``PLACE_IDS`` maps names to int32 ids, ``place_job``
+resolves a *traced* id via ``lax.switch``, and ``Policy`` bundles a
+(select_id, place_id) pair — the unit ``run_fleet`` vmaps over so a
+policy x scenario grid runs in ONE compiled call (zero recompiles).
+
+Score-based strategies use ``lax.top_k`` on the negated score — O(N log K)
+instead of a full argsort — and ``top_k`` breaks ties by lowest index, so
+every strategy degenerates to ``first_fit`` ordering when its scores are
+constant (property-tested in ``tests/test_placement.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedulers as sched
+from repro.core.state import SimState, Statics
+
+
+def partition_mask(state: SimState, statics: Statics,
+                   job: jax.Array) -> jax.Array:
+    """(N,) bool: nodes whose type matches the job's partition tag
+    (tag < 0 = untagged job, any node allowed). Per-job form of the
+    shared ``schedulers.partition_ok`` rule."""
+    return sched.partition_ok(state.part[job], statics.node_type)
+
+
+def _score_place(
+    state: SimState,
+    job: jax.Array,
+    score: jax.Array,
+    mask: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Choose `n_nodes[job]` feasible nodes with the LOWEST score (ties by
+    lowest index — `lax.top_k` keeps first occurrences, so a constant
+    score reproduces first-fit ordering exactly)."""
+    K = state.placement.shape[1]
+    N = state.free.shape[1]
+    ok = sched.feasible_nodes(state, job)
+    if mask is not None:
+        ok = ok & mask
+    n_req = state.n_nodes[job]
+    key = jnp.where(ok, score, jnp.inf)
+    kk = min(K, N)
+    _, idx = jax.lax.top_k(-key, kk)
+    idx = idx.astype(jnp.int32)
+    if kk < K:
+        idx = jnp.concatenate([idx, -jnp.ones((K - kk,), jnp.int32)])
+    slots = jnp.arange(K)
+    row = jnp.where(slots < n_req, idx, -1)
+    enough = jnp.sum(ok) >= n_req
+    return jnp.where(enough, row, -1), enough
+
+
+def _free_frac(state: SimState, statics: Statics) -> jax.Array:
+    """(N,) mean free fraction across resources — the remaining-capacity
+    score shared by best_fit (ascending) and spread (descending)."""
+    return jnp.mean(
+        state.free / jnp.maximum(statics.capacity, 1e-6), axis=0)
+
+
+def watts_per_gflop(statics: Statics) -> jax.Array:
+    """(N,) full-load watts per peak GFLOP/s — the `green` node score."""
+    return statics.node_max_w / jnp.maximum(statics.peak_gflops, 1.0)
+
+
+def place_first_fit(state: SimState, statics: Statics, job: jax.Array):
+    return sched.first_fit(state, job, state.placement.shape[1])
+
+
+def place_best_fit(state: SimState, statics: Statics, job: jax.Array):
+    return _score_place(state, job, _free_frac(state, statics))
+
+
+def place_spread(state: SimState, statics: Statics, job: jax.Array):
+    return _score_place(state, job, -_free_frac(state, statics))
+
+
+def place_partition(state: SimState, statics: Statics, job: jax.Array):
+    return _score_place(state, job, jnp.zeros_like(statics.idle_w),
+                        mask=partition_mask(state, statics, job))
+
+
+def place_green(state: SimState, statics: Statics, job: jax.Array):
+    return _score_place(state, job, watts_per_gflop(statics))
+
+
+PLACEMENTS: Dict[str, object] = {
+    "first_fit": place_first_fit,
+    "best_fit": place_best_fit,
+    "spread": place_spread,
+    "partition": place_partition,
+    "green": place_green,
+}
+
+# policy-as-data ids: position in PLACEMENTS (insertion-ordered) — the
+# branch order of the `place_job` lax.switch
+PLACE_IDS = {name: i for i, name in enumerate(PLACEMENTS)}
+
+# Per-strategy node-eligibility masks BEYOND the free pool, as batched
+# (state, statics) -> (J, N) functions; None = every node eligible.
+# Selection (EASY's no-doomed-pick guarantee) and RL observations resolve
+# masking through this registry, so a future masking strategy (racks,
+# reservations, ...) needs exactly one entry here.
+PLACEMENT_MASKS: Dict[str, object] = {
+    "first_fit": None,
+    "best_fit": None,
+    "spread": None,
+    "partition": sched.partition_mask_all,
+    "green": None,
+}
+assert set(PLACEMENT_MASKS) == set(PLACEMENTS)
+
+
+def placement_node_mask(state: SimState, statics: Statics,
+                        place_id: jax.Array) -> jax.Array:
+    """(J, N) node eligibility for a *traced* placement id: the masks of
+    all masking strategies, each gated on ``place_id`` (non-masking ids
+    resolve to all-True)."""
+    J = state.jstate.shape[0]
+    N = state.free.shape[1]
+    mask = jnp.ones((J, N), bool)
+    for name, fn in PLACEMENT_MASKS.items():
+        if fn is None:
+            continue
+        use = place_id == PLACE_IDS[name]
+        mask = mask & (fn(state, statics) | jnp.logical_not(use))
+    return mask
+
+
+def place_job(state: SimState, statics: Statics, job: jax.Array,
+              place_id: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Resolve a *traced* int32 placement id via ``lax.switch`` — every
+    strategy lives in ONE compiled step, so sweeping the placement axis
+    costs zero recompiles."""
+    branches = tuple(PLACEMENTS.values())
+    return jax.lax.switch(place_id, branches, state, statics, job)
+
+
+def feasible_under(name: str, state: SimState, statics: Statics,
+                   job: jax.Array) -> jax.Array:
+    """(N,) bool: nodes the named placement backend would consider for
+    `job` right now (free-pool feasibility plus the backend's registered
+    mask). Used by ``SchedEnv`` so RL observations reflect the active
+    backend."""
+    ok = sched.feasible_nodes(state, job)
+    mask_fn = PLACEMENT_MASKS[name]
+    if mask_fn is not None:
+        ok = ok & mask_fn(state, statics)[job]
+    return ok
+
+
+# --------------------------------------------------------------- policies
+class Policy(NamedTuple):
+    """Policy-as-data: a (selection, placement) pair of traced int32 ids.
+
+    Passed *as an argument* through ``run_episode``/``run_fleet`` (never
+    closed over), a Policy changes scheduling behavior without touching
+    the compiled step — the full selection x placement grid is one jit
+    cache entry.
+    """
+
+    select: jax.Array          # int32 id into schedulers.SELECT_IDS
+    place: jax.Array           # int32 id into PLACE_IDS
+
+
+def make_policy(select: str = "fcfs", place: str = "first_fit") -> Policy:
+    if select not in sched.SELECT_IDS:
+        raise KeyError(f"unknown selection {select!r}; "
+                       f"one of {list(sched.SELECT_IDS)}")
+    if place not in PLACE_IDS:
+        raise KeyError(f"unknown placement {place!r}; "
+                       f"one of {list(PLACE_IDS)}")
+    return Policy(select=jnp.int32(sched.SELECT_IDS[select]),
+                  place=jnp.int32(PLACE_IDS[place]))
+
+
+def stack_policies(policies: Sequence[Policy]) -> Policy:
+    """Stack Policies leaf-wise -> leading replica axis (the policy analog
+    of ``scenarios.stack_scenarios``)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *policies)
+
+
+def policy_grid(
+    selects: Sequence[str], places: Sequence[str]
+) -> Tuple[Sequence[str], Policy]:
+    """Cross selections x placements -> (names, batched Policy)."""
+    names = [f"{s}+{p}" for s in selects for p in places]
+    pols = [make_policy(s, p) for s in selects for p in places]
+    return names, stack_policies(pols)

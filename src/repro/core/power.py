@@ -84,19 +84,10 @@ def node_loads(cfg: SimConfig, state: SimState, statics: Statics,
     return cpu_frac, gpu_frac
 
 
-def wetbulb_c(cfg: SimConfig, t: jax.Array) -> jax.Array:
-    """Legacy parametric wetbulb; ``default_scenario`` reproduces this.
-    The sim itself now reads ``statics.scenario.wetbulb``."""
-    phase = 2 * jnp.pi * (t / cfg.day_seconds)
-    return cfg.wetbulb_mean_c + cfg.wetbulb_amp_c * jnp.sin(phase - jnp.pi / 2)
-
-
-def carbon_intensity(cfg: SimConfig, t: jax.Array) -> jax.Array:
-    """Legacy parametric gCO2/kWh (higher at night when solar is absent);
-    ``default_scenario`` reproduces this. The sim itself now reads
-    ``statics.scenario.carbon``."""
-    phase = 2 * jnp.pi * (t / cfg.day_seconds)
-    return cfg.carbon_mean - cfg.carbon_amp * jnp.sin(phase - jnp.pi / 2)
+# NOTE: the legacy parametric shims `wetbulb_c` / `carbon_intensity` that
+# used to live here are gone — `scenarios.default_scenario(cfg)` builds the
+# identical sinusoids as Signals and the sim reads `statics.scenario.*`
+# (tests/test_scenarios.py pins the equivalence against the closed forms).
 
 
 def compute_power(cfg: SimConfig, state: SimState, statics: Statics,

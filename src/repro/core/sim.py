@@ -5,6 +5,15 @@ description and returns a pure jit-able ``step(state, action) ->
 (state, StepOut)``; an episode is ``lax.scan`` over steps, so the whole
 digital twin vmaps across thousands of parallel datacenters for RL.
 
+Scheduling is a two-stage engine: job *selection*
+(``core.schedulers``: replay/fcfs/sjf/priority/easy, or the external RL
+action) x node *placement* (``core.placement``: first_fit/best_fit/
+spread/partition/green). ``scheduler`` is either a policy name (eager,
+one Python branch baked into the trace) or a ``placement.Policy`` of
+traced (select_id, place_id) int32s resolved by ``lax.switch`` inside the
+compiled step — pass the Policy as a jit *argument* and one compilation
+serves the entire selection x placement grid.
+
 Step order (matches RAPS' fixed-dt loop):
   1. node failures / repairs (MTBF process)       [optional]
   2. job completions -> free resources, stats
@@ -22,8 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.sim import SimConfig
+from repro.core import placement as plc
 from repro.core import schedulers as sched
 from repro.core.network import congestion_slowdown
+from repro.core.placement import Policy
 from repro.core.power import PowerOut, compute_power
 from repro.scenarios.events import power_cap_at
 from repro.scenarios.signals import eval_signal
@@ -123,11 +134,12 @@ def _complete_jobs(cfg: SimConfig, state: SimState) -> Tuple[SimState, jax.Array
     return state, n_done
 
 
-def _try_start(cfg: SimConfig, state: SimState, job: jax.Array) -> SimState:
-    """Attempt to place & start `job` (no-op when job < 0 or infeasible)."""
-    K = state.placement.shape[1]
+def _try_start(cfg: SimConfig, state: SimState, job: jax.Array,
+               place_fn) -> SimState:
+    """Attempt to place & start `job` via the placement stage `place_fn`
+    (state, job) -> (row, ok); no-op when job < 0 or infeasible."""
     j = jnp.maximum(job, 0)
-    row, ok = sched.first_fit(state, j, K)
+    row, ok = place_fn(state, j)
     ok = ok & (job >= 0) & (state.jstate[j] == QUEUED)
     valid = (row >= 0) & ok
     safe = jnp.where(valid, row, 0)
@@ -146,25 +158,54 @@ def _try_start(cfg: SimConfig, state: SimState, job: jax.Array) -> SimState:
 def make_step(
     cfg: SimConfig,
     statics: Statics,
-    scheduler: str = "fcfs",
+    scheduler: str | Policy = "fcfs",
     *,
+    placement: str | None = None,
     starts_per_step: int = 2,
     reward_weights: Tuple[float, ...] = (1.0, 1.0, 1.0, 0.05),
     use_power_kernel: bool = False,
 ):
     """Returns step(state, action) -> (state, StepOut).
 
+    ``scheduler``: a selection name ('replay'|'fcfs'|'sjf'|'priority'|
+    'easy'), 'rl' (external action-driven selection), or a
+    ``placement.Policy`` of traced (select_id, place_id) int32s — the
+    policy-as-data mode where ``lax.switch`` resolves both stages inside
+    one compiled step (the Policy carries the placement id, so combining
+    it with an explicit ``placement=`` is a loud error).
+    ``placement``: node-placement strategy name (``core.placement``) for
+    the eager string/'rl' modes; default 'first_fit'.
     ``action``: int32 — for the 'rl' scheduler, index into
     ``rl_candidates`` (k = no-op at index k); ignored otherwise.
     reward_weights = (w_throughput, w_energy, w_carbon, w_queue[, w_cost]);
     w_cost scales the electricity-price penalty (default 0 — off).
     """
-    if scheduler != "rl" and scheduler not in sched.SCHEDULERS:
+    policy_mode = isinstance(scheduler, Policy)
+    if not policy_mode and scheduler != "rl" \
+            and scheduler not in sched.SCHEDULERS:
         raise KeyError(f"unknown scheduler {scheduler}")
+    if policy_mode and placement is not None:
+        raise ValueError(
+            f"both a Policy scheduler and placement={placement!r} given — "
+            "the Policy carries the placement id, so the string would be "
+            "silently ignored; pass exactly one")
+    if placement is None:
+        placement = "first_fit"
+    if placement not in plc.PLACEMENTS:
+        raise KeyError(f"unknown placement {placement}")
     if len(reward_weights) not in (4, 5):
         raise ValueError("reward_weights must have 4 or 5 entries")
     w_thr, w_en, w_co2, w_q = reward_weights[:4]
     w_cost = reward_weights[4] if len(reward_weights) == 5 else 0.0
+
+    if policy_mode:
+        def place_fn(s, j):
+            return plc.place_job(s, statics, j, scheduler.place)
+    else:
+        eager_place = plc.PLACEMENTS[placement]
+
+        def place_fn(s, j):
+            return eager_place(s, statics, j)
 
     def step(state: SimState, action: jax.Array) -> Tuple[SimState, StepOut]:
         state = state._replace(t=state.t + cfg.dt)
@@ -172,19 +213,38 @@ def make_step(
         state, n_done = _complete_jobs(cfg, state)
 
         # --- dispatch
-        if scheduler == "rl":
+        if not policy_mode and scheduler == "rl":
             cands = sched.rl_candidates(cfg, state)          # (k,)
             k = cands.shape[0]
             job = jnp.where(action < k, cands[jnp.clip(action, 0, k - 1)], -1)
-            state = _try_start(cfg, state, job)
+            state = _try_start(cfg, state, job, place_fn)
         else:
             # single fori_loop wavefront: the jaxpr holds ONE copy of the
             # select+place body regardless of starts_per_step (the unrolled
-            # loop grew trace size/compile time linearly with attempts)
-            select = sched.SCHEDULERS[scheduler]
+            # loop grew trace size/compile time linearly with attempts).
+            # Selection sees the placement backend's node eligibility
+            # (PLACEMENT_MASKS registry, e.g. partition tags) so it never
+            # picks a job placement rejects. Eligibility depends only on
+            # part/node_type — loop-invariant, so it is computed once per
+            # step, not per dispatch attempt.
+            if policy_mode:
+                node_mask = plc.placement_node_mask(state, statics,
+                                                    scheduler.place)
+
+                def select(c, s):
+                    return sched.select_job(c, s, statics, scheduler.select,
+                                            node_mask)
+            else:
+                eager_select = sched.SCHEDULERS[scheduler]
+                mask_fn = plc.PLACEMENT_MASKS[placement]
+                node_mask = None if mask_fn is None else mask_fn(state,
+                                                                 statics)
+
+                def select(c, s):
+                    return eager_select(c, s, statics, node_mask)
 
             def dispatch(_, s: SimState) -> SimState:
-                return _try_start(cfg, s, select(cfg, s))
+                return _try_start(cfg, s, select(cfg, s), place_fn)
 
             state = jax.lax.fori_loop(0, starts_per_step, dispatch, state)
 
@@ -351,13 +411,17 @@ def run_episode(
     statics: Statics,
     state: SimState,
     n_steps: int,
-    scheduler: str = "fcfs",
+    scheduler: str | Policy = "fcfs",
     *,
     telemetry_every: int = 1,
     summary_only: bool = False,
     **kw,
 ) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Scan `n_steps` of the twin under a non-RL policy.
+
+    ``scheduler`` may be a policy name or a traced ``placement.Policy``
+    (policy-as-data): jit a wrapper taking the Policy as an argument and
+    the whole selection x placement grid shares ONE compiled executable.
 
     Telemetry modes (both static, so each compiles once):
       - default: stacked per-step ``StepOut`` — O(n_steps * 16) memory;

@@ -53,6 +53,8 @@ class SimState(NamedTuple):
     work_left: jax.Array       # (J,) remaining work [s of unimpeded progress]
     n_nodes: jax.Array         # (J,) int32
     req: jax.Array             # (NRES, J) per-node demand
+    part: jax.Array            # (J,) int32 partition tag = node-type index a
+    #                            job belongs to; -1 = any (no partition)
     priority: jax.Array        # (J,)
     placement: jax.Array       # (J, K) int32 node ids; -1 = unused slot
     n_failures: jax.Array      # (J,) int32 restarts due to node failures
@@ -131,6 +133,7 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
         work_left=zJ,
         n_nodes=jnp.zeros((J,), jnp.int32),
         req=jnp.zeros((NRES, J), f),
+        part=-jnp.ones((J,), jnp.int32),
         priority=zJ,
         placement=-jnp.ones((J, K), jnp.int32),
         n_failures=jnp.zeros((J,), jnp.int32),
@@ -153,7 +156,9 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
 def load_jobs(state: SimState, jobs: Dict[str, np.ndarray]) -> SimState:
     """Install a workload (from the trace loader or synthesizer) into the
     job table. ``jobs`` fields: submit_t, dur, n_nodes, req (NRES, J'),
-    priority; J' <= max_jobs."""
+    priority, and optionally ``part`` (int32 node-type index per job;
+    -1 = any — the tag the ``partition`` placement enforces); J' <=
+    max_jobs."""
     J = state.jstate.shape[0]
     n = len(jobs["submit_t"])
     assert n <= J, f"workload has {n} jobs > max_jobs {J}"
@@ -165,6 +170,8 @@ def load_jobs(state: SimState, jobs: Dict[str, np.ndarray]) -> SimState:
         work_left=state.work_left.at[sl].set(jnp.asarray(jobs["dur"], jnp.float32)),
         n_nodes=state.n_nodes.at[sl].set(jnp.asarray(jobs["n_nodes"], jnp.int32)),
         req=state.req.at[:, sl].set(jnp.asarray(jobs["req"], jnp.float32)),
+        part=state.part.at[sl].set(jnp.asarray(
+            jobs.get("part", -np.ones(n)), jnp.int32)),
         priority=state.priority.at[sl].set(
             jnp.asarray(jobs.get("priority", np.zeros(n)), jnp.float32)
         ),

@@ -18,7 +18,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.configs.sim import SimConfig
+from repro.configs.sim import SimConfig, partition_type_indices
 
 
 def synth_workload(
@@ -46,8 +46,12 @@ def synth_workload(
     dur = np.clip(rng.lognormal(np.log(mean_dur_s), 0.9, J), 30.0, horizon_s)
     is_gpu = rng.random(J) < gpu_fraction
 
-    gpu_type = cfg.node_types[0]
-    cpu_type = cfg.node_types[-1]
+    # derive the partition types from the config (first GPU-bearing type,
+    # first CPU-only type) instead of assuming a gpu-first ordering;
+    # -1 tags = any node when the config lacks that kind
+    gpu_ti, cpu_ti = partition_type_indices(cfg)
+    gpu_type = cfg.node_types[gpu_ti if gpu_ti >= 0 else 0]
+    cpu_type = cfg.node_types[cpu_ti if cpu_ti >= 0 else -1]
     n_nodes = np.where(
         is_gpu,
         np.minimum(2 ** rng.integers(0, 3, J), cfg.max_nodes_per_job),
@@ -93,6 +97,9 @@ def synth_workload(
         "req": req,
         "priority": submit.astype(np.float32),   # replay: start ~ submit
         "is_gpu": is_gpu,
+        # partition tag = node-type index (mirroring TX-GAIA's xeon-g6 /
+        # xeon-p8 split); consumed by load_jobs -> `partition` placement
+        "part": np.where(is_gpu, gpu_ti, cpu_ti).astype(np.int32),
     }
     # pad trace bank to max_jobs
     Jmax = cfg.max_jobs

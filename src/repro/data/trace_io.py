@@ -21,7 +21,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.configs.sim import SimConfig
+from repro.configs.sim import SimConfig, partition_type_indices
 
 SCHED_COLS = [
     "job_id", "time_submit", "time_start", "time_end", "nodes_alloc",
@@ -163,9 +163,23 @@ def load_supercloud(
         if req[1, j] > 0 and gpu[j, :qmax].max() == 0:
             gpu[j, :qmax] = 0.7
 
+    # partition tag: match the CSV partition name against cfg node-type
+    # names; unknown names fall back to "needs GPUs -> first GPU type,
+    # else first CPU-only type" so TX-GAIA semantics survive renames, and
+    # to -1 (any node) when the config has no type of that kind — a made-up
+    # single-type confinement would silently skew utilization results
+    type_names = {t.name: i for i, t in enumerate(cfg.node_types)}
+    gpu_ti, cpu_ti = partition_type_indices(cfg)
+    part = np.array([
+        type_names.get(r.get("partition", ""),
+                       gpu_ti if req[1, i] > 0 else cpu_ti)
+        for i, r in enumerate(rows)
+    ], np.int32)
+
     jobs = {
         "submit_t": submit, "dur": dur.astype(np.float32), "n_nodes": n_nodes,
         "req": req, "priority": start,  # replay dispatches at recorded starts
+        "part": part,
     }
     bank = {"cpu": cpu, "gpu": gpu, "net_tx": np.zeros((Jmax,), np.float32)}
     return jobs, bank

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.sim import SimConfig
+from repro.core import placement as plc
 from repro.core import schedulers as sched
 from repro.core.sim import make_step
 from repro.scenarios import Scenario, eval_signal, power_cap_at
@@ -52,9 +53,18 @@ class SchedEnv:
         sim_steps_per_action: int = 15,
         reward_weights=(1.0, 1.0, 1.0, 0.05),
         scenario: Scenario | None = None,
+        placement: str = "first_fit",
     ):
         self.cfg = cfg
         self.reward_weights = tuple(reward_weights)
+        if placement not in plc.PLACEMENTS:
+            raise KeyError(f"unknown placement {placement}")
+        self.placement = placement
+        # one-hot placement-backend encoding appended to the global obs so
+        # one trained policy can condition on (and transfer across) the
+        # placement stage it schedules against
+        self._place_onehot = jnp.zeros((len(plc.PLACEMENTS),), jnp.float32
+                                       ).at[plc.PLACE_IDS[placement]].set(1.0)
         self.episode_steps = episode_steps
         self.k = cfg.sched_max_candidates
         self.n_actions = self.k + 1
@@ -103,7 +113,8 @@ class SchedEnv:
         # node constants + grid scenario (default: legacy diurnal sinusoids)
         self._base_statics = build_statics(cfg, scenario=scenario)
         # validate weights eagerly (step() builds the real step fn per call)
-        make_step(cfg, self._base_statics, "rl", reward_weights=reward_weights)
+        make_step(cfg, self._base_statics, "rl", placement=placement,
+                  reward_weights=reward_weights)
         self.obs_dim = int(self._obs_spec())
 
     # ------------------------------------------------------------------ api
@@ -120,6 +131,7 @@ class SchedEnv:
         J = self.cfg.max_jobs
         idx = jnp.arange(J)
         valid = idx < n
+        part = self._jobs.get("part")
         sim = sim._replace(
             jstate=jnp.where(valid, QUEUED, 0).astype(jnp.int32),
             submit_t=self._jobs["submit_t"][w],
@@ -127,6 +139,8 @@ class SchedEnv:
             work_left=self._jobs["dur"][w],
             n_nodes=jnp.where(valid, self._jobs["n_nodes"][w], 0).astype(jnp.int32),
             req=self._jobs["req"][w],
+            part=(sim.part if part is None
+                  else jnp.where(valid, part[w], -1).astype(jnp.int32)),
             priority=self._jobs["priority"][w],
         )
         st = EnvState(sim=sim, statics=statics, step_count=jnp.int32(0))
@@ -136,7 +150,8 @@ class SchedEnv:
         self, st: EnvState, action: jax.Array
     ) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
         step_fn = make_step(
-            self.cfg, st.statics, "rl", reward_weights=self.reward_weights
+            self.cfg, st.statics, "rl", placement=self.placement,
+            reward_weights=self.reward_weights,
         )
 
         # accumulate the reductions in the scan carry (constant memory)
@@ -176,7 +191,7 @@ class SchedEnv:
     # ------------------------------------------------------------ features
     def _obs_spec(self) -> int:
         n_types = self.cfg.n_types
-        return 10 + 3 * n_types + 8 * self.k
+        return 10 + len(plc.PLACEMENTS) + 3 * n_types + 8 * self.k
 
     def observe(self, st: EnvState) -> jax.Array:
         cfg, sim, statics = self.cfg, st.sim, st.statics
@@ -218,11 +233,17 @@ class SchedEnv:
         )                                                    # (3,k)
         # estimated energy proxy: nodes * dur * mean gpu util request
         eproxy = nn * dur
+        # feasibility under the ACTIVE placement backend (e.g. partition
+        # masks out wrong-type nodes), so the agent sees what placement
+        # will actually accept
         feasible = jax.vmap(
-            lambda j: jnp.sum(sched.feasible_nodes(sim, j))
+            lambda j: jnp.sum(
+                plc.feasible_under(self.placement, sim, statics, j))
         )(safe).astype(jnp.float32) / cfg.n_nodes
         cand_feats = jnp.concatenate([
             valid, wait * valid, dur * valid, nn * valid,
             reqf[0] * valid, reqf[1] * valid, eproxy * valid, feasible * valid,
         ])
-        return jnp.concatenate([glob, per_type, cand_feats]).astype(jnp.float32)
+        return jnp.concatenate(
+            [glob, self._place_onehot, per_type, cand_feats]
+        ).astype(jnp.float32)

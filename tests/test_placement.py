@@ -1,0 +1,423 @@
+"""Two-stage policy engine tests: placement strategies, partition
+correctness, policy-as-data (traced lax.switch) equivalence with the eager
+per-policy paths, the single-compile policy grid, and the EASY
+heterogeneity fixes (head-feasible shadow releases, fits-now backfill).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.sim import NodeType, SimConfig, tiny_cluster
+from repro.core import (
+    PLACEMENTS,
+    QUEUED,
+    RUNNING,
+    SCHEDULERS,
+    build_statics,
+    fleet_summary,
+    init_state,
+    load_jobs,
+    make_policy,
+    make_step,
+    policy_grid,
+    policy_scenario_grid,
+    run_episode,
+    run_fleet,
+)
+from repro.core import placement as plc
+from repro.core import schedulers as sched
+from repro.data import synth_workload
+
+
+def _setup(cfg=None, seed=0, n_jobs=24, horizon=600.0):
+    cfg = cfg or tiny_cluster()
+    jobs, bank = synth_workload(cfg, n_jobs, horizon, seed=seed)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(seed)), jobs)
+    return cfg, statics, state
+
+
+def _homogeneous(n_nodes=12, **kw):
+    types = (NodeType("n", n_nodes, 16, 2, 128.0, 100.0, 120.0, 30.0, 240.0,
+                      16_000.0),)
+    base = dict(max_jobs=32, max_nodes_per_job=4, sched_max_candidates=4)
+    base.update(kw)
+    return SimConfig(name="homog", node_types=types, **base)
+
+
+# ------------------------------------------------- reduction to first_fit
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), job=st.integers(0, 15))
+def test_property_green_reduces_to_first_fit_on_homogeneous(seed, job):
+    """On a one-type cluster the green score is constant, so (even with a
+    churned free pool) green must reproduce first_fit ordering exactly."""
+    cfg, statics, state = _setup(_homogeneous(), seed=seed % 5, n_jobs=16)
+    key = jax.random.key(seed)
+    state = state._replace(
+        free=state.free * jax.random.uniform(key, state.free.shape))
+    j = jnp.int32(job)
+    row_ff, ok_ff = plc.place_first_fit(state, statics, j)
+    row_g, ok_g = plc.place_green(state, statics, j)
+    np.testing.assert_array_equal(np.asarray(row_ff), np.asarray(row_g))
+    assert bool(ok_ff) == bool(ok_g)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), job=st.integers(0, 15))
+def test_property_bestfit_spread_reduce_to_first_fit_on_uniform(seed, job):
+    """With a uniform free pool (fresh cluster) every node scores equally,
+    so best_fit and spread tie-break to first_fit's index order."""
+    cfg, statics, state = _setup(_homogeneous(), seed=seed % 5, n_jobs=16)
+    j = jnp.int32(job)
+    row_ff, ok_ff = plc.place_first_fit(state, statics, j)
+    for fn in (plc.place_best_fit, plc.place_spread, plc.place_partition):
+        row, ok = fn(state, statics, j)
+        np.testing.assert_array_equal(
+            np.asarray(row_ff), np.asarray(row), err_msg=fn.__name__)
+        assert bool(ok_ff) == bool(ok), fn.__name__
+    # NB: partition included above because a fresh homogeneous cluster has
+    # a single type, so every tag is either matched or -1
+
+
+def test_best_fit_packs_spread_balances():
+    cfg, statics, state = _setup(_homogeneous(n_nodes=4), n_jobs=8)
+    # node 1 is half-loaded, others empty -> best_fit must top it up,
+    # spread must avoid it
+    free = state.free.at[:, 1].multiply(0.5)
+    state = state._replace(
+        free=free, n_nodes=state.n_nodes.at[0].set(1),
+        req=state.req.at[:, 0].set(jnp.array([2.0, 0.0, 4.0])))
+    j = jnp.int32(0)
+    row_bf, _ = plc.place_best_fit(state, statics, j)
+    row_sp, _ = plc.place_spread(state, statics, j)
+    assert int(row_bf[0]) == 1
+    assert int(row_sp[0]) != 1
+
+
+def test_green_prefers_efficient_hardware():
+    """Inefficient type listed FIRST: first_fit grabs it, green skips to
+    the low-W-per-GFLOP nodes."""
+    types = (
+        NodeType("hot", 4, 32, 0, 64.0, 200.0, 400.0, 0.0, 0.0, 1_000.0),
+        NodeType("cool", 4, 32, 0, 64.0, 80.0, 120.0, 0.0, 0.0, 4_000.0),
+    )
+    cfg = SimConfig(name="het", node_types=types, max_jobs=8,
+                    max_nodes_per_job=4)
+    statics = build_statics(cfg)
+    state = init_state(cfg, statics, jax.random.key(0))
+    jobs = {
+        "submit_t": np.zeros(1, np.float32), "dur": np.full(1, 60.0, np.float32),
+        "n_nodes": np.array([2], np.int32),
+        "req": np.array([[4.0], [0.0], [8.0]], np.float32),
+        "priority": np.zeros(1, np.float32),
+    }
+    state = load_jobs(state, jobs)
+    row_g, ok = plc.place_green(state, statics, jnp.int32(0))
+    assert bool(ok)
+    picked = np.asarray(row_g)[:2]
+    assert (np.asarray(statics.node_type)[picked] == 1).all(), picked
+    row_ff, _ = plc.place_first_fit(state, statics, jnp.int32(0))
+    assert (np.asarray(statics.node_type)[np.asarray(row_ff)[:2]] == 0).all()
+
+
+# ------------------------------------------------------------- partition
+def test_partition_mask_and_any_tag():
+    cfg, statics, state = _setup()
+    gpu_job = int(np.flatnonzero(np.asarray(state.part) == 0)[0])
+    mask = np.asarray(plc.partition_mask(state, statics, jnp.int32(gpu_job)))
+    np.testing.assert_array_equal(mask, np.asarray(statics.node_type) == 0)
+    # tag -1 = any node
+    state2 = state._replace(part=state.part.at[gpu_job].set(-1))
+    mask2 = np.asarray(plc.partition_mask(state2, statics, jnp.int32(gpu_job)))
+    assert mask2.all()
+
+
+def test_partition_never_places_cpu_job_on_gpu_node():
+    """Acceptance: under `partition` placement a CPU-partition job is never
+    placed on a GPU node (and vice versa), checked at every step of an
+    episode over the synth workload whose tags rode load_jobs end-to-end."""
+    cfg, statics, state = _setup(n_jobs=24, horizon=400.0)
+    ntype = np.asarray(statics.node_type)
+    step = jax.jit(make_step(cfg, statics, "fcfs", placement="partition"))
+    s = state
+    placed_any = 0
+    for _ in range(300):
+        s, _ = step(s, jnp.int32(-1))
+        js = np.asarray(s.jstate)
+        place = np.asarray(s.placement)
+        part = np.asarray(s.part)
+        for j in np.flatnonzero(js == RUNNING):
+            nodes = place[j][place[j] >= 0]
+            placed_any += len(nodes)
+            if part[j] >= 0:
+                assert (ntype[nodes] == part[j]).all(), (j, part[j], nodes)
+    assert placed_any > 0, "episode never placed anything — vacuous test"
+
+
+def test_synth_partition_tags_end_to_end():
+    """synth_workload -> load_jobs carries the partition tag: GPU jobs tag
+    the GPU type, CPU jobs the CPU type."""
+    cfg, statics, state = _setup()
+    jobs, _ = synth_workload(cfg, 24, 600.0, seed=0)
+    part = np.asarray(state.part)[:24]
+    np.testing.assert_array_equal(
+        part, np.where(jobs["is_gpu"], 0, cfg.n_types - 1))
+    assert (np.asarray(state.part)[24:] == -1).all()   # unloaded slots: any
+
+
+# ---------------------------------------------- policy-as-data equivalence
+def test_traced_engine_bit_equivalent_to_eager_paths():
+    cfg, statics, state = _setup(n_jobs=24, horizon=300.0)
+    traced = jax.jit(
+        lambda pol, st: run_episode(cfg, statics, st, 80, pol))
+    for sel in SCHEDULERS:
+        for pl in PLACEMENTS:
+            fs_e, out_e = jax.jit(
+                lambda st, sel=sel, pl=pl: run_episode(
+                    cfg, statics, st, 80, sel, placement=pl))(state)
+            fs_t, out_t = traced(make_policy(sel, pl), state)
+            tag = f"{sel}+{pl}"
+            np.testing.assert_array_equal(
+                np.asarray(fs_e.jstate), np.asarray(fs_t.jstate), err_msg=tag)
+            np.testing.assert_array_equal(
+                np.asarray(fs_e.placement), np.asarray(fs_t.placement),
+                err_msg=tag)
+            np.testing.assert_allclose(
+                float(fs_e.energy_kwh), float(fs_t.energy_kwh),
+                rtol=1e-6, err_msg=tag)
+            np.testing.assert_allclose(
+                np.asarray(out_e.reward), np.asarray(out_t.reward),
+                rtol=1e-5, atol=1e-6, err_msg=tag)
+
+
+def test_policy_grid_is_single_compile():
+    """Acceptance: sweeping the FULL selection x placement grid through a
+    jitted runner adds exactly ONE jit-cache entry."""
+    cfg, statics, state = _setup()
+    run = jax.jit(lambda pol, st: run_episode(
+        cfg, statics, st, 30, pol, summary_only=True))
+    names, grid = policy_grid(list(SCHEDULERS), list(PLACEMENTS))
+    assert len(names) == len(SCHEDULERS) * len(PLACEMENTS)
+    for i in range(len(names)):
+        pol = jax.tree.map(lambda a: a[i], grid)
+        fs, tel = run(pol, state)
+    assert run._cache_size() == 1
+
+
+def test_run_fleet_policy_by_scenario_grid():
+    """Acceptance: >=3 policies x >=2 scenarios in ONE vmapped call with
+    per-replica telemetry."""
+    from repro.scenarios import default_scenario, heatwave
+
+    cfg, statics, state = _setup()
+    pols, scns = policy_scenario_grid(
+        [("fcfs", "first_fit"), ("sjf", "best_fit"), ("easy", "green")],
+        [default_scenario(cfg), heatwave(cfg)],
+    )
+    fs, tel = run_fleet(cfg, statics, state, 60, scenarios=scns,
+                        policies=pols, summary_only=True)
+    R = 3 * 2
+    assert np.shape(tel.energy_kwh) == (R,)
+    assert np.shape(fs.t) == (R,)
+    rows = fleet_summary(fs)
+    assert len(rows) == R and all(np.isfinite(r["energy_kwh"]) for r in rows)
+    # heatwave replicas (odd indices) burn more cooling energy than their
+    # default-scenario twins under the same policy
+    e = np.asarray(tel.energy_kwh)
+    assert (e[1::2] > e[0::2]).all()
+
+
+def test_run_fleet_mismatched_axes_is_loud():
+    from repro.scenarios import default_scenario
+
+    cfg, statics, state = _setup()
+    _, grid = policy_grid(["fcfs", "sjf"], ["first_fit"])
+    with pytest.raises(ValueError, match="policy_scenario_grid"):
+        run_fleet(cfg, statics, state, 10, policies=grid,
+                  scenarios=[default_scenario(cfg)] * 3)
+    # scheduler name + policies together would silently ignore one — loud
+    with pytest.raises(ValueError, match="exactly one"):
+        run_fleet(cfg, statics, state, 10, "easy", policies=grid)
+
+
+def test_make_policy_unknown_names_are_loud():
+    with pytest.raises(KeyError):
+        make_policy("nope", "first_fit")
+    with pytest.raises(KeyError):
+        make_policy("fcfs", "nope")
+    cfg = tiny_cluster()
+    statics = build_statics(cfg)
+    with pytest.raises(KeyError):
+        make_step(cfg, statics, "fcfs", placement="nope")
+    # a Policy carries its own placement id — combining with placement=
+    # would silently drop one, so it must be loud
+    with pytest.raises(ValueError, match="exactly one"):
+        make_step(cfg, statics, make_policy("fcfs", "first_fit"),
+                  placement="green")
+
+
+# ------------------------------------------------- EASY heterogeneity fixes
+def _easy_fixture():
+    """tiny cluster: nodes 0-7 GPU type, 8-15 CPU type (K=4)."""
+    cfg = tiny_cluster()
+    statics = build_statics(cfg)
+    state = init_state(cfg, statics, jax.random.key(0))
+    jobs = {
+        "submit_t": np.zeros(3, np.float32),
+        "dur": np.array([1000.0, 100.0, 500.0], np.float32),
+        "n_nodes": np.array([4, 4, 2], np.int32),
+        # job0 gpu-hungry, job1 cpu-only, job2 (head) needs gpus
+        "req": np.array([[4.0, 4.0, 4.0],
+                         [2.0, 0.0, 1.0],
+                         [8.0, 8.0, 8.0]], np.float32),
+        "priority": np.zeros(3, np.float32),
+    }
+    state = load_jobs(state, jobs)
+    # job0 RUNNING on gpu nodes 0-3, job1 RUNNING on cpu nodes 8-11
+    place = state.placement
+    place = place.at[0].set(jnp.array([0, 1, 2, 3], jnp.int32))
+    place = place.at[1].set(jnp.array([8, 9, 10, 11], jnp.int32))
+    free = state.free
+    # all 8 GPU nodes have their GPUs taken (0-3 by job0; 4-7 by "others")
+    free = free.at[1, :8].set(0.0)
+    state = state._replace(
+        jstate=state.jstate.at[:2].set(RUNNING),
+        start_t=state.start_t.at[:2].set(0.0),
+        placement=place, free=free, t=jnp.float32(10.0),
+    )
+    return cfg, statics, state
+
+
+def test_shadow_time_ignores_releases_head_cannot_use():
+    """The CPU job (job1) ends at t=100 and releases 4 CPU nodes — useless
+    to the GPU head (job2, needs 2 GPUs/node). Shadow must wait for the
+    GPU job's release at t=1000, not credit the CPU nodes (the pre-fix
+    code returned 100 here)."""
+    cfg, statics, state = _easy_fixture()
+    t_sh = float(sched.shadow_time(cfg, state, statics, jnp.int32(2)))
+    assert t_sh == pytest.approx(1000.0), t_sh
+
+
+def test_easy_backfill_candidates_must_fit_now():
+    """Head blocked on a node-exclusive cluster; the earlier-submitted
+    backfill candidate doesn't fit NOW (2 nodes wanted, 1 free) while a
+    later 1-node job does — EASY must pick the one that fits instead of
+    wasting the dispatch attempt (the pre-fix code picked the 2-node
+    job and the wavefront slot became a no-op)."""
+    cfg = SimConfig(
+        name="uniform",
+        node_types=(NodeType("n", 8, 16, 0, 64.0, 100.0, 200.0, 0.0, 0.0,
+                             1000.0),),
+        max_jobs=16, max_nodes_per_job=8, sched_max_candidates=4,
+    )
+    statics = build_statics(cfg)
+    jobs = {
+        "submit_t": np.array([0.0, 1.0, 2.0, 3.0], np.float32),
+        "dur": np.array([1000.0, 1000.0, 30.0, 30.0], np.float32),
+        "n_nodes": np.array([7, 8, 2, 1], np.int32),
+        "req": np.tile(np.array([[16.0], [0.0], [1.0]], np.float32), (1, 4)),
+        "priority": np.zeros(4, np.float32),
+    }
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    step = jax.jit(make_step(cfg, statics, "fcfs"))
+    # step past every submit time: job0 starts, head (job1) stays blocked,
+    # jobs 2/3 become eligible backfill candidates
+    for _ in range(4):
+        state, _ = step(state, jnp.int32(-1))
+    assert int(state.jstate[0]) == RUNNING and int(state.jstate[1]) == QUEUED
+    fits = np.asarray(sched.fits_now_mask(state))
+    assert not fits[2] and fits[3]
+    pick = int(sched.select_easy(cfg, state, statics))
+    assert pick == 3, pick
+
+
+def test_easy_respects_partition_placement():
+    """Under the `partition` placement, EASY must not select a head that
+    fits by raw resources but sits in the wrong partition (placement would
+    reject it and the dispatch attempt would no-op) — it should treat the
+    head as blocked and backfill a feasible job instead."""
+    cfg = tiny_cluster()            # nodes 0-7 GPU type, 8-15 CPU type
+    statics = build_statics(cfg)
+    jobs = {
+        "submit_t": np.array([0.0, 0.0], np.float32),
+        "dur": np.array([600.0, 30.0], np.float32),
+        "n_nodes": np.array([2, 1], np.int32),
+        # job0: CPU-partition head (cores only — fits GPU nodes by raw
+        # resources); job1: GPU-partition job that genuinely fits now
+        "req": np.array([[4.0, 4.0], [0.0, 1.0], [8.0, 8.0]], np.float32),
+        "priority": np.zeros(2, np.float32),
+        "part": np.array([1, 0], np.int32),
+    }
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    # every CPU node's cores are taken by (unmodeled) tenants
+    state = state._replace(
+        free=state.free.at[0, 8:].set(0.0), t=jnp.float32(1.0))
+    mask = sched.partition_mask_all(state, statics)
+    assert int(sched.select_easy(cfg, state, statics, mask)) == 1
+    # without the mask the old behavior selected the doomed head
+    assert int(sched.select_easy(cfg, state, statics)) == 0
+    # end-to-end: one step under easy+partition starts the GPU job
+    step = jax.jit(make_step(cfg, statics, "easy", placement="partition"))
+    s, _ = step(state, jnp.int32(-1))
+    assert int(s.jstate[1]) == RUNNING and int(s.jstate[0]) == QUEUED
+
+
+def test_run_fleet_accepts_policy_instances():
+    """Regression: Policy is itself a tuple — the policies list must accept
+    Policy objects, not just (select, place) name tuples."""
+    cfg, statics, state = _setup()
+    fs, tel = run_fleet(
+        cfg, statics, state, 20,
+        policies=[make_policy("fcfs", "first_fit"),
+                  ("sjf", "green")],          # mixed forms
+        summary_only=True)
+    assert np.shape(tel.energy_kwh) == (2,)
+    pols, scns = policy_scenario_grid(
+        [make_policy("fcfs", "first_fit"), ("sjf", "green")],
+        [statics.scenario])
+    assert np.shape(pols.select) == (2,)
+    # ...and the batched Policy that policy_grid returns composes directly
+    names, grid = policy_grid(["fcfs", "sjf"], ["first_fit"])
+    pols2, _ = policy_scenario_grid(grid, [statics.scenario] * 2)
+    assert np.shape(pols2.select) == (len(names) * 2,)
+    np.testing.assert_array_equal(
+        np.asarray(pols2.select), np.repeat(np.asarray(grid.select), 2))
+    # ...as does a batched Scenario (the input run_fleet's mismatch error
+    # tells users to cross with)
+    from repro.scenarios import sample_scenarios
+
+    batched_scns = sample_scenarios(cfg, 3, seed=0)
+    pols3, scns3 = policy_scenario_grid(grid, batched_scns)
+    from repro.scenarios.scenario import n_replicas
+
+    assert np.shape(pols3.select) == (len(names) * 3,)
+    assert n_replicas(scns3) == len(names) * 3
+
+
+def test_easy_still_backfills_feasible_candidates():
+    """Regression guard: the fits-now mask must not stop normal backfill
+    (the PR2-era scenario where a 1-node job jumps a blocked 8-node head)."""
+    cfg = SimConfig(
+        name="uniform",
+        node_types=(NodeType("n", 8, 16, 0, 64.0, 100.0, 200.0, 0.0, 0.0,
+                             1000.0),),
+        max_jobs=16, max_nodes_per_job=8, sched_max_candidates=4,
+    )
+    statics = build_statics(cfg)
+    jobs = {
+        "submit_t": np.array([0.0, 1.0, 2.0], np.float32),
+        "dur": np.array([1000.0, 1000.0, 30.0], np.float32),
+        "n_nodes": np.array([7, 8, 1], np.int32),
+        "req": np.tile(np.array([[16.0], [0.0], [1.0]], np.float32), (1, 3)),
+        "priority": np.zeros(3, np.float32),
+    }
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    step = jax.jit(make_step(cfg, statics, "easy"))
+    s = state
+    for _ in range(20):
+        s, _ = step(s, jnp.int32(-1))
+    js = np.asarray(s.jstate)[:3]
+    assert js[0] == RUNNING and js[2] == RUNNING and js[1] == QUEUED

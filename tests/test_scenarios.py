@@ -15,7 +15,6 @@ from repro.core import (
     run_fleet,
     summary,
 )
-from repro.core.power import carbon_intensity, wetbulb_c
 from repro.data import load_signal_csv, synth_grid_trace, synth_workload, write_signal_csv
 from repro.scenarios import (
     cap_events,
@@ -42,16 +41,31 @@ def _setup(seed=0, n_jobs=24, horizon=600.0, **cfg_kw):
 
 # ----------------------------------------------------------------- signals
 def test_default_scenario_matches_legacy_sinusoids():
+    """Pins default_scenario to the closed-form diurnal sinusoids that the
+    removed ``core.power.carbon_intensity`` / ``wetbulb_c`` shims encoded
+    (carbon peaks at midnight, wetbulb mid-afternoon)."""
     cfg = tiny_cluster()
     scn = default_scenario(cfg)
     for t in np.linspace(0.0, 2 * cfg.day_seconds, 29, dtype=np.float32):
         t = jnp.float32(t)
+        phase = 2 * np.pi * (float(t) / cfg.day_seconds)
+        legacy_carbon = cfg.carbon_mean - cfg.carbon_amp * np.sin(
+            phase - np.pi / 2)
+        legacy_wetbulb = cfg.wetbulb_mean_c + cfg.wetbulb_amp_c * np.sin(
+            phase - np.pi / 2)
         np.testing.assert_allclose(
-            eval_signal(scn.carbon, t), carbon_intensity(cfg, t),
-            rtol=2e-5, atol=1e-3)
+            eval_signal(scn.carbon, t), legacy_carbon, rtol=2e-5, atol=1e-3)
         np.testing.assert_allclose(
-            eval_signal(scn.wetbulb, t), wetbulb_c(cfg, t),
-            rtol=2e-5, atol=1e-3)
+            eval_signal(scn.wetbulb, t), legacy_wetbulb, rtol=2e-5, atol=1e-3)
+
+
+def test_legacy_power_shims_removed():
+    """The parametric shims are formally gone from core.power — scenarios
+    are the single source of grid signals."""
+    from repro.core import power
+
+    assert not hasattr(power, "carbon_intensity")
+    assert not hasattr(power, "wetbulb_c")
 
 
 def test_trace_signal_equals_parametric_at_sample_points():

@@ -27,29 +27,29 @@ def _state_with(cfg, submit, dur, n_nodes, prio=None):
 
 def test_fcfs_picks_earliest_submitted():
     cfg = tiny_cluster()
-    _, state = _state_with(cfg, [5.0, 1.0, 3.0], [60, 60, 60], [1, 1, 1])
-    assert int(sched.select_fcfs(cfg, state)) == 1
+    statics, state = _state_with(cfg, [5.0, 1.0, 3.0], [60, 60, 60], [1, 1, 1])
+    assert int(sched.select_fcfs(cfg, state, statics)) == 1
 
 
 def test_sjf_picks_shortest():
     cfg = tiny_cluster()
-    _, state = _state_with(cfg, [1, 2, 3], [500, 50, 100], [1, 1, 1])
-    assert int(sched.select_sjf(cfg, state)) == 1
+    statics, state = _state_with(cfg, [1, 2, 3], [500, 50, 100], [1, 1, 1])
+    assert int(sched.select_sjf(cfg, state, statics)) == 1
 
 
 def test_priority_picks_highest():
     cfg = tiny_cluster()
-    _, state = _state_with(cfg, [1, 2, 3], [10, 10, 10], [1, 1, 1],
-                           prio=[0.0, 9.0, 4.0])
-    assert int(sched.select_priority(cfg, state)) == 1
+    statics, state = _state_with(cfg, [1, 2, 3], [10, 10, 10], [1, 1, 1],
+                                 prio=[0.0, 9.0, 4.0])
+    assert int(sched.select_priority(cfg, state, statics)) == 1
 
 
 def test_replay_waits_for_recorded_start():
     cfg = tiny_cluster()
-    _, state = _state_with(cfg, [0.0, 0.0], [60, 60], [1, 1],
-                           prio=[500.0, 50.0])  # recorded starts
+    statics, state = _state_with(cfg, [0.0, 0.0], [60, 60], [1, 1],
+                                 prio=[500.0, 50.0])  # recorded starts
     # t=100: only job 1 (start 50) is due
-    assert int(sched.select_replay(cfg, state)) == 1
+    assert int(sched.select_replay(cfg, state, statics)) == 1
 
 
 def test_first_fit_respects_capacity():
@@ -115,9 +115,9 @@ def test_easy_backfills_short_job_past_blocked_head():
 def test_property_selection_always_valid(submit, durs):
     n = min(len(submit), len(durs))
     cfg = tiny_cluster()
-    _, state = _state_with(cfg, submit[:n], durs[:n], [1] * n)
+    statics, state = _state_with(cfg, submit[:n], durs[:n], [1] * n)
     for name, fn in sched.SCHEDULERS.items():
-        j = int(fn(cfg, state))
+        j = int(fn(cfg, state, statics))
         queued = np.asarray(sched.queued_mask(state))
         if j >= 0:
             assert queued[j], f"{name} picked a non-queued job"

@@ -66,10 +66,11 @@ def test_power_chain_components_and_carbon_diurnality():
     assert float(fs.loss_energy_kwh) > 0
     assert float(fs.cool_energy_kwh) > 0
     assert float(fs.it_energy_kwh) > float(fs.loss_energy_kwh)
-    from repro.core.power import carbon_intensity
+    from repro.scenarios import default_scenario, eval_signal
 
-    noon = carbon_intensity(cfg, jnp.float32(cfg.day_seconds / 2))
-    midnight = carbon_intensity(cfg, jnp.float32(0.0))
+    carbon = default_scenario(cfg).carbon
+    noon = eval_signal(carbon, jnp.float32(cfg.day_seconds / 2))
+    midnight = eval_signal(carbon, jnp.float32(0.0))
     assert float(noon) < float(midnight)  # solar dip at midday
 
 
