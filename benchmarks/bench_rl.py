@@ -1,0 +1,240 @@
+"""RL rollout-engine benchmarks (BENCH_4 `rollout` family).
+
+The paper's headline use case is PPO experimentation over the twin, so the
+benchmarked unit here is the *env transition* (one agent decision =
+``sim_steps_per_action`` sim steps) inside a full jitted rollout —
+``vmap`` over envs, ``lax.scan`` over time, auto-reset included — plus one
+``ppo_iteration`` row for the end-to-end train step.
+
+``rollout_256envs_prepr_baseline`` re-creates the pre-PR4 rollout layout
+(`_HeavyEnv`): a per-env ``Statics`` copy in the env state (so every
+vmapped env carries its own (J, Q) trace-bank slice, auto-reset gathers a
+fresh slice per env per rollout step, and the rollout's done-select copies
+the whole batched bank), ``make_step`` rebuilt on every ``step`` call, and
+the dispatch stage forced through every idle sub-step. Diffing it against
+``rollout_256envs`` inside the same artifact is the PR's perf claim.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_sim import _timeit, Row
+
+
+def _make_env(n_jobs=32, horizon=3600.0, spa=5, episode_steps=16):
+    from repro.configs.sim import tiny_cluster
+    from repro.data import synth_workload
+    from repro.envs import SchedEnv
+
+    cfg = tiny_cluster(sched_max_candidates=4)
+    wls = [synth_workload(cfg, n_jobs, horizon, seed=s) for s in range(4)]
+    return SchedEnv(cfg, wls, episode_steps=episode_steps,
+                    sim_steps_per_action=spa)
+
+
+# --------------------------------------------------------------- baseline
+class _HeavyState(NamedTuple):
+    sim: object
+    statics: object           # per-env Statics copy (the pre-PR4 layout)
+    step_count: jax.Array
+
+
+class _HeavyEnv:
+    """Pre-PR4 rollout layout around the same twin (see module docstring).
+    Dynamics-equivalent to ``SchedEnv`` — only the data layout and the
+    per-sub-step dispatch differ — so the us/env-transition diff isolates
+    the engine change."""
+
+    def __init__(self, env):
+        from repro.core.sim import make_step
+
+        self._env = env
+        self.cfg = env.cfg
+        self.k, self.n_actions = env.k, env.n_actions
+        self.obs_dim = env.obs_dim
+        self.episode_steps = env.episode_steps
+        self.sim_steps_per_action = env.sim_steps_per_action
+        self._make_step = make_step
+
+    def reset(self, key):
+        env = self._env
+        from repro.core.state import QUEUED, init_state
+
+        kw, ks = jax.random.split(key)
+        w = jax.random.randint(kw, (), 0, env.n_workloads)
+        bank = env.statics
+        statics = bank._replace(                 # per-env bank slice gather
+            cpu_trace=bank.cpu_trace[w],
+            gpu_trace=bank.gpu_trace[w],
+            net_tx=bank.net_tx[w],
+        )
+        sim = init_state(env.cfg, statics, ks)
+        jobs = env._jobs
+        n = jobs["n_valid"][w]
+        valid = jnp.arange(env.cfg.max_jobs) < n
+        sim = sim._replace(
+            jstate=jnp.where(valid, QUEUED, 0).astype(jnp.int32),
+            submit_t=jobs["submit_t"][w],
+            dur_est=jobs["dur"][w], work_left=jobs["dur"][w],
+            n_nodes=jnp.where(valid, jobs["n_nodes"][w], 0).astype(jnp.int32),
+            req=jobs["req"][w],
+            part=jnp.where(valid, jobs["part"][w], -1).astype(jnp.int32),
+            priority=jobs["priority"][w],
+        )
+        st = _HeavyState(sim=sim, statics=statics, step_count=jnp.int32(0))
+        return st, self.observe(st)
+
+    def step(self, st, action):
+        env = self._env
+        # pre-PR4: step fn rebuilt per call, dispatch runs in EVERY sub-step
+        step_fn = self._make_step(env.cfg, st.statics, "rl",
+                                  placement=env.placement,
+                                  reward_weights=env.reward_weights)
+
+        def sub(carry, i):
+            s, acc = carry
+            a = jnp.where(i == 0, action, jnp.int32(self.n_actions - 1))
+            s, out = step_fn(s, a)
+            acc = {
+                "reward": acc["reward"] + out.reward,
+                "completed": acc["completed"] + out.completed_now,
+                "energy_kwh": acc["energy_kwh"] + out.energy_kwh_step,
+                "carbon_kg": acc["carbon_kg"] + out.carbon_kg_step,
+                "facility_w": out.facility_w, "queue_len": out.queue_len,
+            }
+            return (s, acc), None
+
+        z = jnp.float32(0.0)
+        acc0 = {"reward": z, "completed": z, "energy_kwh": z,
+                "carbon_kg": z, "facility_w": z, "queue_len": z}
+        (sim, acc), _ = jax.lax.scan(
+            sub, (st.sim, acc0), jnp.arange(self.sim_steps_per_action))
+        st = _HeavyState(sim=sim, statics=st.statics,
+                         step_count=st.step_count + 1)
+        done = st.step_count >= self.episode_steps
+        info = {k: acc[k] for k in
+                ("facility_w", "queue_len", "completed", "energy_kwh",
+                 "carbon_kg")}
+        return st, self.observe(st), acc["reward"], done, info
+
+    def observe(self, st):
+        # pre-PR4 feature path: python per-(type, resource) loop of scalar
+        # reductions + per-candidate feasibility with the backend mask
+        # recomputed inside the vmap
+        from repro.core import placement as plc
+        from repro.core import schedulers as sched
+        from repro.core.state import RUNNING
+        from repro.scenarios import eval_signal, power_cap_at
+
+        env = self._env
+        cfg, sim, statics = env.cfg, st.sim, st.statics
+        day = 2 * jnp.pi * sim.t / cfg.day_seconds
+        queued = jnp.sum(sched.queued_mask(sim)).astype(jnp.float32)
+        running = jnp.sum(sim.jstate == RUNNING).astype(jnp.float32)
+        scn = statics.scenario
+        co2 = eval_signal(scn.carbon, sim.t) / max(cfg.carbon_mean, 1.0)
+        price = eval_signal(scn.price, sim.t) / max(cfg.price_mean_usd_kwh, 1e-6)
+        cap_w = power_cap_at(scn.power_cap, sim.t)
+        nameplate = jnp.maximum(jnp.sum(statics.node_max_w), 1.0)
+        cap_frac = jnp.where(cap_w > 0, jnp.minimum(cap_w / nameplate, 1.0), 1.0)
+        glob = jnp.stack([
+            jnp.sin(day), jnp.cos(day), co2, price, cap_frac,
+            queued / cfg.max_jobs, running / cfg.max_jobs,
+            jnp.sum(sim.node_up) / cfg.n_nodes,
+            sim.t / cfg.day_seconds,
+            st.step_count.astype(jnp.float32) / max(self.episode_steps, 1),
+        ])
+        per_type = []
+        for ti in range(cfg.n_types):
+            m = (statics.node_type == ti).astype(jnp.float32)
+            for r in range(3):
+                cap = jnp.sum(statics.capacity[r] * m)
+                free = jnp.sum(sim.free[r] * m * sim.node_up)
+                per_type.append(free / jnp.maximum(cap, 1e-6))
+        per_type = jnp.stack(per_type)
+        cands = sched.rl_candidates(cfg, sim)
+        safe = jnp.maximum(cands, 0)
+        valid = (cands >= 0).astype(jnp.float32)
+        wait = jnp.maximum(sim.t - sim.submit_t[safe], 0.0) / 3600.0
+        dur = sim.dur_est[safe] / 3600.0
+        nn = sim.n_nodes[safe].astype(jnp.float32) / cfg.max_nodes_per_job
+        reqf = sim.req[:, safe] / jnp.maximum(
+            jnp.max(statics.capacity, axis=1, keepdims=True), 1e-6)
+        eproxy = nn * dur
+        feasible = jax.vmap(
+            lambda j: jnp.sum(
+                plc.feasible_under(env.placement, sim, statics, j))
+        )(safe).astype(jnp.float32) / cfg.n_nodes
+        cand_feats = jnp.concatenate([
+            valid, wait * valid, dur * valid, nn * valid,
+            reqf[0] * valid, reqf[1] * valid, eproxy * valid,
+            feasible * valid,
+        ])
+        return jnp.concatenate(
+            [glob, env._place_onehot, per_type, cand_feats]
+        ).astype(jnp.float32)
+
+
+# -------------------------------------------------------------- rollouts
+def _time_rollout(env, n_envs: int, rollout_len: int) -> Tuple[float, float]:
+    """Returns (us per env-transition, env-transitions per second)."""
+    from repro.rl import ActorCritic
+    from repro.rl.ppo import PPOConfig, make_rollout
+
+    policy = ActorCritic(env.obs_dim, env.n_actions, hidden=(64, 64))
+    params = policy.init(jax.random.key(0))
+    cfg = PPOConfig(n_envs=n_envs, rollout_len=rollout_len)
+    rollout = jax.jit(make_rollout(env, policy, cfg))
+    states, _ = jax.jit(jax.vmap(env.reset))(
+        jax.random.split(jax.random.key(1), n_envs))
+    dt = _timeit(lambda s: rollout(params, s, jax.random.key(2)), states, n=2)
+    n_tr = n_envs * rollout_len
+    return dt / n_tr * 1e6, n_tr / dt
+
+
+def bench_rl(smoke: bool = False) -> List[Row]:
+    """`rollout_<n>envs` (us per env-transition, auto-reset included), the
+    pre-PR4 heavy-state baseline at 256 envs, and `ppo_iteration`."""
+    env = _make_env()
+    rows: List[Row] = []
+    sizes = (16,) if smoke else (16, 256, 1024)
+    for n_envs in sizes:
+        us, tps = _time_rollout(env, n_envs, rollout_len=8)
+        rows.append((f"rollout_{n_envs}envs", us,
+                     f"env_transitions_per_s={tps:,.0f};"
+                     f"sim_steps_per_transition={env.sim_steps_per_action}"))
+    if smoke:
+        return rows
+
+    us, tps = _time_rollout(_HeavyEnv(env), 256, rollout_len=8)
+    rows.append(("rollout_256envs_prepr_baseline", us,
+                 f"env_transitions_per_s={tps:,.0f};"
+                 "layout=per_env_statics+per_substep_dispatch"))
+
+    # one full PPO iteration (rollout + GAE + minibatched epochs)
+    from repro.rl import ActorCritic
+    from repro.rl.ppo import PPOConfig, make_train_iteration
+
+    pcfg = PPOConfig(n_envs=64, rollout_len=16, n_epochs=2, n_minibatches=4)
+    policy = ActorCritic(env.obs_dim, env.n_actions, hidden=(64, 64))
+    iteration, opt = make_train_iteration(env, policy, pcfg)
+    it_jit = jax.jit(iteration)
+    params = policy.init(jax.random.key(0))
+    opt_state = opt.init(params)
+    states, _ = jax.jit(jax.vmap(env.reset))(
+        jax.random.split(jax.random.key(1), pcfg.n_envs))
+    z = jnp.zeros((pcfg.n_envs,), jnp.float32)
+    zi = jnp.zeros((pcfg.n_envs,), jnp.int32)
+    ep = {"ret": z, "len": zi, "fin_ret": z, "fin_len": zi}
+    dt = _timeit(
+        lambda p, o, s: it_jit(p, o, s, ep, jax.random.key(2), jnp.int32(0)),
+        params, opt_state, states, n=2)
+    n_tr = pcfg.n_envs * pcfg.rollout_len
+    rows.append(("ppo_iteration", dt * 1e6,
+                 f"n_envs={pcfg.n_envs};rollout_len={pcfg.rollout_len};"
+                 f"env_transitions_per_s={n_tr / dt:,.0f}"))
+    return rows

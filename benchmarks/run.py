@@ -8,6 +8,7 @@
   power_prediction_replay  Fig 2 bottom    (power prediction from replay)
   congestion_bw_*          network-congestion model [14]
   vmapped_sim_*            beyond-paper: vectorized-twin RL throughput
+  rollout_* / ppo_iteration  lightweight-state RL rollout engine (BENCH_4)
   fleet_*replicas          beyond-paper: scenario-sweep fleet throughput
   dispatch_* / power_scatter_*  sort-free placement + fused power kernel
   pallas_*                 kernel microbenches vs oracles
@@ -60,6 +61,7 @@ def _named(fn, name, **kw):
 
 def _benches(smoke: bool):
     from benchmarks.bench_dispatch import bench_dispatch, bench_policy_grid
+    from benchmarks.bench_rl import bench_rl
 
     if smoke:
         from benchmarks.bench_sim import bench_vectorized_envs
@@ -68,6 +70,7 @@ def _benches(smoke: bool):
             _named(bench_dispatch, "bench_dispatch", smoke=True),
             bench_vectorized_envs,
             _named(bench_policy_grid, "bench_policy_grid", smoke=True),
+            _named(bench_rl, "bench_rl", smoke=True),
         ]
 
     from benchmarks.bench_fleet import bench_fleet
@@ -93,6 +96,7 @@ def _benches(smoke: bool):
         bench_congestion_model,
         bench_rl_training,
         bench_vectorized_envs,
+        bench_rl,
         bench_dispatch,
         bench_policy_grid,
         bench_fleet,

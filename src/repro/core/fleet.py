@@ -1,5 +1,7 @@
 """Vmapped fleet runner: N datacenter replicas, heterogeneous grid
-scenarios AND heterogeneous scheduling policies, one compiled call.
+scenarios, heterogeneous scheduling policies AND heterogeneous workload
+telemetry (per-replica ids into one shared banked trace), one compiled
+call.
 
 ``run_fleet`` broadcasts one initial ``SimState``/``Statics`` across R
 replicas, installs a per-replica ``Scenario`` (batched pytree from
@@ -126,6 +128,7 @@ def run_fleet(
     *,
     scenarios: Scenario | Sequence[Scenario] | None = None,
     policies: Policy | Sequence[Policy | Tuple[str, str]] | None = None,
+    workloads: Sequence[int] | jnp.ndarray | None = None,
     **kw,
 ) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Simulate R replicas of the twin for ``n_steps`` in one jitted call.
@@ -146,6 +149,12 @@ def run_fleet(
     All other statics (node constants, telemetry bank) are shared and
     broadcast; each replica gets its own PRNG stream.
 
+    ``workloads``: per-replica TELEMETRY axis — int32 ids (length R) into
+    a *banked* Statics trace ((W, J, Q) ``cpu_trace``, e.g. from
+    ``data.stack_workloads``); each replica's trace lookups gather through
+    its id, so heterogeneous utilization profiles share ONE bank with no
+    per-replica copy. The job *table* still comes from ``state`` (broadcast
+    or pre-batched) — ids switch telemetry, not the submitted jobs.
     ``state`` may be a single SimState (broadcast to R replicas here) or
     an already replica-batched one — e.g. the final states of a previous
     ``run_fleet`` call for chained sweeps. A batched state's buffers are
@@ -195,6 +204,25 @@ def run_fleet(
         # are both donated, so aliasing keys to the state.key leaf would
         # donate one buffer twice
         keys = jax.vmap(lambda k: jax.random.fold_in(k, 1))(state.key)
+    if workloads is not None:
+        if jnp.ndim(statics.cpu_trace) != 3:
+            raise ValueError(
+                "workloads= needs a banked Statics trace ((W, J, Q) "
+                "cpu_trace, e.g. from data.stack_workloads); this statics "
+                "carries a single unbatched workload")
+        ids_host = np.asarray(workloads, np.int32)   # host data: check here
+        if ids_host.shape != (R,):
+            raise ValueError(
+                f"workloads has shape {ids_host.shape}, expected ({R},) — "
+                "one bank id per replica")
+        W = statics.cpu_trace.shape[0]
+        lo, hi = int(ids_host.min()), int(ids_host.max())
+        if lo < 0 or hi >= W:
+            raise ValueError(
+                f"workload ids must be in [0, {W}) for this bank; got "
+                f"[{lo}, {hi}] — an out-of-range id would silently clamp "
+                "to the edge slice")
+        state = state._replace(workload=jnp.asarray(ids_host))
     kw_items = tuple(sorted(kw.items()))
     return _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
                   scheduler, kw_items)

@@ -16,12 +16,16 @@ from repro.core.state import RUNNING, SimState, Statics
 def congestion_slowdown(cfg: SimConfig, state: SimState, statics: Statics):
     """Returns (per-job progress rate in (0,1], network load fraction)."""
     running = (state.jstate == RUNNING).astype(jnp.float32)
+    # banked (W, J) traffic table: gather this replica's row through the
+    # traced workload id (see Statics docstring)
+    net_tx = (statics.net_tx if statics.net_tx.ndim == 1
+              else statics.net_tx[state.workload])
     # jobs spanning n nodes inject n * net_tx GB/s into the fabric
-    tx = statics.net_tx * state.n_nodes.astype(jnp.float32) * running
+    tx = net_tx * state.n_nodes.astype(jnp.float32) * running
     load = jnp.sum(tx) / jnp.maximum(cfg.bisection_gbps, 1e-6)
     over = jnp.maximum(load - cfg.congestion_knee, 0.0)
     factor = 1.0 + over ** cfg.congestion_exp
     # only network-active jobs are slowed; CPU-bound jobs keep full rate
     slowed = 1.0 / factor
-    rate = jnp.where(statics.net_tx > 0, slowed, 1.0)
+    rate = jnp.where(net_tx > 0, slowed, 1.0)
     return jnp.where(running > 0, rate, 0.0), load

@@ -36,14 +36,67 @@ class PowerOut(NamedTuple):
 
 def job_utilization(cfg: SimConfig, state: SimState, statics: Statics):
     """Per-job cpu/gpu utilization at current sim time from the telemetry
-    bank (quanta-averaged, as RAPS replays traces)."""
+    bank (quanta-averaged, as RAPS replays traces).
+
+    With a banked (W, J, Q) trace (see ``Statics``), the lookup gathers
+    through the traced ``state.workload`` id — one J-element gather per
+    step, identical cost to the unbatched path, and the bank itself is
+    never copied per env (the lightweight-state rollout engine's key
+    invariant)."""
     running = (state.jstate == RUNNING).astype(jnp.float32)
     age = jnp.maximum(state.t - state.start_t, 0.0)
-    q = statics.cpu_trace.shape[1]
+    q = statics.cpu_trace.shape[-1]
     qi = jnp.clip((age / cfg.trace_quanta).astype(jnp.int32), 0, q - 1)
-    cpu = jnp.take_along_axis(statics.cpu_trace, qi[:, None], axis=1)[:, 0]
-    gpu = jnp.take_along_axis(statics.gpu_trace, qi[:, None], axis=1)[:, 0]
+    if statics.cpu_trace.ndim == 3:
+        j = jnp.arange(state.jstate.shape[0])
+        cpu = statics.cpu_trace[state.workload, j, qi]
+        gpu = statics.gpu_trace[state.workload, j, qi]
+    else:
+        cpu = jnp.take_along_axis(statics.cpu_trace, qi[:, None], axis=1)[:, 0]
+        gpu = jnp.take_along_axis(statics.gpu_trace, qi[:, None], axis=1)[:, 0]
     return cpu * running, gpu * running
+
+
+# Dense one-hot budget for job->node reductions: vmapped XLA scatter-adds
+# are slow on CPU (generic scatter loop per env), while a (slots, N)
+# one-hot contraction runs as one batched matmul — the same trick the
+# Pallas power-scatter kernel plays on the MXU. Used whenever the one-hot
+# stays under this many elements (~0.5 MB f32); bigger configs (tx_gaia)
+# keep the memory-free scatter.
+DENSE_SCATTER_ELEMS = 131072
+
+
+def use_dense_scatter(n_slots: int, n_nodes: int) -> bool:
+    return n_slots * n_nodes <= DENSE_SCATTER_ELEMS
+
+
+def node_onehot(place_flat: jax.Array, n_nodes: int) -> jax.Array:
+    """(slots, N) one-hot of placement node ids; invalid slots (id < 0)
+    match no node, so they drop out of the contraction exactly like the
+    scatter's ``mode="drop"``."""
+    return (place_flat[:, None] == jnp.arange(n_nodes)[None, :]
+            ).astype(jnp.float32)
+
+
+def scatter_add_nodes(ids: jax.Array, amounts: jax.Array, n_nodes: int,
+                      base: jax.Array | None = None) -> jax.Array:
+    """The job-table -> per-node reduction shared by the power chain
+    (``node_loads``) and the release path (``sim._release``): add
+    ``amounts`` (..., S) at node ``ids`` (S,) onto ``base`` (..., n_nodes)
+    (zeros when None); ids < 0 drop. Under the ``use_dense_scatter``
+    budget this is the dense one-hot contraction at ``Precision.HIGHEST``
+    (exact f32 — TPU bf16 / GPU TF32 matmul defaults would round, and the
+    result feeds free-pool feasibility checks); larger configs keep the
+    memory-free XLA scatter-add."""
+    if use_dense_scatter(ids.shape[0], n_nodes):
+        dense = jnp.matmul(amounts, node_onehot(ids, n_nodes),
+                           precision=jax.lax.Precision.HIGHEST)
+        return dense if base is None else base + dense
+    if base is None:
+        base = jnp.zeros(amounts.shape[:-1] + (n_nodes,), amounts.dtype)
+    safe = jnp.where(ids >= 0, ids, 0)
+    return base.at[..., safe].add(
+        jnp.where(ids >= 0, amounts, 0.0), mode="drop")
 
 
 def placement_amounts(state: SimState, cpu_util: jax.Array,
@@ -69,16 +122,14 @@ def node_loads(cfg: SimConfig, state: SimState, statics: Statics,
     """
     N = statics.capacity.shape[1]
     place = state.placement                       # (J,K)
-    valid = place >= 0
-    safe = jnp.where(valid, place, 0)
-    w = valid.astype(jnp.float32)
+    w = (place >= 0).astype(jnp.float32)
     # utilized absolute resources contributed per placement slot
     cpu_abs = (state.req[0][:, None] * cpu_util[:, None]) * w
     gpu_abs = (state.req[1][:, None] * gpu_util[:, None]) * w
-    cpu_node = jnp.zeros((N,), jnp.float32).at[safe.reshape(-1)].add(
-        cpu_abs.reshape(-1), mode="drop")
-    gpu_node = jnp.zeros((N,), jnp.float32).at[safe.reshape(-1)].add(
-        gpu_abs.reshape(-1), mode="drop")
+    loads = scatter_add_nodes(
+        place.reshape(-1),
+        jnp.stack([cpu_abs.reshape(-1), gpu_abs.reshape(-1)]), N)
+    cpu_node, gpu_node = loads[0], loads[1]
     cpu_frac = jnp.clip(cpu_node / jnp.maximum(statics.capacity[0], 1e-6), 0, 1)
     gpu_frac = jnp.clip(gpu_node / jnp.maximum(statics.capacity[1], 1e-6), 0, 1)
     return cpu_frac, gpu_frac

@@ -105,14 +105,21 @@ def _apply_failures(cfg: SimConfig, state: SimState) -> SimState:
 
 
 def _release(free: jax.Array, state: SimState, mask: jax.Array) -> jax.Array:
-    """Add back resources of jobs in `mask` (J,) to the free pool."""
+    """Add back resources of jobs in `mask` (J,) to the free pool.
+
+    Routed through ``power.scatter_add_nodes``: small configs get the
+    dense one-hot contraction (under vmap the XLA scatter-add runs a
+    generic per-env scatter loop on CPU, while the contraction is one
+    batched matmul — this sits on the RL-rollout hot path, every
+    completion sweep of every sub-step of every env)."""
+    from repro.core.power import scatter_add_nodes
+
     place = state.placement
     valid = (place >= 0) & mask[:, None]
-    safe = jnp.where(valid, place, 0)
     amounts = state.req[:, :, None] * valid[None, :, :]      # (R,J,K)
-    return free.at[:, safe.reshape(-1)].add(
-        amounts.reshape(NRES, -1), mode="drop"
-    )
+    ids = jnp.where(valid, place, -1)
+    return scatter_add_nodes(ids.reshape(-1), amounts.reshape(NRES, -1),
+                             free.shape[1], base=free)
 
 
 def _complete_jobs(cfg: SimConfig, state: SimState) -> Tuple[SimState, jax.Array]:
@@ -168,11 +175,14 @@ def make_step(
     """Returns step(state, action) -> (state, StepOut).
 
     ``scheduler``: a selection name ('replay'|'fcfs'|'sjf'|'priority'|
-    'easy'), 'rl' (external action-driven selection), or a
-    ``placement.Policy`` of traced (select_id, place_id) int32s — the
-    policy-as-data mode where ``lax.switch`` resolves both stages inside
-    one compiled step (the Policy carries the placement id, so combining
-    it with an explicit ``placement=`` is a loud error).
+    'easy'), 'rl' (external action-driven selection), 'none' (no dispatch
+    at all — failures/completions/progress/power only; the RL env's idle
+    sub-steps between agent decisions, where the pre-split step paid a
+    full candidate-ranking + placement pass per sub-step for a guaranteed
+    no-op), or a ``placement.Policy`` of traced (select_id, place_id)
+    int32s — the policy-as-data mode where ``lax.switch`` resolves both
+    stages inside one compiled step (the Policy carries the placement id,
+    so combining it with an explicit ``placement=`` is a loud error).
     ``placement``: node-placement strategy name (``core.placement``) for
     the eager string/'rl' modes; default 'first_fit'.
     ``action``: int32 — for the 'rl' scheduler, index into
@@ -181,7 +191,7 @@ def make_step(
     w_cost scales the electricity-price penalty (default 0 — off).
     """
     policy_mode = isinstance(scheduler, Policy)
-    if not policy_mode and scheduler != "rl" \
+    if not policy_mode and scheduler not in ("rl", "none") \
             and scheduler not in sched.SCHEDULERS:
         raise KeyError(f"unknown scheduler {scheduler}")
     if policy_mode and placement is not None:
@@ -213,7 +223,9 @@ def make_step(
         state, n_done = _complete_jobs(cfg, state)
 
         # --- dispatch
-        if not policy_mode and scheduler == "rl":
+        if not policy_mode and scheduler == "none":
+            pass    # idle sub-step: no selection, no placement
+        elif not policy_mode and scheduler == "rl":
             cands = sched.rl_candidates(cfg, state)          # (k,)
             k = cands.shape[0]
             job = jnp.where(action < k, cands[jnp.clip(action, 0, k - 1)], -1)

@@ -20,7 +20,18 @@ NRES = 3  # cpu cores, gpus, mem_gb
 
 
 class Statics(NamedTuple):
-    """Per-node constants + telemetry bank; NOT carried through the scan."""
+    """Per-node constants + telemetry bank; NOT carried through the scan.
+
+    The telemetry bank comes in two layouts:
+
+    - unbatched — ``cpu_trace``/``gpu_trace`` are (J, Q) and ``net_tx`` is
+      (J,): one workload, ``SimState.workload`` is ignored;
+    - banked — a leading workload axis W ((W, J, Q) / (W, J)): ONE shared
+      bank serves every vmapped replica/env, and each ``SimState`` selects
+      its slice through the traced ``workload`` id. Trace lookups
+      (``core.power.job_utilization``, ``core.network``) gather through the
+      id, so per-env state stays O(sim), not O(bank).
+    """
 
     capacity: jax.Array        # (NRES, N)
     node_type: jax.Array       # (N,) int32
@@ -30,9 +41,9 @@ class Statics(NamedTuple):
     node_max_w: jax.Array      # (N,)
     peak_gflops: jax.Array     # (N,)
     # telemetry bank: per-job utilization profiles at trace-quanta resolution
-    cpu_trace: jax.Array       # (J, Q) in [0,1]
-    gpu_trace: jax.Array       # (J, Q)
-    net_tx: jax.Array          # (J,) GB/s per job (congestion model)
+    cpu_trace: jax.Array       # (J, Q) in [0,1], or (W, J, Q) banked
+    gpu_trace: jax.Array       # (J, Q) / (W, J, Q)
+    net_tx: jax.Array          # (J,) GB/s per job, or (W, J) banked
     # grid context: carbon/price/wetbulb signals + power-cap events
     scenario: Scenario
 
@@ -72,6 +83,11 @@ class SimState(NamedTuple):
     sum_slowdown: jax.Array
     sum_power_w: jax.Array     # for mean power
     n_steps: jax.Array
+    # which workload this replica runs: index into a banked Statics trace
+    # bank ((W, J, Q) leading axis); ignored when the bank is unbatched.
+    # Scalar int32 — O(1) per env, vs. the O(J*Q) per-env bank copy the
+    # pre-bank-indexed env carried.
+    workload: jax.Array
 
 
 def build_statics(
@@ -150,6 +166,7 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
         sum_slowdown=f(0.0),
         sum_power_w=f(0.0),
         n_steps=f(0.0),
+        workload=jnp.int32(0),
     )
 
 

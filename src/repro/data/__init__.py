@@ -3,6 +3,7 @@ from repro.data.grid_signals import (
     synth_grid_trace,
     write_signal_csv,
 )
+from repro.data.bank import stack_workloads
 from repro.data.synth_trace import synth_workload
 from repro.data.trace_io import load_supercloud, write_supercloud_csvs
 from repro.data.synth_lm import lm_batches, lm_batch_at

@@ -9,6 +9,26 @@ footprint, and job throughput").
 The env is a pytree-in/pytree-out (reset, step) pair -> vmap over
 thousands of parallel datacenters, lax.scan over time, shard_map across
 the mesh for distributed PPO.
+
+Lightweight-state design (the RL-rollout hot path):
+
+- ``EnvState`` is just ``(sim, step_count)``. The trace bank, node tables
+  and scenario live in ONE shared ``Statics`` closed over by ``step``;
+  the bank is stacked (W, J, Q) and each env selects its workload through
+  the traced ``sim.workload`` int32 (``core.power`` gathers through it).
+  Auto-reset therefore moves O(sim-state) per env — the previous design
+  carried a full per-env ``Statics`` copy, so every vmapped env duplicated
+  its (J, Q) bank slice and every reset paid the bank gather.
+- ``step`` runs ONE dispatch sub-step (the agent's action) followed by
+  ``sim_steps_per_action - 1`` idle sub-steps compiled WITHOUT the
+  selection/placement stages (``make_step(..., "none")``) — bit-equivalent
+  to the old always-dispatch scan whose non-zero sub-steps forced a no-op
+  through the full candidate-ranking + placement pipeline.
+- ``observe`` is fused: the per-node-type Python loop is a one-hot
+  reduction, invariants (nameplate, capacity maxima, type one-hots,
+  placement one-hot) are precomputed at construction, and candidate
+  placement feasibility resolves the backend mask once per observation
+  instead of once per candidate.
 """
 
 from __future__ import annotations
@@ -23,6 +43,7 @@ from repro.configs.sim import SimConfig
 from repro.core import placement as plc
 from repro.core import schedulers as sched
 from repro.core.sim import make_step
+from repro.data.bank import stack_workloads
 from repro.scenarios import Scenario, eval_signal, power_cap_at
 from repro.core.state import (
     QUEUED,
@@ -34,10 +55,27 @@ from repro.core.state import (
     load_jobs,
 )
 
+# The observation layout — the single spec ``observe`` and ``obs_dim`` are
+# both derived from, so the two cannot drift (the old ``10 + ...``
+# hardcoding silently desynced when a global feature was added/removed).
+GLOBAL_FEATURES = (
+    "sin_day", "cos_day", "carbon", "price", "cap_frac",
+    "queued_frac", "running_frac", "nodes_up_frac", "day_frac",
+    "episode_progress",
+)
+# per-node-type features: free fraction of each resource
+TYPE_FEATURES = ("cpu_free", "gpu_free", "mem_free")
+CANDIDATE_FEATURES = (
+    "valid", "wait_h", "dur_h", "n_nodes",
+    "req_cpu", "req_gpu", "energy_proxy", "feasible_frac",
+)
+
 
 class EnvState(NamedTuple):
+    """Per-env rollout state: the sim (which carries the traced workload
+    id) plus the episode step counter — NO per-env Statics/bank copy."""
+
     sim: SimState
-    statics: Statics          # per-env (workload bank slice)
     step_count: jax.Array
 
 
@@ -70,69 +108,54 @@ class SchedEnv:
         self.n_actions = self.k + 1
         self.sim_steps_per_action = sim_steps_per_action
 
-        # stack the workload bank (pad Q to common length)
-        qmax = max(b["cpu"].shape[1] for _, b in workloads)
-        J = cfg.max_jobs
-
-        def padQ(a):
-            out = np.zeros((J, qmax), np.float32)
-            out[:, : a.shape[1]] = a
-            # hold last value so long jobs keep their final utilization
-            out[:, a.shape[1]:] = a[:, -1:]
-            return out
-
-        self._banks = {
-            "cpu": jnp.asarray(np.stack([padQ(b["cpu"]) for _, b in workloads])),
-            "gpu": jnp.asarray(np.stack([padQ(b["gpu"]) for _, b in workloads])),
-            "net": jnp.asarray(np.stack([b["net_tx"] for _, b in workloads])),
-        }
-
-        def padJ(jobs):
-            out = {}
-            n = len(jobs["submit_t"])
-            for name, arr in jobs.items():
-                if name == "is_gpu":
-                    continue
-                arr = np.asarray(arr)
-                shape = (3, J) if name == "req" else (J,) + arr.shape[1:]
-                buf = np.zeros(shape, arr.dtype)
-                if name == "req":
-                    buf[:, :n] = arr
-                else:
-                    buf[:n] = arr
-                out[name] = buf
-            out["n_valid"] = np.int32(n)
-            return out
-
-        padded = [padJ(j) for j, _ in workloads]
-        self._jobs = {
-            name: jnp.asarray(np.stack([p[name] for p in padded]))
-            for name in padded[0]
-        }
+        # ONE shared Statics: stacked (W, J, Q) trace bank + stacked job
+        # tables; envs select their workload via the traced sim.workload id
+        jobs, bank = stack_workloads(cfg, workloads)
+        self._jobs = {name: jnp.asarray(a) for name, a in jobs.items()}
         self.n_workloads = len(workloads)
-        # node constants + grid scenario (default: legacy diurnal sinusoids)
-        self._base_statics = build_statics(cfg, scenario=scenario)
-        # validate weights eagerly (step() builds the real step fn per call)
-        make_step(cfg, self._base_statics, "rl", placement=placement,
-                  reward_weights=reward_weights)
+        self._statics = build_statics(cfg, bank, scenario=scenario)
+
+        # step functions are built ONCE (the old per-call make_step rebuilt
+        # the closures on every Python invocation): one dispatching step
+        # for the agent's action, one dispatch-free step for the idle
+        # sub-steps between actions
+        self._step_rl = make_step(cfg, self._statics, "rl",
+                                  placement=placement,
+                                  reward_weights=reward_weights)
+        self._step_idle = make_step(cfg, self._statics, "none",
+                                    reward_weights=reward_weights)
+
+        # observation invariants (constant per env instance)
+        st = self._statics
+        self._nameplate = jnp.maximum(jnp.sum(st.node_max_w), 1.0)
+        self._cap_max = jnp.maximum(
+            jnp.max(st.capacity, axis=1, keepdims=True), 1e-6)   # (NRES, 1)
+        self._type_onehot = (
+            st.node_type[None, :] == jnp.arange(cfg.n_types)[:, None]
+        ).astype(jnp.float32)                                    # (T, N)
+        self._cap_type = jnp.sum(
+            st.capacity[:, None, :] * self._type_onehot[None], axis=-1
+        )                                                        # (NRES, T)
+        self._mask_fn = plc.PLACEMENT_MASKS[placement]
         self.obs_dim = int(self._obs_spec())
+
+    @property
+    def statics(self) -> Statics:
+        """The single shared Statics (banked trace, node tables, scenario)."""
+        return self._statics
 
     # ------------------------------------------------------------------ api
     def reset(self, key: jax.Array) -> Tuple[EnvState, jax.Array]:
         kw, ks = jax.random.split(key)
         w = jax.random.randint(kw, (), 0, self.n_workloads)
-        statics = self._base_statics._replace(
-            cpu_trace=self._banks["cpu"][w],
-            gpu_trace=self._banks["gpu"][w],
-            net_tx=self._banks["net"][w],
-        )
-        sim = init_state(self.cfg, statics, ks)
+        sim = init_state(self.cfg, self._statics, ks)
         n = self._jobs["n_valid"][w]
         J = self.cfg.max_jobs
         idx = jnp.arange(J)
         valid = idx < n
         part = self._jobs.get("part")
         sim = sim._replace(
+            workload=w.astype(jnp.int32),
             jstate=jnp.where(valid, QUEUED, 0).astype(jnp.int32),
             submit_t=self._jobs["submit_t"][w],
             dur_est=self._jobs["dur"][w],
@@ -143,24 +166,14 @@ class SchedEnv:
                   else jnp.where(valid, part[w], -1).astype(jnp.int32)),
             priority=self._jobs["priority"][w],
         )
-        st = EnvState(sim=sim, statics=statics, step_count=jnp.int32(0))
+        st = EnvState(sim=sim, step_count=jnp.int32(0))
         return st, self.observe(st)
 
     def step(
         self, st: EnvState, action: jax.Array
     ) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
-        step_fn = make_step(
-            self.cfg, st.statics, "rl", placement=self.placement,
-            reward_weights=self.reward_weights,
-        )
-
-        # accumulate the reductions in the scan carry (constant memory)
-        # instead of stacking a full StepOut per sub-step and reducing after
-        def sub(carry, i):
-            s, acc = carry
-            a = jnp.where(i == 0, action, jnp.int32(self.n_actions - 1))
-            s, out = step_fn(s, a)
-            acc = {
+        def acc_of(acc, out):
+            return {
                 "reward": acc["reward"] + out.reward,
                 "completed": acc["completed"] + out.completed_now,
                 "energy_kwh": acc["energy_kwh"] + out.energy_kwh_step,
@@ -168,16 +181,27 @@ class SchedEnv:
                 "facility_w": out.facility_w,
                 "queue_len": out.queue_len,
             }
-            return (s, acc), None
 
+        # sub-step 0 dispatches the agent's action; the remaining
+        # sub-steps advance the twin with the dispatch stage compiled OUT
+        # (a bit-equivalent split: the old path forced a no-op action
+        # through candidate ranking + placement on every sub-step).
+        # Reductions accumulate in the scan carry (constant memory).
+        sim, out = self._step_rl(st.sim, jnp.asarray(action, jnp.int32))
         z = jnp.float32(0.0)
-        acc0 = {"reward": z, "completed": z, "energy_kwh": z,
-                "carbon_kg": z, "facility_w": z, "queue_len": z}
+        acc = acc_of({"reward": z, "completed": z, "energy_kwh": z,
+                      "carbon_kg": z, "facility_w": z, "queue_len": z}, out)
+
+        def sub(carry, _):
+            s, a = carry
+            s, o = self._step_idle(s, jnp.int32(-1))
+            return (s, acc_of(a, o)), None
+
         (sim, acc), _ = jax.lax.scan(
-            sub, (st.sim, acc0), jnp.arange(self.sim_steps_per_action),
+            sub, (sim, acc), None, length=self.sim_steps_per_action - 1,
         )
         reward = acc["reward"]
-        st = EnvState(sim=sim, statics=st.statics, step_count=st.step_count + 1)
+        st = EnvState(sim=sim, step_count=st.step_count + 1)
         done = st.step_count >= self.episode_steps
         info = {
             "facility_w": acc["facility_w"],
@@ -190,11 +214,12 @@ class SchedEnv:
 
     # ------------------------------------------------------------ features
     def _obs_spec(self) -> int:
-        n_types = self.cfg.n_types
-        return 10 + len(plc.PLACEMENTS) + 3 * n_types + 8 * self.k
+        return (len(GLOBAL_FEATURES) + len(plc.PLACEMENTS)
+                + len(TYPE_FEATURES) * self.cfg.n_types
+                + len(CANDIDATE_FEATURES) * self.k)
 
     def observe(self, st: EnvState) -> jax.Array:
-        cfg, sim, statics = self.cfg, st.sim, st.statics
+        cfg, sim, statics = self.cfg, st.sim, self._statics
         day = 2 * jnp.pi * sim.t / cfg.day_seconds
         queued = jnp.sum(sched.queued_mask(sim)).astype(jnp.float32)
         running = jnp.sum(sim.jstate == RUNNING).astype(jnp.float32)
@@ -203,24 +228,30 @@ class SchedEnv:
         price = eval_signal(scn.price, sim.t) / max(cfg.price_mean_usd_kwh, 1e-6)
         # cap as a fraction of nameplate node power; 1 = effectively uncapped
         cap_w = power_cap_at(scn.power_cap, sim.t)
-        nameplate = jnp.maximum(jnp.sum(statics.node_max_w), 1.0)
-        cap_frac = jnp.where(cap_w > 0, jnp.minimum(cap_w / nameplate, 1.0), 1.0)
-        glob = jnp.stack([
-            jnp.sin(day), jnp.cos(day), co2, price, cap_frac,
-            queued / cfg.max_jobs, running / cfg.max_jobs,
-            jnp.sum(sim.node_up) / cfg.n_nodes,
-            sim.t / cfg.day_seconds,
-            st.step_count.astype(jnp.float32) / max(self.episode_steps, 1),
-        ])
-        # per-node-type free fractions (cpu, gpu, mem)
-        per_type = []
-        for ti in range(cfg.n_types):
-            m = (statics.node_type == ti).astype(jnp.float32)
-            for r in range(3):
-                cap = jnp.sum(statics.capacity[r] * m)
-                free = jnp.sum(sim.free[r] * m * sim.node_up)
-                per_type.append(free / jnp.maximum(cap, 1e-6))
-        per_type = jnp.stack(per_type)
+        cap_frac = jnp.where(
+            cap_w > 0, jnp.minimum(cap_w / self._nameplate, 1.0), 1.0)
+        glob = dict(
+            sin_day=jnp.sin(day), cos_day=jnp.cos(day), carbon=co2,
+            price=price, cap_frac=cap_frac,
+            queued_frac=queued / cfg.max_jobs,
+            running_frac=running / cfg.max_jobs,
+            nodes_up_frac=jnp.sum(sim.node_up) / cfg.n_nodes,
+            day_frac=sim.t / cfg.day_seconds,
+            episode_progress=(st.step_count.astype(jnp.float32)
+                              / max(self.episode_steps, 1)),
+        )
+        assert tuple(glob) == GLOBAL_FEATURES
+        glob = jnp.stack([glob[name] for name in GLOBAL_FEATURES])
+
+        # per-node-type free fractions, fused: the python per-(type,
+        # resource) loop of scalar reductions becomes one one-hot
+        # contraction (values unchanged: the masks are exact {0,1} floats)
+        free_up = sim.free * sim.node_up                         # (NRES, N)
+        free_type = jnp.sum(
+            free_up[:, None, :] * self._type_onehot[None], axis=-1
+        )                                                        # (NRES, T)
+        per_type = (free_type / jnp.maximum(self._cap_type, 1e-6)
+                    ).T.reshape(-1)             # type-major, resource-minor
 
         cands = sched.rl_candidates(cfg, sim)               # (k,)
         safe = jnp.maximum(cands, 0)
@@ -228,22 +259,26 @@ class SchedEnv:
         wait = jnp.maximum(sim.t - sim.submit_t[safe], 0.0) / 3600.0
         dur = sim.dur_est[safe] / 3600.0
         nn = sim.n_nodes[safe].astype(jnp.float32) / cfg.max_nodes_per_job
-        reqf = sim.req[:, safe] / jnp.maximum(
-            jnp.max(statics.capacity, axis=1, keepdims=True), 1e-6
-        )                                                    # (3,k)
+        reqf = sim.req[:, safe] / self._cap_max              # (NRES, k)
         # estimated energy proxy: nodes * dur * mean gpu util request
         eproxy = nn * dur
         # feasibility under the ACTIVE placement backend (e.g. partition
         # masks out wrong-type nodes), so the agent sees what placement
-        # will actually accept
-        feasible = jax.vmap(
-            lambda j: jnp.sum(
-                plc.feasible_under(self.placement, sim, statics, j))
-        )(safe).astype(jnp.float32) / cfg.n_nodes
-        cand_feats = jnp.concatenate([
-            valid, wait * valid, dur * valid, nn * valid,
-            reqf[0] * valid, reqf[1] * valid, eproxy * valid, feasible * valid,
-        ])
+        # will actually accept; the backend mask is resolved ONCE per
+        # observation, not once per candidate
+        ok = jax.vmap(lambda j: sched.feasible_nodes(sim, j))(safe)  # (k, N)
+        if self._mask_fn is not None:
+            ok = ok & self._mask_fn(sim, statics)[safe]
+        feasible = jnp.sum(ok, axis=1).astype(jnp.float32) / cfg.n_nodes
+        cand = dict(
+            valid=valid, wait_h=wait * valid, dur_h=dur * valid,
+            n_nodes=nn * valid, req_cpu=reqf[0] * valid,
+            req_gpu=reqf[1] * valid, energy_proxy=eproxy * valid,
+            feasible_frac=feasible * valid,
+        )
+        assert tuple(cand) == CANDIDATE_FEATURES
+        cand_feats = jnp.concatenate(
+            [cand[name] for name in CANDIDATE_FEATURES])
         return jnp.concatenate(
             [glob, self._place_onehot, per_type, cand_feats]
         ).astype(jnp.float32)

@@ -46,7 +46,7 @@ def make_distributed_grad_step(
         params = jax.tree.map(
             lambda x: jax.lax.pcast(x, axis, to="varying"), params
         )
-        env_states, batch, last_val, fin_ret = rollout(params, env_states, key)
+        env_states, batch, last_val, ep = rollout(params, env_states, key)
         adv, ret = gae(batch.reward, batch.value, batch.done, last_val,
                        gamma=cfg.gamma, lam=cfg.lam)
         flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
@@ -58,9 +58,14 @@ def make_distributed_grad_step(
             grads, error = compressed_psum(grads, axis, error)
         else:
             grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+        # window-local (ep not threaded across grad steps here; see
+        # make_rollout's docstring)
         stats = {
             "loss": jax.lax.pmean(loss, axis),
-            "mean_episode_return": jax.lax.pmean(jnp.mean(fin_ret), axis),
+            "mean_episode_return": jax.lax.pmean(
+                jnp.mean(ep["fin_ret"]), axis),
+            "mean_episode_len": jax.lax.pmean(
+                jnp.mean(ep["fin_len"].astype(jnp.float32)), axis),
         }
         return grads, env_states, jax.tree.map(lambda e: e[None], error), stats
 

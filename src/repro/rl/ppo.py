@@ -4,13 +4,18 @@ auto-reset), GAE, minibatched clipped-objective epochs, AdamW — the
 paper's "initial RL infrastructure" (SB3 PPO) rebuilt JAX-native so the
 entire train iteration — including the simulator — is one XLA program.
 
+``ppo_train`` fuses iterations into ``lax.scan`` chunks: the Python loop
+used to dispatch one jitted iteration at a time and then ``float()`` every
+stat — a host sync per iteration. Now ``sync_every`` iterations run as one
+XLA program and ONE ``device_get`` drains the chunk's stacked stats, so
+the host touches the device once per log window.
+
 ``data_axis`` optionally shard_maps the rollout+update across the mesh
 (distributed PPO: per-shard rollouts, psum'd gradients).
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
@@ -48,17 +53,36 @@ class Transition(NamedTuple):
 
 
 def make_rollout(env, policy: ActorCritic, cfg: PPOConfig):
-    """Returns rollout(params, env_states, key) -> (env_states, batch, last_val, ep_stats)."""
+    """Returns rollout(params, env_states, key, ep=None) ->
+    (env_states, batch, last_val, ep). ``ep`` is the per-env episode
+    accumulator {ret, len, fin_ret, fin_len} (running return/length plus
+    the last FINISHED episode's return/length); thread it across rollout
+    calls — as ``ppo_train``'s iteration carry does — so episodes spanning
+    rollout windows report their true totals. ``None`` starts from zeros
+    (window-local stats).
+
+    Auto-reset is cheap by construction: ``EnvState`` is sim-state only
+    (the trace bank lives in ONE shared Statics indexed by the traced
+    workload id), so the per-step ``v_reset`` moves O(n_envs x sim-state),
+    never O(n_envs x bank)."""
 
     v_step = jax.vmap(env.step)
     v_reset = jax.vmap(env.reset)
     v_obs = jax.vmap(env.observe)
 
-    def rollout(params, env_states, key):
+    def rollout(params, env_states, key, ep=None):
         obs0 = v_obs(env_states)
+        if ep is None:
+            # zero-inits derived from obs0 keep their VMA type under
+            # shard_map; without a threaded carry the episode stats are
+            # window-local (an episode spanning rollouts reports only the
+            # steps/reward inside the window that finished it)
+            z = obs0[:, 0] * 0.0
+            ep = {"ret": z, "len": z.astype(jnp.int32),
+                  "fin_ret": z, "fin_len": z.astype(jnp.int32)}
 
         def one(carry, _):
-            states, obs, key, ep_ret, ep_len, fin_ret = carry
+            states, obs, key, ep_ret, ep_len, fin_ret, fin_len = carry
             key, ka, kr = jax.random.split(key, 3)
             logits, values = policy.apply(params, obs)
             actions = jax.vmap(
@@ -70,6 +94,7 @@ def make_rollout(env, policy: ActorCritic, cfg: PPOConfig):
             ep_ret = ep_ret + rew
             ep_len = ep_len + 1
             fin_ret = jnp.where(done, ep_ret, fin_ret)
+            fin_len = jnp.where(done, ep_len, fin_len)
             # auto-reset finished envs
             rkeys = jax.random.split(kr, cfg.n_envs)
             fresh_states, fresh_obs = v_reset(rkeys)
@@ -82,16 +107,16 @@ def make_rollout(env, policy: ActorCritic, cfg: PPOConfig):
             ep_ret = jnp.where(done, 0.0, ep_ret)
             ep_len = jnp.where(done, 0, ep_len)
             tr = Transition(obs, actions, logps, values, rew, done)
-            return (states, nobs, key, ep_ret, ep_len, fin_ret), tr
+            return (states, nobs, key, ep_ret, ep_len, fin_ret, fin_len), tr
 
-        # zero-inits derived from obs0 keep their VMA type under shard_map
-        z = obs0[:, 0] * 0.0
-        init = (env_states, obs0, key, z, z.astype(jnp.int32), z)
-        (states, obs, _, _, _, fin_ret), batch = jax.lax.scan(
-            one, init, None, length=cfg.rollout_len
-        )
+        init = (env_states, obs0, key,
+                ep["ret"], ep["len"], ep["fin_ret"], ep["fin_len"])
+        (states, obs, _, ep_ret, ep_len, fin_ret, fin_len), batch = \
+            jax.lax.scan(one, init, None, length=cfg.rollout_len)
         _, last_val = policy.apply(params, obs)
-        return states, batch, last_val, fin_ret
+        ep = {"ret": ep_ret, "len": ep_len,
+              "fin_ret": fin_ret, "fin_len": fin_len}
+        return states, batch, last_val, ep
 
     return rollout
 
@@ -122,9 +147,10 @@ def make_train_iteration(env, policy: ActorCritic, cfg: PPOConfig):
     opt = AdamW(lr=cfg.lr, b2=0.999, weight_decay=0.0)
     rollout = make_rollout(env, policy, cfg)
 
-    def iteration(params, opt_state, env_states, key, step):
+    def iteration(params, opt_state, env_states, ep, key, step):
         key, kroll, kperm = jax.random.split(key, 3)
-        env_states, batch, last_val, fin_ret = rollout(params, env_states, kroll)
+        env_states, batch, last_val, ep = rollout(params, env_states, kroll,
+                                                  ep)
         adv, ret = gae(batch.reward, batch.value, batch.done, last_val,
                        gamma=cfg.gamma, lam=cfg.lam)
 
@@ -163,12 +189,13 @@ def make_train_iteration(env, policy: ActorCritic, cfg: PPOConfig):
         )
         stats = {
             "mean_reward": jnp.mean(batch.reward),
-            "mean_episode_return": jnp.mean(fin_ret),
+            "mean_episode_return": jnp.mean(ep["fin_ret"]),
+            "mean_episode_len": jnp.mean(ep["fin_len"].astype(jnp.float32)),
             "mean_value": jnp.mean(batch.value),
             **{k: jnp.mean(v) for k, v in
                jax.tree.map(lambda x: x, metrics).items()},
         }
-        return params, opt_state, env_states, key, stats
+        return params, opt_state, env_states, ep, key, stats
 
     return iteration, opt
 
@@ -184,17 +211,46 @@ def ppo_train(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 10,
     resume: bool = False,
+    sync_every: Optional[int] = None,
 ):
-    """Train a PPO scheduler on `env`. Returns (params, history)."""
+    """Train a PPO scheduler on `env`. Returns (params, history).
+
+    Iterations are fused into ``lax.scan`` chunks of ``sync_every`` (default:
+    ``checkpoint_every`` when checkpointing, else min(n_iterations, 8)):
+    per-iteration stats stack inside the scan and ONE ``device_get`` drains
+    each chunk — the per-iteration Python dispatch + ``float()``-per-stat
+    host sync is gone. ``log`` still fires once per iteration (from host
+    data, after its chunk completes) and checkpoints land at exactly the
+    iterations the unfused loop produced. Each distinct chunk length is
+    one compilation: 2 in the common case (full + remainder); when
+    ``sync_every`` does not divide ``checkpoint_every`` the
+    checkpoint-boundary cuts can add a couple more."""
     policy = ActorCritic(env.obs_dim, env.n_actions, hidden)
     iteration, opt = make_train_iteration(env, policy, cfg)
-    it_jit = jax.jit(iteration)
+
+    def chunk(params, opt_state, env_states, ep, key, steps):
+        def body(carry, step):
+            params, opt_state, env_states, ep, key = carry
+            params, opt_state, env_states, ep, key, stats = iteration(
+                params, opt_state, env_states, ep, key, step)
+            return (params, opt_state, env_states, ep, key), stats
+
+        (params, opt_state, env_states, ep, key), stats = jax.lax.scan(
+            body, (params, opt_state, env_states, ep, key), steps)
+        return params, opt_state, env_states, ep, key, stats
+
+    chunk_jit = jax.jit(chunk)
 
     key = jax.random.key(seed)
     key, kp, ke = jax.random.split(key, 3)
     params = policy.init(kp)
     opt_state = opt.init(params)
     env_states, _ = jax.vmap(env.reset)(jax.random.split(ke, cfg.n_envs))
+    # episode accumulators persist across iterations (and chunks), so
+    # episodes spanning rollout windows report true returns/lengths
+    z = jnp.zeros((cfg.n_envs,), jnp.float32)
+    zi = jnp.zeros((cfg.n_envs,), jnp.int32)
+    ep = {"ret": z, "len": zi, "fin_ret": z, "fin_len": zi}
     start_iter = 0
 
     if checkpoint_dir and resume:
@@ -207,18 +263,35 @@ def ppo_train(
             params, opt_state = payload["params"], payload["opt"]
             start_iter = step0 + 1
 
+    if sync_every is None:
+        # cap the default: the chunk body is a full PPO iteration, so an
+        # uncapped checkpoint_every would trace (and risk losing, on
+        # interrupt) that many iterations per program; the boundary cut
+        # below keeps checkpoints aligned regardless
+        sync_every = min(checkpoint_every if checkpoint_dir else n_iterations,
+                         8)
+    sync_every = max(1, sync_every)
+
     history = []
-    for it in range(start_iter, n_iterations):
-        step = jnp.int32(it)
-        params, opt_state, env_states, key, stats = it_jit(
-            params, opt_state, env_states, key, step
-        )
-        stats = {k: float(v) for k, v in stats.items()}
-        history.append(stats)
-        if log:
-            log(it, stats)
-        if checkpoint_dir and (it + 1) % checkpoint_every == 0:
+    it = start_iter
+    while it < n_iterations:
+        n = min(sync_every, n_iterations - it)
+        if checkpoint_dir:
+            # cut the chunk at the next checkpoint boundary so saves happen
+            # at the same iterations as the unfused loop did
+            n = min(n, ((it // checkpoint_every) + 1) * checkpoint_every - it)
+        steps = jnp.arange(it, it + n, dtype=jnp.int32)
+        params, opt_state, env_states, ep, key, stats = chunk_jit(
+            params, opt_state, env_states, ep, key, steps)
+        host = jax.device_get(stats)              # ONE sync per chunk
+        for i in range(n):
+            s = {k: float(v[i]) for k, v in host.items()}
+            history.append(s)
+            if log:
+                log(it + i, s)
+        it += n
+        if checkpoint_dir and it % checkpoint_every == 0:
             from repro.checkpoint import save
 
-            save(checkpoint_dir, it, {"params": params, "opt": opt_state})
+            save(checkpoint_dir, it - 1, {"params": params, "opt": opt_state})
     return params, history

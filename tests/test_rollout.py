@@ -1,0 +1,230 @@
+"""Bank-indexed lightweight-state rollout engine (PR4).
+
+Equivalence: the refactor moved the trace bank out of the per-env state
+(shared banked Statics + traced workload id), split the idle sub-steps
+off the dispatching step, and fused the observation path — all of which
+must be *behavior-preserving*. ``benchmarks.bench_rl._HeavyEnv`` re-creates
+the pre-PR4 layout (per-env Statics copy, dispatch through every
+sub-step, loop-based observe) around the same twin, so old-vs-new runs
+executable in one process; a hardcoded reward trace pinned from the
+actual pre-PR4 code guards against both drifting together.
+"""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs.sim import tiny_cluster
+from repro.core.fleet import fleet_summary, run_fleet
+from repro.core.state import build_statics, init_state, load_jobs
+from repro.data import stack_workloads, synth_workload
+from repro.envs import EnvState, SchedEnv
+from repro.envs.sched_env import (
+    CANDIDATE_FEATURES,
+    GLOBAL_FEATURES,
+    TYPE_FEATURES,
+)
+
+from benchmarks.bench_rl import _HeavyEnv
+
+# rewards of the scripted episode below, recorded by running the PRE-PR4
+# SchedEnv (per-env Statics, per-call make_step, always-dispatch sub-steps)
+# with the same seeds/actions — the anchor that pins "identical rewards
+# across the bank-indexed refactor" to the actual old code, not merely to
+# the in-repo legacy emulation
+SCRIPTED_ACTIONS = (0, 1, 4, 2, 0, 3, 4, 1)
+PRE_PR_REWARDS = (
+    -0.4411873519420624, -0.44118732213974, -0.45492321252822876,
+    -0.45492321252822876, -0.46987271308898926, -0.46987268328666687,
+    -0.4805428087711334, -0.48304271697998047,
+)
+
+
+@pytest.fixture(scope="module")
+def env():
+    cfg = tiny_cluster(sched_max_candidates=4)
+    wls = [synth_workload(cfg, 24, 900.0, seed=s) for s in range(2)]
+    return SchedEnv(cfg, wls, episode_steps=8, sim_steps_per_action=5)
+
+
+def test_scripted_rollout_pins_pre_pr_rewards(env):
+    st, _ = env.reset(jax.random.key(0))
+    step = jax.jit(env.step)
+    rewards = []
+    for a in SCRIPTED_ACTIONS:
+        st, _, r, _, _ = step(st, jnp.int32(a))
+        rewards.append(float(r))
+    # exact on the authoring platform, but the dense one-hot contraction's
+    # dot accumulation order is backend-dependent — a tight tolerance keeps
+    # the anchor meaningful (semantic drift would be orders larger) without
+    # pinning XLA's reduction order; bitwise old-vs-new is covered by
+    # test_scripted_rollout_matches_legacy_layout, which shares kernels
+    np.testing.assert_allclose(rewards, np.asarray(PRE_PR_REWARDS),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_scripted_rollout_matches_legacy_layout(env):
+    """Same seed + same actions -> bitwise-identical rewards, observations
+    and final sim state between the new engine and the pre-PR4 layout."""
+    heavy = _HeavyEnv(env)
+    st_n, obs_n = env.reset(jax.random.key(0))
+    st_h, obs_h = heavy.reset(jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(obs_n), np.asarray(obs_h))
+    step_n, step_h = jax.jit(env.step), jax.jit(heavy.step)
+    for a in SCRIPTED_ACTIONS:
+        st_n, obs_n, r_n, d_n, _ = step_n(st_n, jnp.int32(a))
+        st_h, obs_h, r_h, d_h, _ = step_h(st_h, jnp.int32(a))
+        np.testing.assert_array_equal(np.asarray(r_n), np.asarray(r_h))
+        np.testing.assert_array_equal(np.asarray(obs_n), np.asarray(obs_h))
+        assert bool(d_n) == bool(d_h)
+    for f in st_n.sim._fields:
+        if f == "workload":      # legacy keeps the id in its statics copy
+            continue
+        a, b = getattr(st_n.sim, f), getattr(st_h.sim, f)
+        if f == "key":
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"sim.{f} diverged across the bank-indexed refactor")
+
+
+def test_observe_matches_legacy_features(env):
+    """Fused observe() (one-hot type reduction, precomputed invariants,
+    hoisted placement mask) is bit-equivalent to the loop-based original —
+    checked on fresh and mid-episode states, and for a masking placement
+    backend (partition)."""
+    for placement in ("first_fit", "partition"):
+        e = SchedEnv(env.cfg,
+                     [synth_workload(env.cfg, 24, 900.0, seed=s)
+                      for s in range(2)],
+                     episode_steps=8, sim_steps_per_action=5,
+                     placement=placement)
+        heavy = _HeavyEnv(e)
+        st, obs = e.reset(jax.random.key(3))
+        st_h, obs_h = heavy.reset(jax.random.key(3))
+        np.testing.assert_array_equal(np.asarray(obs), np.asarray(obs_h))
+        for a in (0, 2, 1):
+            st, obs, *_ = e.step(st, jnp.int32(a))
+            st_h, obs_h, *_ = heavy.step(st_h, jnp.int32(a))
+            np.testing.assert_array_equal(np.asarray(obs), np.asarray(obs_h))
+
+
+def test_env_state_is_lightweight(env):
+    """EnvState carries NO per-env trace bank: just the sim + counter."""
+    assert EnvState._fields == ("sim", "step_count")
+    n_envs = 8
+    sts, _ = jax.vmap(env.reset)(jax.random.split(jax.random.key(0), n_envs))
+    bank = env.statics
+    assert bank.cpu_trace.ndim == 3          # shared (W, J, Q) bank
+    bank_slice_bytes = (bank.cpu_trace.nbytes + bank.gpu_trace.nbytes
+                        + bank.net_tx.nbytes) // env.n_workloads
+
+    def nbytes(leaf):
+        if jnp.issubdtype(leaf.dtype, jax.dtypes.prng_key):
+            leaf = jax.random.key_data(leaf)
+        return leaf.nbytes
+
+    state_bytes = sum(nbytes(leaf) for leaf in jax.tree.leaves(sts))
+    per_env = state_bytes / n_envs
+    # the old layout carried >= one bank slice per env; the new state is a
+    # small multiple of the sim state and far below a single slice
+    assert per_env < bank_slice_bytes, (per_env, bank_slice_bytes)
+    # and no leaf of the batched state has the bank's (J, Q) trailing shape
+    J, Q = bank.cpu_trace.shape[1:]
+    for leaf in jax.tree.leaves(sts):
+        assert leaf.shape[1:] != (J, Q)
+    # the workload selector is a scalar int32 per env
+    assert sts.sim.workload.shape == (n_envs,)
+    assert sts.sim.workload.dtype == jnp.int32
+
+
+def test_step_function_built_once(env, monkeypatch):
+    """SchedEnv.step must not rebuild the step closure per call."""
+    import repro.envs.sched_env as mod
+
+    def boom(*a, **kw):
+        raise AssertionError("make_step called after __init__")
+
+    monkeypatch.setattr(mod, "make_step", boom)
+    st, _ = env.reset(jax.random.key(0))
+    env.step(st, jnp.int32(0))               # uses the cached step fns
+
+
+def test_obs_spec_derived_from_shared_feature_spec(env):
+    from repro.core import placement as plc
+
+    want = (len(GLOBAL_FEATURES) + len(plc.PLACEMENTS)
+            + len(TYPE_FEATURES) * env.cfg.n_types
+            + len(CANDIDATE_FEATURES) * env.k)
+    assert env.obs_dim == want
+    _, obs = env.reset(jax.random.key(0))
+    assert obs.shape == (want,)
+
+
+# ----------------------------------------------------------- fleet x bank
+def test_fleet_workload_axis_matches_unbatched_runs():
+    """run_fleet(workloads=ids) over one banked Statics reproduces the
+    per-workload unbatched runs exactly."""
+    cfg = tiny_cluster()
+    wls = [synth_workload(cfg, 24, 900.0, seed=s) for s in range(2)]
+    jobs, bank = stack_workloads(cfg, wls)
+    statics = build_statics(cfg, bank)
+    # both replicas replay workload 0's JOB TABLE but workload-id-selected
+    # telemetry, so any energy difference comes from the bank indexing
+    st = load_jobs(init_state(cfg, statics, jax.random.key(0)), wls[0][0])
+    fs, _ = run_fleet(cfg, statics, st, 400, "fcfs", workloads=[0, 1],
+                      scenarios=[statics.scenario] * 2, summary_only=True)
+    rows = fleet_summary(fs)
+    assert rows[0]["energy_kwh"] != rows[1]["energy_kwh"]
+
+    for w in (0, 1):
+        st2d = build_statics(cfg, {
+            "cpu": np.asarray(bank["cpu"][w]),
+            "gpu": np.asarray(bank["gpu"][w]),
+            "net_tx": np.asarray(bank["net_tx"][w]),
+        })
+        st0 = load_jobs(init_state(cfg, st2d, jax.random.key(0)), wls[0][0])
+        fs1, _ = run_fleet(cfg, st2d, st0, 400, "fcfs", summary_only=True)
+        ref = fleet_summary(fs1)[0]
+        assert ref["energy_kwh"] == pytest.approx(
+            rows[w]["energy_kwh"], rel=1e-6)
+
+
+def test_fleet_workload_axis_validation():
+    cfg = tiny_cluster()
+    wls = [synth_workload(cfg, 16, 600.0, seed=s) for s in range(2)]
+    _, bank = stack_workloads(cfg, wls)
+    banked = build_statics(cfg, bank)
+    flat = build_statics(cfg, wls[0][1])
+    st = load_jobs(init_state(cfg, banked, jax.random.key(0)), wls[0][0])
+    with pytest.raises(ValueError, match="banked"):
+        run_fleet(cfg, flat, st, 10, "fcfs", workloads=[0])
+    with pytest.raises(ValueError, match="one bank id per replica"):
+        run_fleet(cfg, banked, st, 10, "fcfs", workloads=[0, 1, 0])
+
+
+# ------------------------------------------------------------------- ppo
+def test_ppo_scanned_loop_matches_unfused_and_reports_ep_len(env):
+    """The lax.scan-chunked outer loop (one device_get per window) yields
+    the same history as per-iteration syncing, and surfaces the
+    once-dead episode-length stat."""
+    from repro.rl import PPOConfig, ppo_train
+
+    kw = dict(cfg=PPOConfig(n_envs=2, rollout_len=4, n_epochs=1,
+                            n_minibatches=1),
+              n_iterations=3, seed=7)
+    _, h_fused = ppo_train(env, sync_every=3, **kw)
+    _, h_steps = ppo_train(env, sync_every=1, **kw)
+    assert len(h_fused) == len(h_steps) == 3
+    for a, b in zip(h_fused, h_steps):
+        assert set(a) == set(b)
+        for k in a:
+            assert a[k] == pytest.approx(b[k], rel=1e-5), k
+    assert all("mean_episode_len" in h and np.isfinite(h["mean_episode_len"])
+               for h in h_fused)
