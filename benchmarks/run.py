@@ -24,6 +24,9 @@ Usage:
   python benchmarks/run.py            # full suite
   python benchmarks/run.py --smoke    # tiny configs, seconds (CI gate)
   python benchmarks/run.py --out P    # write the artifact to path P
+  python benchmarks/run.py --compare BENCH_a.json BENCH_b.json
+                                      # per-row speedup table a -> b;
+                                      # exits non-zero on >20% regressions
 """
 
 import argparse
@@ -64,11 +67,12 @@ def _benches(smoke: bool):
     from benchmarks.bench_rl import bench_rl
 
     if smoke:
-        from benchmarks.bench_sim import bench_vectorized_envs
+        from benchmarks.bench_sim import bench_macro_smoke, bench_vectorized_envs
 
         return [
             _named(bench_dispatch, "bench_dispatch", smoke=True),
             bench_vectorized_envs,
+            bench_macro_smoke,
             _named(bench_policy_grid, "bench_policy_grid", smoke=True),
             _named(bench_rl, "bench_rl", smoke=True),
         ]
@@ -82,6 +86,7 @@ def _benches(smoke: bool):
     )
     from benchmarks.bench_sim import (
         bench_congestion_model,
+        bench_macro_smoke,
         bench_power_prediction,
         bench_replay_throughput,
         bench_rl_training,
@@ -91,6 +96,7 @@ def _benches(smoke: bool):
 
     return [
         bench_replay_throughput,
+        bench_macro_smoke,
         bench_scheduler_comparison,
         bench_power_prediction,
         bench_congestion_model,
@@ -107,6 +113,53 @@ def _benches(smoke: bool):
     ]
 
 
+REGRESSION_THRESHOLD = 1.20   # >20% slower counts as a regression
+
+
+def compare_artifacts(path_a: str, path_b: str,
+                      threshold: float = REGRESSION_THRESHOLD) -> int:
+    """Print a per-row speedup table between two BENCH artifacts and
+    return the number of rows regressing beyond ``threshold`` (b slower
+    than a). Rows are matched by name; unmatched, failed (nan) and
+    zero-time rows are listed but never counted as regressions — the
+    trajectory must stay diffable even when a bench set changes shape."""
+    a = json.load(open(path_a))
+    b = json.load(open(path_b))
+    rows_a = {r["name"]: r for r in a["rows"]}
+    rows_b = {r["name"]: r for r in b["rows"]}
+    na, nb = os.path.basename(path_a), os.path.basename(path_b)
+    width = max([len(n) for n in rows_a] + [len(n) for n in rows_b] + [4])
+    print(f"{'name':<{width}}  {na:>14}  {nb:>14}  {'speedup':>8}  verdict")
+    regressions = []
+    for name in list(rows_a) + [n for n in rows_b if n not in rows_a]:
+        ra, rb = rows_a.get(name), rows_b.get(name)
+        if ra is None or rb is None:
+            tag = "only in " + (nb if ra is None else na)
+            us = (rb or ra)["us_per_call"]
+            print(f"{name:<{width}}  {'-' if ra is None else us:>14}  "
+                  f"{'-' if rb is None else us:>14}  {'-':>8}  {tag}")
+            continue
+        ua, ub = ra["us_per_call"], rb["us_per_call"]
+        if not (isinstance(ua, (int, float)) and isinstance(ub, (int, float))) \
+                or ua != ua or ub != ub or ua <= 0 or ub <= 0:
+            print(f"{name:<{width}}  {ua!s:>14}  {ub!s:>14}  {'-':>8}  "
+                  "skipped (failed/zero-time row)")
+            continue
+        speedup = ua / ub
+        verdict = "ok"
+        if ub > ua * threshold:
+            verdict = f"REGRESSION (>{(threshold - 1) * 100:.0f}%)"
+            regressions.append(name)
+        elif speedup >= threshold:
+            verdict = "improved"
+        print(f"{name:<{width}}  {ua:>14.1f}  {ub:>14.1f}  "
+              f"{speedup:>7.2f}x  {verdict}")
+    if regressions:
+        print(f"# {len(regressions)} regression(s): {regressions}",
+              file=sys.stderr)
+    return len(regressions)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -116,7 +169,17 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filter on bench function "
                          "names (e.g. --only policy_grid,dispatch)")
+    ap.add_argument("--compare", nargs=2, metavar=("A.json", "B.json"),
+                    default=None,
+                    help="diff two BENCH artifacts row-by-row instead of "
+                         "running benches; exit non-zero on >20%% regressions")
     args = ap.parse_args(argv)
+
+    if args.compare:
+        n_reg = compare_artifacts(*args.compare)
+        if n_reg:
+            raise SystemExit(1)
+        return
 
     benches = _benches(args.smoke)
     if args.only:

@@ -16,7 +16,9 @@ from repro.core.schedulers import SCHEDULERS, SELECT_IDS
 from repro.core.sim import (
     StepOut,
     TelemetrySummary,
+    make_macro_step,
     make_step,
+    quiet_horizon,
     run_episode,
     summary,
 )

@@ -162,8 +162,12 @@ def run_fleet(
 
     ``**kw`` forwards to ``run_episode``/``make_step`` — in particular
     ``summary_only=True`` returns per-replica ``TelemetrySummary`` with
-    peak memory independent of ``n_steps``, and ``telemetry_every=k``
-    stacks one windowed summary per k steps.
+    peak memory independent of ``n_steps``, ``telemetry_every=k`` stacks
+    one windowed summary per k steps, and ``macro=True`` switches every
+    replica to the macro-stepping engine: each replica fast-forwards its
+    own quiet segments through the same traced computation (no host
+    sync; under ``vmap`` the while-loops run lockstep, so replicas on
+    event ticks overlap with replicas fast-forwarding).
 
     Returns (final_states, outs) with a leading replica axis on every leaf.
     """
@@ -228,8 +232,19 @@ def run_fleet(
                   scheduler, kw_items)
 
 
-def fleet_summary(final_states: SimState) -> List[Dict[str, float]]:
-    """Per-replica ``summary`` dicts from batched final states."""
+def fleet_summary(
+    final_states: SimState,
+    telemetry: TelemetrySummary | None = None,
+) -> List[Dict[str, float]]:
+    """Per-replica ``summary`` dicts from batched final states. Pass the
+    per-replica ``TelemetrySummary`` (``summary_only=True`` output) to also
+    surface the macro-stepping skip accounting (``ticks_simulated`` /
+    ``macro_steps_taken`` / ``macro_skip_ratio``) per replica."""
     host = jax.device_get(final_states)        # one transfer, not R x fields
+    tel = None if telemetry is None else jax.device_get(telemetry)
     R = int(np.shape(host.t)[0])
-    return [summary(jax.tree.map(lambda a: a[i], host)) for i in range(R)]
+    return [
+        summary(jax.tree.map(lambda a: a[i], host),
+                None if tel is None else jax.tree.map(lambda a: a[i], tel))
+        for i in range(R)
+    ]

@@ -141,6 +141,46 @@ def node_loads(cfg: SimConfig, state: SimState, statics: Statics,
 # (tests/test_scenarios.py pins the equivalence against the closed forms).
 
 
+def finish_power(cfg: SimConfig, state: SimState, statics: Statics,
+                 node_it: jax.Array, node_input: jax.Array,
+                 cpu_frac: jax.Array, gpu_frac: jax.Array) -> PowerOut:
+    """Per-node IT/input power -> facility totals, cooling (COP model),
+    PUE and delivered GFLOP/s. Shared by every power path (eager, Pallas
+    kernel, and the macro-step fast tick) so the chain stays bit-identical
+    across them."""
+    it_w = jnp.sum(node_it)
+    input_w = jnp.sum(node_input)
+    wb = eval_signal(statics.scenario.wetbulb, state.t)
+    cop = jnp.maximum(
+        cfg.cop_base + cfg.cop_wetbulb_coef * (wb - cfg.wetbulb_ref_c),
+        1.5,
+    )
+    cooling_w = input_w / cop
+    facility_w = input_w + cooling_w
+    pue = facility_w / jnp.maximum(it_w, 1.0)
+    gflops = jnp.sum(
+        statics.peak_gflops * jnp.maximum(cpu_frac, gpu_frac) * state.node_up
+    )
+    return PowerOut(node_it, node_input, it_w, input_w, cooling_w,
+                    facility_w, pue, gflops)
+
+
+def power_from_fracs(cfg: SimConfig, state: SimState, statics: Statics,
+                     cpu_frac: jax.Array, gpu_frac: jax.Array) -> PowerOut:
+    """Per-node load fractions -> full power chain (the eager oracle math:
+    IT power, rectifier-efficiency parabola, conversion losses)."""
+    it = statics.idle_w + cpu_frac * statics.cpu_dyn_w + gpu_frac * statics.gpu_dyn_w
+    it = it * state.node_up
+    load_frac = jnp.clip(it / jnp.maximum(statics.node_max_w, 1.0), 0.0, 1.2)
+    eta = jnp.clip(
+        cfg.rect_eff_peak - cfg.rect_eff_curv * jnp.square(load_frac - cfg.rect_eff_load),
+        0.5, 1.0,
+    )
+    node_it, node_input = it, it / (eta * cfg.conv_eff)
+    return finish_power(cfg, state, statics, node_it, node_input,
+                        cpu_frac, gpu_frac)
+
+
 def compute_power(cfg: SimConfig, state: SimState, statics: Statics,
                   *, use_kernel: bool = False) -> PowerOut:
     cpu_util, gpu_util = job_utilization(cfg, state, statics)
@@ -159,31 +199,8 @@ def compute_power(cfg: SimConfig, state: SimState, statics: Statics,
             rect_peak=cfg.rect_eff_peak, rect_load=cfg.rect_eff_load,
             rect_curv=cfg.rect_eff_curv, conv_eff=cfg.conv_eff,
         )
-    else:
-        cpu_frac, gpu_frac = node_loads(cfg, state, statics, cpu_util,
-                                        gpu_util)
-        # loads are already per-node fractions; inline oracle math
-        it = statics.idle_w + cpu_frac * statics.cpu_dyn_w + gpu_frac * statics.gpu_dyn_w
-        it = it * state.node_up
-        load_frac = jnp.clip(it / jnp.maximum(statics.node_max_w, 1.0), 0.0, 1.2)
-        eta = jnp.clip(
-            cfg.rect_eff_peak - cfg.rect_eff_curv * jnp.square(load_frac - cfg.rect_eff_load),
-            0.5, 1.0,
-        )
-        node_it, node_input = it, it / (eta * cfg.conv_eff)
+        return finish_power(cfg, state, statics, node_it, node_input,
+                            cpu_frac, gpu_frac)
 
-    it_w = jnp.sum(node_it)
-    input_w = jnp.sum(node_input)
-    wb = eval_signal(statics.scenario.wetbulb, state.t)
-    cop = jnp.maximum(
-        cfg.cop_base + cfg.cop_wetbulb_coef * (wb - cfg.wetbulb_ref_c),
-        1.5,
-    )
-    cooling_w = input_w / cop
-    facility_w = input_w + cooling_w
-    pue = facility_w / jnp.maximum(it_w, 1.0)
-    gflops = jnp.sum(
-        statics.peak_gflops * jnp.maximum(cpu_frac, gpu_frac) * state.node_up
-    )
-    return PowerOut(node_it, node_input, it_w, input_w, cooling_w,
-                    facility_w, pue, gflops)
+    cpu_frac, gpu_frac = node_loads(cfg, state, statics, cpu_util, gpu_util)
+    return power_from_fracs(cfg, state, statics, cpu_frac, gpu_frac)

@@ -24,19 +24,25 @@ Step order (matches RAPS' fixed-dt loop):
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.sim import SimConfig
 from repro.core import placement as plc
 from repro.core import schedulers as sched
 from repro.core.network import congestion_slowdown
 from repro.core.placement import Policy
-from repro.core.power import PowerOut, compute_power
-from repro.scenarios.events import power_cap_at
+from repro.core.power import (
+    PowerOut,
+    compute_power,
+    job_utilization,
+    power_from_fracs,
+    use_dense_scatter,
+)
+from repro.scenarios.events import next_cap_event, power_cap_at
 from repro.scenarios.signals import eval_signal
 from repro.core.state import (
     DONE,
@@ -67,6 +73,125 @@ class StepOut(NamedTuple):
     power_cap_w: jax.Array     # effective facility cap (0 = uncapped)
     cost_usd_step: jax.Array   # electricity cost of this step
     throttle: jax.Array        # DVFS clock fraction applied [floor, 1]
+
+
+def _parse_weights(reward_weights) -> Tuple[float, float, float, float, float]:
+    if len(reward_weights) not in (4, 5):
+        raise ValueError("reward_weights must have 4 or 5 entries")
+    w_thr, w_en, w_co2, w_q = reward_weights[:4]
+    w_cost = reward_weights[4] if len(reward_weights) == 5 else 0.0
+    return w_thr, w_en, w_co2, w_q, w_cost
+
+
+def _make_tail(cfg: SimConfig, statics: Statics, reward_weights):
+    """The per-tick accounting tail shared by the full step and the
+    macro-step fast tick: grid signals at ``state.t``, the DVFS throttle,
+    job progress, energy/carbon/cost accumulation, reward and ``StepOut``.
+
+    Keeping this a single code path is what makes fast-forwarded ticks
+    bit-identical to per-tick quiet ticks — both run EXACTLY these float
+    ops in this order; they differ only in where the inputs (power chain,
+    congestion rate, queue/util counts) come from."""
+    w_thr, w_en, w_co2, w_q, w_cost = _parse_weights(reward_weights)
+    scn = statics.scenario
+
+    def tail(
+        state: SimState,
+        p: PowerOut,
+        rate: jax.Array,          # pre-throttle per-job progress rate (J,)
+        net_load: jax.Array,
+        n_done: jax.Array,        # int32 completions this tick
+        queued: jax.Array,
+        running: jax.Array,
+        util: jax.Array,
+    ) -> Tuple[SimState, StepOut]:
+        # --- grid signals at t (scenario engine)
+        carbon_g = eval_signal(scn.carbon, state.t)          # gCO2/kWh
+        price = eval_signal(scn.price, state.t)              # $/kWh
+        cap_w = power_cap_at(scn.power_cap, state.t)         # W; 0 = uncapped
+
+        # --- demand response: DVFS-throttle to the facility power cap
+        # (DCFlex-style [3]; linear dynamic-power/progress model). The cap
+        # is a traced value so scheduled events switch inside one compiled
+        # step; `capped` gates the rescale exactly off when uncapped.
+        capped = cap_w > 0.0
+        idle_total = jnp.sum(statics.idle_w * state.node_up)
+        dyn = jnp.maximum(p.it_w - idle_total, 0.0)
+        # facility ~ it * overhead; solve idle + a*dyn <= cap/overhead
+        overhead = p.facility_w / jnp.maximum(p.it_w, 1.0)
+        cap_it = cap_w / jnp.maximum(overhead, 1e-6)
+        throttle = jnp.clip(
+            (cap_it - idle_total) / jnp.maximum(dyn, 1.0),
+            cfg.throttle_floor, 1.0,
+        )
+        throttle = jnp.where(capped, throttle, 1.0)
+        r = (idle_total + throttle * dyn) / jnp.maximum(p.it_w, 1.0)
+        r = jnp.where(capped, r, 1.0)
+        p = p._replace(
+            it_w=p.it_w * r, input_w=p.input_w * r,
+            cooling_w=p.cooling_w * r, facility_w=p.facility_w * r,
+            gflops=p.gflops * throttle,
+        )
+
+        # --- progress (congestion- and throttle-aware)
+        rate = rate * throttle
+        state = state._replace(work_left=state.work_left - rate * cfg.dt)
+        dt_h = cfg.dt / 3600.0
+        e_step = p.facility_w * dt_h / 1000.0                # kWh
+        it_step = p.it_w * dt_h / 1000.0
+        loss_step = (p.input_w - p.it_w) * dt_h / 1000.0
+        cool_step = p.cooling_w * dt_h / 1000.0
+        co2_step = e_step * carbon_g / 1000.0                # kg
+        cost_step = e_step * price                           # $
+
+        state = state._replace(
+            energy_kwh=state.energy_kwh + e_step,
+            it_energy_kwh=state.it_energy_kwh + it_step,
+            loss_energy_kwh=state.loss_energy_kwh + loss_step,
+            cool_energy_kwh=state.cool_energy_kwh + cool_step,
+            carbon_kg=state.carbon_kg + co2_step,
+            elec_cost_usd=state.elec_cost_usd + cost_step,
+            flops_integral=state.flops_integral + p.gflops * cfg.dt,
+            sum_power_w=state.sum_power_w + p.facility_w,
+            n_steps=state.n_steps + 1.0,
+        )
+
+        # reward: throughput-positive, energy/carbon/queue-negative,
+        # normalized to O(1) per step
+        reward = (
+            w_thr * n_done
+            - w_en * e_step / jnp.maximum(cfg.n_nodes * 0.4 * dt_h, 1e-9) * 0.1
+            - w_co2 * co2_step / jnp.maximum(cfg.n_nodes * 0.15 * dt_h, 1e-9) * 0.1
+            - w_q * queued * 0.01
+            - w_cost * cost_step
+            / jnp.maximum(cfg.n_nodes * 0.4 * dt_h * cfg.price_mean_usd_kwh, 1e-9)
+            * 0.1
+        )
+
+        out = StepOut(
+            facility_w=p.facility_w, it_w=p.it_w, pue=p.pue, util=util,
+            queue_len=queued, running=running, completed_now=n_done,
+            energy_kwh_step=e_step, carbon_kg_step=co2_step,
+            net_load=net_load, reward=reward,
+            carbon_gkwh=carbon_g, price_usd_kwh=price, power_cap_w=cap_w,
+            cost_usd_step=cost_step, throttle=throttle,
+        )
+        return state, out
+
+    return tail
+
+
+def _counts_and_util(state: SimState, statics: Statics):
+    """(queued, running, util) telemetry scalars — constant across a quiet
+    segment, so the fast tick caches them at segment start."""
+    running = jnp.sum(state.jstate == RUNNING).astype(jnp.float32)
+    queued = jnp.sum(sched.queued_mask(state)).astype(jnp.float32)
+    up = jnp.maximum(jnp.sum(state.node_up), 1.0)
+    busy = jnp.sum(
+        (statics.capacity[0] - state.free[0]) / jnp.maximum(statics.capacity[0], 1e-6)
+        * state.node_up
+    )
+    return queued, running, busy / up
 
 
 # ---------------------------------------------------------------------------
@@ -203,10 +328,7 @@ def make_step(
         placement = "first_fit"
     if placement not in plc.PLACEMENTS:
         raise KeyError(f"unknown placement {placement}")
-    if len(reward_weights) not in (4, 5):
-        raise ValueError("reward_weights must have 4 or 5 entries")
-    w_thr, w_en, w_co2, w_q = reward_weights[:4]
-    w_cost = reward_weights[4] if len(reward_weights) == 5 else 0.0
+    tail = _make_tail(cfg, statics, reward_weights)
 
     if policy_mode:
         def place_fn(s, j):
@@ -260,92 +382,13 @@ def make_step(
 
             state = jax.lax.fori_loop(0, starts_per_step, dispatch, state)
 
-        # --- power chain (pre-throttle)
+        # --- power chain (pre-throttle) + progress rate + telemetry counts;
+        # the shared accounting tail does the rest (signals, throttle,
+        # progress, accumulation, reward)
         p: PowerOut = compute_power(cfg, state, statics, use_kernel=use_power_kernel)
-
-        # --- grid signals at t (scenario engine)
-        scn = statics.scenario
-        carbon_g = eval_signal(scn.carbon, state.t)          # gCO2/kWh
-        price = eval_signal(scn.price, state.t)              # $/kWh
-        cap_w = power_cap_at(scn.power_cap, state.t)         # W; 0 = uncapped
-
-        # --- demand response: DVFS-throttle to the facility power cap
-        # (DCFlex-style [3]; linear dynamic-power/progress model). The cap
-        # is a traced value so scheduled events switch inside one compiled
-        # step; `capped` gates the rescale exactly off when uncapped.
-        capped = cap_w > 0.0
-        idle_total = jnp.sum(statics.idle_w * state.node_up)
-        dyn = jnp.maximum(p.it_w - idle_total, 0.0)
-        # facility ~ it * overhead; solve idle + a*dyn <= cap/overhead
-        overhead = p.facility_w / jnp.maximum(p.it_w, 1.0)
-        cap_it = cap_w / jnp.maximum(overhead, 1e-6)
-        throttle = jnp.clip(
-            (cap_it - idle_total) / jnp.maximum(dyn, 1.0),
-            cfg.throttle_floor, 1.0,
-        )
-        throttle = jnp.where(capped, throttle, 1.0)
-        r = (idle_total + throttle * dyn) / jnp.maximum(p.it_w, 1.0)
-        r = jnp.where(capped, r, 1.0)
-        p = p._replace(
-            it_w=p.it_w * r, input_w=p.input_w * r,
-            cooling_w=p.cooling_w * r, facility_w=p.facility_w * r,
-            gflops=p.gflops * throttle,
-        )
-
-        # --- progress (congestion- and throttle-aware)
         rate, net_load = congestion_slowdown(cfg, state, statics)
-        rate = rate * throttle
-        state = state._replace(work_left=state.work_left - rate * cfg.dt)
-        dt_h = cfg.dt / 3600.0
-        e_step = p.facility_w * dt_h / 1000.0                # kWh
-        it_step = p.it_w * dt_h / 1000.0
-        loss_step = (p.input_w - p.it_w) * dt_h / 1000.0
-        cool_step = p.cooling_w * dt_h / 1000.0
-        co2_step = e_step * carbon_g / 1000.0                # kg
-        cost_step = e_step * price                           # $
-
-        running = jnp.sum(state.jstate == RUNNING).astype(jnp.float32)
-        queued = jnp.sum(sched.queued_mask(state)).astype(jnp.float32)
-        up = jnp.maximum(jnp.sum(state.node_up), 1.0)
-        busy = jnp.sum(
-            (statics.capacity[0] - state.free[0]) / jnp.maximum(statics.capacity[0], 1e-6)
-            * state.node_up
-        )
-        util = busy / up
-
-        state = state._replace(
-            energy_kwh=state.energy_kwh + e_step,
-            it_energy_kwh=state.it_energy_kwh + it_step,
-            loss_energy_kwh=state.loss_energy_kwh + loss_step,
-            cool_energy_kwh=state.cool_energy_kwh + cool_step,
-            carbon_kg=state.carbon_kg + co2_step,
-            elec_cost_usd=state.elec_cost_usd + cost_step,
-            flops_integral=state.flops_integral + p.gflops * cfg.dt,
-            sum_power_w=state.sum_power_w + p.facility_w,
-            n_steps=state.n_steps + 1.0,
-        )
-
-        # reward: throughput-positive, energy/carbon/queue-negative,
-        # normalized to O(1) per step
-        reward = (
-            w_thr * n_done
-            - w_en * e_step / jnp.maximum(cfg.n_nodes * 0.4 * dt_h, 1e-9) * 0.1
-            - w_co2 * co2_step / jnp.maximum(cfg.n_nodes * 0.15 * dt_h, 1e-9) * 0.1
-            - w_q * queued * 0.01
-            - w_cost * cost_step
-            / jnp.maximum(cfg.n_nodes * 0.4 * dt_h * cfg.price_mean_usd_kwh, 1e-9)
-            * 0.1
-        )
-
-        out = StepOut(
-            facility_w=p.facility_w, it_w=p.it_w, pue=p.pue, util=util,
-            queue_len=queued, running=running, completed_now=n_done,
-            energy_kwh_step=e_step, carbon_kg_step=co2_step,
-            net_load=net_load, reward=reward,
-            carbon_gkwh=carbon_g, price_usd_kwh=price, power_cap_w=cap_w,
-            cost_usd_step=cost_step, throttle=throttle,
-        )
-        return state, out
+        queued, running, util = _counts_and_util(state, statics)
+        return tail(state, p, rate, net_load, n_done, queued, running, util)
 
     return step
 
@@ -379,6 +422,11 @@ class TelemetrySummary(NamedTuple):
     max_facility_w: jax.Array
     max_queue_len: jax.Array
     n_steps: jax.Array
+    # macro-stepping skip accounting: how many ticks ran the full event
+    # step (dispatch/completions/failures machinery) vs. the fast-forward
+    # path. Per-tick runs have macro_steps == n_steps (skip ratio 1); a
+    # macro run's speedup potential is n_steps / macro_steps.
+    macro_steps: jax.Array
 
 
 def _telem_zero() -> TelemetrySummary:
@@ -386,7 +434,8 @@ def _telem_zero() -> TelemetrySummary:
     return TelemetrySummary(*([z] * len(TelemetrySummary._fields)))
 
 
-def _telem_update(acc: TelemetrySummary, out: StepOut) -> TelemetrySummary:
+def _telem_update(acc: TelemetrySummary, out: StepOut,
+                  macro_inc: jax.Array | float = 1.0) -> TelemetrySummary:
     # mean_* fields hold running sums until _telem_finalize divides by n
     return TelemetrySummary(
         completed=acc.completed + out.completed_now,
@@ -407,6 +456,7 @@ def _telem_update(acc: TelemetrySummary, out: StepOut) -> TelemetrySummary:
         max_facility_w=jnp.maximum(acc.max_facility_w, out.facility_w),
         max_queue_len=jnp.maximum(acc.max_queue_len, out.queue_len),
         n_steps=acc.n_steps + 1.0,
+        macro_steps=acc.macro_steps + macro_inc,
     )
 
 
@@ -418,6 +468,322 @@ def _telem_finalize(acc: TelemetrySummary) -> TelemetrySummary:
     })
 
 
+# ---------------------------------------------------------------------------
+# Macro-stepping: fast-forward quiet ticks with exact segment accounting.
+#
+# A tick is QUIET when advancing it changes no machine state: no queued job
+# becomes newly visible/eligible to selection, no running job completes, no
+# node fails or returns from repair, no cap-schedule breakpoint is crossed,
+# and the last dispatch attempt proved the current queue unservable. Across
+# a quiet segment the running set, placement, free pool and congestion rate
+# are all constant — only time, per-job remaining work, the trace-quanta
+# utilization indices and the continuous grid signals move. The fast tick
+# therefore re-runs ONLY the shared accounting tail (exact signal-grid
+# integration through the nonlinear COP/throttle consumers, which is why a
+# closed-form segment integral cannot replace it) plus a cheap utilization
+# -> power refresh, and skips the dispatch wavefront, completion sweep and
+# telemetry-count machinery entirely.
+
+_BIG_T = jnp.float32(jnp.inf)
+
+# SimState leaves a fast tick may change; everything else provably keeps
+# its segment-start value, so the commit-select only touches these.
+_FAST_FIELDS = (
+    "t", "work_left", "energy_kwh", "it_energy_kwh", "loss_energy_kwh",
+    "cool_energy_kwh", "carbon_kg", "elec_cost_usd", "flops_integral",
+    "sum_power_w", "n_steps",
+)
+
+
+def _horizon_parts(cfg: SimConfig, state: SimState, statics: Statics,
+                   rate: jax.Array, dispatch_on: bool, replay_gated: bool,
+                   eligibility_vis: bool, max_ticks: int):
+    """(next_event_t, visible_now, k_time, k_complete): the earliest
+    deterministic breakpoint strictly after ``state.t``, whether a
+    dispatch-visible queued job exists right now, and the conservative
+    quiet-tick counts from time-events and from completions."""
+    t = state.t
+    q = state.jstate == QUEUED
+    # arrivals: the queued count (telemetry + reward) changes when a
+    # submit time is crossed; selection visibility changes with it
+    next_t = jnp.min(jnp.where(q & (state.submit_t > t),
+                               state.submit_t, _BIG_T))
+    visible_now = jnp.bool_(False)
+    if dispatch_on:
+        vis_t = state.submit_t
+        if eligibility_vis:
+            # eager replay: a queued job is only dispatchable once BOTH
+            # its submit and its recorded start (priority) are crossed
+            vis_t = jnp.maximum(state.submit_t, state.priority)
+        visible_now = jnp.any(q & (vis_t <= t))
+    if dispatch_on and replay_gated:
+        # replay eligibility: a queued job becomes dispatchable when its
+        # recorded start (carried in `priority`) is crossed
+        next_t = jnp.minimum(next_t, jnp.min(jnp.where(
+            q & (state.priority > t), state.priority, _BIG_T)))
+    # node repairs return capacity at recorded times
+    next_t = jnp.minimum(next_t, jnp.min(jnp.where(
+        state.node_up < 0.5, state.repair_t, _BIG_T)))
+    # demand-response cap windows open/close at schedule breakpoints
+    next_t = jnp.minimum(next_t, next_cap_event(statics.scenario.power_cap, t))
+
+    kf = jnp.float32(max_ticks)
+    k_time = jnp.where(jnp.isfinite(next_t),
+                       jnp.floor((next_t - t) / cfg.dt - 1e-6), kf)
+    # completions: per-tick progress never exceeds rate * dt (throttle <=
+    # 1), so floor(work/(rate*dt)) - 1 ticks can never cross zero — the -1
+    # margin also absorbs float drift of the per-tick subtraction chain
+    run_m = state.jstate == RUNNING
+    ticks_c = jnp.where(
+        run_m,
+        jnp.floor(state.work_left / (jnp.maximum(rate, 1e-9) * cfg.dt)) - 1.0,
+        kf,
+    )
+    k_complete = jnp.min(ticks_c)
+    return (next_t, visible_now,
+            jnp.clip(k_time, 0.0, kf).astype(jnp.int32),
+            jnp.clip(k_complete, 0.0, kf).astype(jnp.int32))
+
+
+def quiet_horizon(
+    cfg: SimConfig,
+    statics: Statics,
+    state: SimState,
+    scheduler: str | Policy = "fcfs",
+    *,
+    max_ticks: int = 4096,
+    assume_undispatchable: bool | jax.Array = False,
+) -> jax.Array:
+    """Number of ticks after ``state.t`` guaranteed quiet (int32 >= 0).
+
+    The horizon is the min over the next arrival (submit crossing), next
+    replay-eligibility crossing, next completion (conservative: assumes
+    full-rate progress, minus one tick of float margin), next node repair,
+    and next cap-schedule breakpoint, clamped to ``max_ticks``. Stochastic
+    failures (``cfg.node_mtbf_hours > 0``) cannot be predicted — the
+    macro engine replays the per-tick Bernoulli draws during fast-forward
+    and stops when one fires, keeping the PRNG stream bit-identical.
+
+    ``assume_undispatchable``: queued-but-visible jobs normally force a
+    zero horizon (selection might start one any tick). When the caller
+    has just run a full dispatch tick that started NOTHING, the visible
+    queue is proven unservable — every selection policy's pick is
+    constant between events for a frozen machine state — and fast-forward
+    may proceed; pass True (the macro engine does) to encode that proof.
+    """
+    policy_mode = isinstance(scheduler, Policy)
+    dispatch_on = policy_mode or scheduler != "none"
+    replay_gated = policy_mode or scheduler == "replay"
+    eligibility_vis = (not policy_mode) and scheduler == "replay"
+    rate, _ = congestion_slowdown(cfg, state, statics)
+    next_t, visible_now, k_time, k_complete = _horizon_parts(
+        cfg, state, statics, rate, dispatch_on, replay_gated,
+        eligibility_vis, max_ticks)
+    blocked = visible_now & ~jnp.asarray(assume_undispatchable)
+    return jnp.where(blocked, 0, jnp.minimum(k_time, k_complete))
+
+
+def make_macro_step(
+    cfg: SimConfig,
+    statics: Statics,
+    scheduler: str | Policy = "fcfs",
+    *,
+    placement: str | None = None,
+    starts_per_step: int = 2,
+    reward_weights: Tuple[float, ...] = (1.0, 1.0, 1.0, 0.05),
+    use_power_kernel: bool = False,
+    horizon_cap: int = 4096,
+    chunk_ticks: int = 16,
+    update=None,
+):
+    """Returns ``macro_step(state, acc, max_ticks) -> (state, acc, ticks)``:
+    ONE full event tick (identical to ``make_step``'s, with action -1)
+    followed by a fused fast-forward through the quiet segment, never past
+    ``max_ticks`` total ticks (the caller's episode/telemetry-window/agent
+    -decision boundary).
+
+    Exactness: fast ticks advance time sequentially and re-run the SAME
+    accounting tail as the full step, so job/queue state is bit-identical
+    to per-tick stepping, failures replay the identical Bernoulli stream,
+    and accumulators are bit-identical on configs where the power path is
+    shared (the dense-scatter budget, i.e. every test-sized config). On
+    larger configs the fast tick refreshes per-node loads through a
+    per-segment job->node count matrix — one ``chunk_ticks``-wide gemm
+    instead of a J*K scatter per tick; the different summation order
+    leaves energy/cost/carbon within float-accumulation tolerance of the
+    per-tick path (job/queue
+    state stays exact whenever the facility is uncapped, since then
+    throttle == 1.0 exactly and progress never consumes power terms).
+
+    ``update(acc, out, macro_inc)`` folds each tick's ``StepOut`` into the
+    caller's accumulator (default: ``TelemetrySummary`` update; the RL env
+    passes its info-dict reducer). ``macro_inc`` is 1.0 for the event tick
+    and 0.0 for fast ticks — the skip-ratio telemetry.
+    """
+    step = make_step(cfg, statics, scheduler, placement=placement,
+                     starts_per_step=starts_per_step,
+                     reward_weights=reward_weights,
+                     use_power_kernel=use_power_kernel)
+    tail = _make_tail(cfg, statics, reward_weights)
+    policy_mode = isinstance(scheduler, Policy)
+    dispatch_on = policy_mode or scheduler != "none"
+    replay_gated = policy_mode or scheduler == "replay"
+    eligibility_vis = (not policy_mode) and scheduler == "replay"
+    mtbf_on = cfg.node_mtbf_hours > 0
+    N = cfg.n_nodes
+    C = max(int(chunk_ticks), 1)
+    # shared power path (bit-identical to the full step) whenever the
+    # per-tick scatter is already the dense contraction; the chunked
+    # count-matrix gemm otherwise (see docstring)
+    shared_power = use_dense_scatter(cfg.max_jobs * cfg.max_nodes_per_job, N)
+    if update is None:
+        update = _telem_update
+
+    def power_chunk(s: SimState, cnt):
+        """(ts, PowerOut-with-leading-C-axis) for the next C ticks under a
+        frozen machine state: utilization only drifts through the
+        trace-quanta index, so per-node loads for the whole chunk are ONE
+        gemm against the per-segment job->node count matrix instead of C
+        scatters — the arithmetic-intensity trick that makes fast ticks
+        ~O(scalar). The chain itself is the shared ``power_from_fracs``
+        (vmapped over the chunk), so the rectifier/COP model has a single
+        source of truth."""
+        ts = s.t + cfg.dt * jnp.arange(1, C + 1, dtype=jnp.float32)
+        cpu_u, gpu_u = jax.vmap(
+            lambda t: job_utilization(cfg, s._replace(t=t), statics)
+        )(ts)                                                      # (C, J)
+        loads = jnp.matmul(
+            jnp.concatenate([cpu_u * s.req[0][None, :],
+                             gpu_u * s.req[1][None, :]]),
+            cnt, precision=jax.lax.Precision.HIGHEST)              # (2C, N)
+        cpu_frac = jnp.clip(
+            loads[:C] / jnp.maximum(statics.capacity[0], 1e-6), 0, 1)
+        gpu_frac = jnp.clip(
+            loads[C:] / jnp.maximum(statics.capacity[1], 1e-6), 0, 1)
+        p = jax.vmap(
+            lambda t, cf, gf: power_from_fracs(
+                cfg, s._replace(t=t), statics, cf, gf)
+        )(ts, cpu_frac, gpu_frac)
+        return ts, p
+
+    def macro_step(state: SimState, acc, max_ticks):
+        was_queued = state.jstate == QUEUED
+        state, out = step(state, jnp.int32(-1))
+        acc = update(acc, out, 1.0)
+        started = jnp.any(was_queued & (state.jstate == RUNNING))
+
+        # --- segment constants (all provably frozen across quiet ticks).
+        # NB net_load carries a cross-job reduction: XLA may fuse it
+        # differently here than in the per-tick program, so telemetry
+        # means can skew an ulp vs per-tick runs (the documented
+        # float-accumulation tolerance); job/queue state never consumes it
+        rate, net_load = congestion_slowdown(cfg, state, statics)
+        next_event_t, visible_now, k_time, _ = _horizon_parts(
+            cfg, state, statics, rate, dispatch_on, replay_gated,
+            eligibility_vis, horizon_cap)
+        # dispatch gate: if the full tick started something AND jobs are
+        # still visible, the leftovers may now be servable — keep per-tick
+        # stepping. A start that DRAINED the queue, or a no-start with a
+        # visible queue (proven unservable: selection picks are
+        # t-independent for a frozen machine state, EASY's backfill window
+        # only shrinks, replay-eligibility crossings are event
+        # boundaries), both allow fast-forward. Completions are peeked per
+        # tick (authoritative), so the budget only carries the
+        # deterministic time-event horizon.
+        budget = jnp.where(started & visible_now, 0,
+                           jnp.minimum(k_time, max_ticks - 1))
+        queued, running, util = _counts_and_util(state, statics)
+
+        def peek_stop(s, t_next):
+            # authoritative, side-effect free: an event tick is NOT
+            # committed here; the next full step replays it (including
+            # the identical failure Bernoulli draw — same key split)
+            stop = jnp.any((s.jstate == RUNNING) & (s.work_left <= 0.0))
+            stop = stop | (t_next >= next_event_t)
+            if not mtbf_on:
+                return stop, s.key
+            key, k1 = jax.random.split(s.key)
+            p_fail = cfg.dt / (cfg.node_mtbf_hours * 3600.0)
+            fails = jax.random.bernoulli(k1, p_fail, (N,)) \
+                & (s.node_up > 0.5)
+            return stop | jnp.any(fails), key
+
+        def commit(s, a, i, stop, t_next, key, p: PowerOut):
+            ns = s._replace(t=t_next, key=key) if mtbf_on \
+                else s._replace(t=t_next)
+            ns, o = tail(ns, p, rate, net_load, jnp.int32(0),
+                         queued, running, util)
+            na = update(a, o, 0.0)
+            fields = _FAST_FIELDS + (("key",) if mtbf_on else ())
+            s = s._replace(**{
+                f: _where_leaf(stop, getattr(s, f), getattr(ns, f))
+                for f in fields
+            })
+            a = jax.tree.map(lambda old, new: jnp.where(stop, old, new),
+                             a, na)
+            return s, a, i + jnp.where(stop, 0, 1)
+
+        if shared_power:
+            # small configs: per-tick compute_power IS the full step's
+            # dense-contraction path — bit-identical accumulators
+            def body(c):
+                s, a, i, _ = c
+                t_next = s.t + cfg.dt
+                stop, key = peek_stop(s, t_next)
+                p = compute_power(cfg, s._replace(t=t_next), statics,
+                                  use_kernel=use_power_kernel)
+                s, a, i = commit(s, a, i, stop, t_next, key, p)
+                return (s, a, i, ~stop)
+
+            state, acc, took, _ = jax.lax.while_loop(
+                lambda c: c[3] & (c[2] < budget), body,
+                (state, acc, jnp.int32(0), budget > 0))
+            return state, acc, 1 + took
+
+        # large configs: per-segment job->node count matrix + chunked
+        # power precompute; the inner tick body is then O(scalar) + the
+        # O(J) progress/peek ops
+        J, K = state.placement.shape
+        valid = state.placement >= 0
+        safe = jnp.where(valid, state.placement, 0)
+        cnt = jnp.zeros((J, N), jnp.float32).at[
+            jnp.arange(J)[:, None], safe].add(valid.astype(jnp.float32))
+
+        def inner_body(c):
+            s, a, i, j, _, chk = c
+            ts, pc = chk
+            t_next = ts[j]
+            stop, key = peek_stop(s, t_next)
+            p = jax.tree.map(lambda x: x[j], pc)
+            s, a, i = commit(s, a, i, stop, t_next, key, p)
+            return (s, a, i, j + 1, ~stop, chk)
+
+        def outer_body(c):
+            s, a, i, go = c
+            chk = power_chunk(s, cnt)
+            s, a, i, _, go, _ = jax.lax.while_loop(
+                lambda c: c[4] & (c[2] < budget) & (c[3] < C), inner_body,
+                (s, a, i, jnp.int32(0), go, chk))
+            return (s, a, i, go)
+
+        state, acc, took, _ = jax.lax.while_loop(
+            lambda c: c[3] & (c[2] < budget), outer_body,
+            (state, acc, jnp.int32(0), budget > 0))
+        return state, acc, 1 + took
+
+    return macro_step
+
+
+def _where_leaf(pred, old, new):
+    """jnp.where that also handles typed PRNG key arrays."""
+    if jnp.issubdtype(jnp.result_type(old), jax.dtypes.prng_key):
+        return jax.random.wrap_key_data(
+            jnp.where(pred, jax.random.key_data(old),
+                      jax.random.key_data(new)),
+            impl=jax.random.key_impl(old))
+    return jnp.where(pred, old, new)
+
+
 def run_episode(
     cfg: SimConfig,
     statics: Statics,
@@ -427,6 +793,7 @@ def run_episode(
     *,
     telemetry_every: int = 1,
     summary_only: bool = False,
+    macro: bool = False,
     **kw,
 ) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Scan `n_steps` of the twin under a non-RL policy.
@@ -441,7 +808,48 @@ def run_episode(
         (stacked, length ``n_steps // k``) — O(n_steps/k) memory;
       - ``summary_only=True``: a single episode-wide ``TelemetrySummary``
         accumulated in the scan carry — O(1) memory in ``n_steps``.
+
+    ``macro=True`` drives the episode with ``make_macro_step``: quiet
+    ticks (no arrival/completion/dispatch/failure/cap breakpoint) are
+    fast-forwarded with exact segment accounting — the big win for
+    replay-shaped workloads (see docs/performance.md "Macro-stepping").
+    Ticks can no longer be stacked per step, so telemetry is episode-wide
+    (``summary_only`` is implied) or windowed via ``telemetry_every``;
+    window edges clamp the fast-forward horizon, so windowed results stay
+    tick-aligned with the per-tick path.
     """
+    if macro:
+        mstep = make_macro_step(cfg, statics, scheduler, **kw)
+        if summary_only and telemetry_every > 1:
+            raise ValueError(
+                "summary_only=True is episode-wide; it conflicts with "
+                f"telemetry_every={telemetry_every} (pick one)"
+            )
+
+        def run_window(state, n):
+            def wcond(c):
+                return c[2] < n
+
+            def wbody(c):
+                s, a, ticks = c
+                s, a, took = mstep(s, a, n - ticks)
+                return (s, a, ticks + took)
+
+            s, a, _ = jax.lax.while_loop(
+                wcond, wbody, (state, _telem_zero(), jnp.int32(0)))
+            return s, _telem_finalize(a)
+
+        if telemetry_every <= 1:
+            return run_window(state, n_steps)
+        if n_steps % telemetry_every:
+            raise ValueError(
+                f"n_steps={n_steps} not divisible by "
+                f"telemetry_every={telemetry_every}"
+            )
+        return jax.lax.scan(
+            lambda s, _: run_window(s, telemetry_every), state, None,
+            length=n_steps // telemetry_every)
+
     step = make_step(cfg, statics, scheduler, **kw)
 
     def body(s, _):
@@ -481,12 +889,13 @@ def run_episode(
                         length=n_steps // telemetry_every)
 
 
-def summary(state: SimState) -> dict:
+def summary(state: SimState,
+            telemetry: TelemetrySummary | None = None) -> dict:
     # one device->host transfer (the per-field float() path issued ~16
     # separate D2H copies; fleet_summary already batches the same way)
     s = jax.device_get(state)
     n = max(float(s.n_completed), 1.0)
-    return {
+    out = {
         "t_end_s": float(s.t),
         "completed": float(s.n_completed),
         "killed_by_failures": float(s.n_killed),
@@ -507,3 +916,15 @@ def summary(state: SimState) -> dict:
             float(s.energy_kwh) / max(float(s.it_energy_kwh), 1e-9)
         ),
     }
+    if telemetry is not None:
+        # macro-stepping skip accounting (satellite of the macro engine):
+        # how much of the episode the engine fast-forwarded. Windowed
+        # telemetry (telemetry_every=k) arrives with a leading window
+        # axis — summing it recovers the episode totals.
+        tl = jax.device_get(telemetry)
+        ticks = float(np.sum(tl.n_steps))
+        full = float(np.sum(tl.macro_steps))
+        out["ticks_simulated"] = ticks
+        out["macro_steps_taken"] = full
+        out["macro_skip_ratio"] = ticks / max(full, 1.0)
+    return out

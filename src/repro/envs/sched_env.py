@@ -24,6 +24,12 @@ Lightweight-state design (the RL-rollout hot path):
   selection/placement stages (``make_step(..., "none")``) — bit-equivalent
   to the old always-dispatch scan whose non-zero sub-steps forced a no-op
   through the full candidate-ranking + placement pipeline.
+- With ``macro=True`` (default) the idle sub-steps are ONE macro advance
+  (``core.sim.make_macro_step``) clamped to the agent-decision boundary:
+  quiet ticks between events fast-forward with exact segment accounting
+  instead of running the completion/power machinery per tick (the
+  scanned per-tick path is the degenerate every-tick-is-an-event case,
+  kept under ``macro=False`` as the equivalence oracle).
 - ``observe`` is fused: the per-node-type Python loop is a one-hot
   reduction, invariants (nameplate, capacity maxima, type one-hots,
   placement one-hot) are precomputed at construction, and candidate
@@ -42,7 +48,7 @@ import numpy as np
 from repro.configs.sim import SimConfig
 from repro.core import placement as plc
 from repro.core import schedulers as sched
-from repro.core.sim import make_step
+from repro.core.sim import make_macro_step, make_step
 from repro.data.bank import stack_workloads
 from repro.scenarios import Scenario, eval_signal, power_cap_at
 from repro.core.state import (
@@ -92,6 +98,7 @@ class SchedEnv:
         reward_weights=(1.0, 1.0, 1.0, 0.05),
         scenario: Scenario | None = None,
         placement: str = "first_fit",
+        macro: bool = True,
     ):
         self.cfg = cfg
         self.reward_weights = tuple(reward_weights)
@@ -124,6 +131,13 @@ class SchedEnv:
                                   reward_weights=reward_weights)
         self._step_idle = make_step(cfg, self._statics, "none",
                                     reward_weights=reward_weights)
+        # macro idle advance: ONE event-driven fast-forward between agent
+        # decisions instead of N-1 scanned per-tick idle sub-steps
+        self.macro = macro
+        self._macro_idle = make_macro_step(
+            cfg, self._statics, "none", reward_weights=reward_weights,
+            update=lambda acc, out, _inc: self._acc_of(acc, out),
+        ) if macro else None
 
         # observation invariants (constant per env instance)
         st = self._statics
@@ -169,18 +183,21 @@ class SchedEnv:
         st = EnvState(sim=sim, step_count=jnp.int32(0))
         return st, self.observe(st)
 
+    @staticmethod
+    def _acc_of(acc, out):
+        return {
+            "reward": acc["reward"] + out.reward,
+            "completed": acc["completed"] + out.completed_now,
+            "energy_kwh": acc["energy_kwh"] + out.energy_kwh_step,
+            "carbon_kg": acc["carbon_kg"] + out.carbon_kg_step,
+            "facility_w": out.facility_w,
+            "queue_len": out.queue_len,
+        }
+
     def step(
         self, st: EnvState, action: jax.Array
     ) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
-        def acc_of(acc, out):
-            return {
-                "reward": acc["reward"] + out.reward,
-                "completed": acc["completed"] + out.completed_now,
-                "energy_kwh": acc["energy_kwh"] + out.energy_kwh_step,
-                "carbon_kg": acc["carbon_kg"] + out.carbon_kg_step,
-                "facility_w": out.facility_w,
-                "queue_len": out.queue_len,
-            }
+        acc_of = self._acc_of
 
         # sub-step 0 dispatches the agent's action; the remaining
         # sub-steps advance the twin with the dispatch stage compiled OUT
@@ -192,14 +209,26 @@ class SchedEnv:
         acc = acc_of({"reward": z, "completed": z, "energy_kwh": z,
                       "carbon_kg": z, "facility_w": z, "queue_len": z}, out)
 
-        def sub(carry, _):
-            s, a = carry
-            s, o = self._step_idle(s, jnp.int32(-1))
-            return (s, acc_of(a, o)), None
+        n_idle = self.sim_steps_per_action - 1
+        if self.macro and n_idle > 0:
+            # one macro advance clamped to the agent-decision boundary:
+            # full steps only on event ticks, quiet ticks fast-forwarded
+            def idle(c):
+                s, a, ticks = c
+                s, a, took = self._macro_idle(s, a, n_idle - ticks)
+                return (s, a, ticks + took)
 
-        (sim, acc), _ = jax.lax.scan(
-            sub, (sim, acc), None, length=self.sim_steps_per_action - 1,
-        )
+            sim, acc, _ = jax.lax.while_loop(
+                lambda c: c[2] < n_idle, idle, (sim, acc, jnp.int32(0)))
+        else:
+            def sub(carry, _):
+                s, a = carry
+                s, o = self._step_idle(s, jnp.int32(-1))
+                return (s, acc_of(a, o)), None
+
+            (sim, acc), _ = jax.lax.scan(
+                sub, (sim, acc), None, length=n_idle,
+            )
         reward = acc["reward"]
         st = EnvState(sim=sim, step_count=st.step_count + 1)
         done = st.step_count >= self.episode_steps

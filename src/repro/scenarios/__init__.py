@@ -1,7 +1,13 @@
 """Grid-signal scenario engine: pluggable, jit-able time-varying carbon /
 price / weather signals and demand-response power-cap events for the twin."""
 
-from repro.scenarios.events import CapSchedule, cap_events, no_cap, power_cap_at
+from repro.scenarios.events import (
+    CapSchedule,
+    cap_events,
+    next_cap_event,
+    no_cap,
+    power_cap_at,
+)
 from repro.scenarios.scenario import (
     SCENARIOS,
     Scenario,
@@ -19,6 +25,8 @@ from repro.scenarios.signals import (
     constant,
     eval_signal,
     from_trace,
+    integrate_signal,
+    mean_signal,
     sinusoid,
     to_trace,
 )

@@ -62,6 +62,18 @@ def cap_events(
                        cap_w=jnp.asarray(c), base_cap_w=jnp.float32(base_cap_w))
 
 
+def next_cap_event(sched: CapSchedule, t: jax.Array) -> jax.Array:
+    """Earliest cap-schedule breakpoint strictly after ``t`` (``inf`` when
+    none): an event window opening or closing. The standing base cap has
+    no breakpoints and padding slots (``cap_w == 0``) never produce one.
+    The macro-stepping engine treats these as segment boundaries so a
+    fast-forwarded segment never straddles a cap change."""
+    edges = jnp.concatenate([sched.start_t, sched.end_t])
+    live = jnp.concatenate([sched.cap_w > 0.0, sched.cap_w > 0.0])
+    edges = jnp.where(live & (edges > t), edges, _INF)
+    return jnp.min(edges)
+
+
 def power_cap_at(sched: CapSchedule, t: jax.Array) -> jax.Array:
     """Effective facility cap [W] at time t; 0.0 when uncapped."""
     active = (t >= sched.start_t) & (t < sched.end_t) & (sched.cap_w > 0.0)

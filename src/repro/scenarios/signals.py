@@ -107,6 +107,75 @@ def eval_signal(sig: Signal, t: jax.Array) -> jax.Array:
     return jnp.where(sig.use_trace > 0.5, trace, para)
 
 
+def _sin_antideriv(amp: jax.Array, w: jax.Array, phase: jax.Array,
+                   t: jax.Array) -> jax.Array:
+    """Antiderivative of ``amp * sin(w t + phase)`` at ``t``."""
+    return -amp * jnp.cos(w * t + phase) / jnp.maximum(w, 1e-12)
+
+
+def _trace_antideriv(sig: Signal, t: jax.Array) -> jax.Array:
+    """Antiderivative (w.r.t. ``sig.t0``) of the edge-held piecewise-linear
+    trace interpolant at ``t`` — exact via a prefix sum of trapezoids."""
+    v = sig.values
+    T = v.shape[0]
+    dt = jnp.maximum(sig.dt, 1e-6)
+    # cumulative trapezoid areas up to each sample (in units of dt)
+    csum = jnp.concatenate(
+        [jnp.zeros((1,), v.dtype), jnp.cumsum(0.5 * (v[:-1] + v[1:]))])
+    u = (t - sig.t0) / dt
+    uc = jnp.clip(u, 0.0, jnp.float32(T - 1))
+    i0 = jnp.clip(jnp.floor(uc).astype(jnp.int32), 0, T - 2)
+    frac = uc - i0.astype(jnp.float32)
+    seg = v[i0] * frac + 0.5 * (v[i0 + 1] - v[i0]) * frac * frac
+    inside = dt * (csum[i0] + seg)
+    # edge-hold tails: v[0] before the sampled range, v[-1] after it
+    before = v[0] * jnp.minimum(t - sig.t0, 0.0)
+    after = v[-1] * jnp.maximum(u - jnp.float32(T - 1), 0.0) * dt
+    return inside + before + after
+
+
+def integrate_signal(sig: Signal, t0: jax.Array, t1: jax.Array) -> jax.Array:
+    """Exact ``∫_{t0}^{t1} sig(t) dt`` — segment-integrated accounting.
+
+    Closed form for the parametric family (sinusoid + harmonic noise are
+    sums of sines), and prefix-sum trapezoids for the trace family (the
+    interpolant is piecewise linear with edge-hold, so its integral is
+    exact up to float rounding). Pure & jit/vmap-safe; ``t1 < t0`` yields
+    the negated integral, matching the Riemann convention.
+
+    This is the analysis-side companion of the macro-stepping engine
+    (``core.sim.make_macro_step``): the engine itself evaluates signals on
+    the tick grid so its accounting is bit-comparable to the per-tick
+    path even through the *nonlinear* COP/throttle consumers, while this
+    integral provides the continuous reference for validation and for
+    window statistics (e.g. mean carbon over a replay hour).
+    """
+    t0 = jnp.asarray(t0, jnp.float32)
+    t1 = jnp.asarray(t1, jnp.float32)
+    w = 2.0 * jnp.pi / jnp.maximum(sig.period_s, 1e-6)
+
+    def para_F(t):
+        base = sig.mean * t + _sin_antideriv(sig.amp, w, sig.phase, t)
+        h = jnp.asarray(_NOISE_HARMONICS, jnp.float32)
+        wh = w * h
+        ph = (sig.noise_seed
+              * (1.0 + jnp.arange(h.shape[0], dtype=jnp.float32)) * 2.39996)
+        scale = sig.noise_amp / jnp.sqrt(jnp.float32(len(_NOISE_HARMONICS)))
+        return base + jnp.sum(_sin_antideriv(scale, wh, ph, t))
+
+    para = para_F(t1) - para_F(t0)
+    trace = _trace_antideriv(sig, t1) - _trace_antideriv(sig, t0)
+    return jnp.where(sig.use_trace > 0.5, trace, para)
+
+
+def mean_signal(sig: Signal, t0: jax.Array, t1: jax.Array) -> jax.Array:
+    """Exact time-average of ``sig`` over ``[t0, t1]`` (the point value
+    for a degenerate zero-width window)."""
+    span = jnp.asarray(t1, jnp.float32) - jnp.asarray(t0, jnp.float32)
+    avg = integrate_signal(sig, t0, t1) / jnp.where(span == 0.0, 1.0, span)
+    return jnp.where(span == 0.0, eval_signal(sig, t0), avg)
+
+
 def to_trace(sig: Signal, horizon_s: float, dt: float) -> Signal:
     """Materialize any signal onto a uniform grid (useful for stacking
     scenarios whose parametric/trace families differ in cost, or for

@@ -233,6 +233,54 @@ def test_synth_grid_trace_kinds():
         assert np.isfinite(v).all() and (v >= lo).all() and (v <= hi).all()
 
 
+# ------------------------------------------------------- signal integrals
+def test_integrate_signal_sinusoid_closed_form():
+    from repro.scenarios import integrate_signal, mean_signal
+
+    sig = sinusoid(380.0, 120.0, 86_400.0, phase=1.1, noise_amp=25.0,
+                   noise_seed=3.0)
+    t0, t1 = 1234.5, 40_000.0
+    ts = np.linspace(t0, t1, 200_001)
+    vals = jax.vmap(lambda t: eval_signal(sig, t))(jnp.asarray(ts, jnp.float32))
+    numeric = np.trapezoid(np.asarray(vals, np.float64), ts)
+    analytic = float(integrate_signal(sig, t0, t1))
+    np.testing.assert_allclose(analytic, numeric, rtol=2e-6)
+    np.testing.assert_allclose(float(mean_signal(sig, t0, t1)),
+                               numeric / (t1 - t0), rtol=2e-6)
+    # orientation: reversed bounds negate
+    assert float(integrate_signal(sig, t1, t0)) == -analytic
+
+
+def test_integrate_signal_trace_prefix_sums_exact():
+    from repro.scenarios import integrate_signal
+
+    v = np.random.default_rng(0).uniform(100, 500, 37)
+    sig = from_trace(v, dt=300.0, t0=500.0)
+    # spans both edge-hold tails AND the interior
+    t0, t1 = -100.0, 500.0 + 36 * 300.0 + 700.0
+    ts = np.linspace(t0, t1, 400_001)
+    vals = jax.vmap(lambda t: eval_signal(sig, t))(jnp.asarray(ts, jnp.float32))
+    numeric = np.trapezoid(np.asarray(vals, np.float64), ts)
+    np.testing.assert_allclose(float(integrate_signal(sig, t0, t1)),
+                               numeric, rtol=2e-6)
+    # interior-only: piecewise-linear integral is exact, not approximate —
+    # compare against the dense trapezoid of the raw samples
+    full = float(integrate_signal(sig, 500.0, 500.0 + 36 * 300.0))
+    np.testing.assert_allclose(full, np.trapezoid(v) * 300.0, rtol=1e-6)
+
+
+def test_next_cap_event_breakpoints():
+    from repro.scenarios import next_cap_event
+
+    sched = cap_events([100.0, 400.0], [200.0, 500.0], [5e3, 6e3],
+                       base_cap_w=7e3, n_events=4)   # padded slots inert
+    assert float(next_cap_event(sched, 0.0)) == 100.0
+    assert float(next_cap_event(sched, 100.0)) == 200.0
+    assert float(next_cap_event(sched, 250.0)) == 400.0
+    assert float(next_cap_event(sched, 450.0)) == 500.0
+    assert not np.isfinite(float(next_cap_event(sched, 500.0)))
+
+
 # ------------------------------------------------------------------- envs
 def test_sched_env_exposes_grid_signals_in_obs():
     from repro.envs import SchedEnv
