@@ -300,6 +300,89 @@ def bench_macro_smoke() -> List[Row]:
     ]
 
 
+def bench_thermal() -> List[Row]:
+    """Thermal-state twin (docs/thermal.md): the TX-GAIA replay hour with
+    the rack RC cooling loop in the scan carry, per-tick vs ``macro=True``
+    (thermal trip crossings join the breakpoint set). Comparable against
+    the thermal-off ``replay_tx_gaia_1h[_macro]`` rows in the same
+    artifact: the delta IS the cost of carrying thermal state."""
+    from repro.configs.sim import tx_gaia
+    from repro.core import build_statics, init_state, load_jobs, run_episode, summary
+    from repro.data import synth_workload
+
+    cfg = tx_gaia(max_jobs=256, max_nodes_per_job=16, thermal_enabled=True)
+    jobs, bank = synth_workload(cfg, 200, 3600.0, seed=0)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    n_steps = 3600
+
+    run_p = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "replay",
+                                          summary_only=True))
+    run_m = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "replay",
+                                          macro=True))
+    dt_p = _timeit(run_p, state, n=2)
+    dt_m = _timeit(run_m, state, n=2)
+    fs_p, tel_p = run_p(state)
+    fs_m, tel_m = run_m(state)
+    sp, sm = summary(fs_p, tel_p), summary(fs_m, tel_m)
+    match = (sm["completed"] == sp["completed"]
+             and abs(sm["energy_kwh"] - sp["energy_kwh"]) < 0.05)
+    return [
+        ("replay_tx_gaia_1h_thermal", dt_p / n_steps * 1e6,
+         f"completed={sp['completed']:.0f};energy_kwh={sp['energy_kwh']:.1f};"
+         f"pue={sp['avg_pue']:.3f};peak_rack_c={sp['peak_rack_outlet_c']:.1f};"
+         f"mean_cop={sp['mean_cop']:.2f};steps_per_s={n_steps/dt_p:,.0f}"),
+        ("replay_tx_gaia_1h_thermal_macro", dt_m / n_steps * 1e6,
+         f"completed={sm['completed']:.0f};energy_kwh={sm['energy_kwh']:.1f};"
+         f"pue={sm['avg_pue']:.3f};peak_rack_c={sm['peak_rack_outlet_c']:.1f};"
+         f"steps_per_s={n_steps/dt_m:,.0f};"
+         f"speedup_vs_pertick={dt_p/dt_m:.2f}x;"
+         f"skip_ratio={sm['macro_skip_ratio']:.1f};match_pertick={match}"),
+    ]
+
+
+def bench_thermal_smoke() -> List[Row]:
+    """CI smoke for the thermal twin: a stress-tuned tiny cluster whose
+    racks cross the dispatch trip mid-episode, per-tick vs macro. The
+    derived field asserts the macro run matched per-tick (completed count,
+    energy, peak rack temperature) so CI gates exactness, not just
+    runnability."""
+    from repro.configs.sim import tiny_cluster
+    from repro.core import build_statics, init_state, load_jobs, run_episode, summary
+    from repro.data import synth_workload
+
+    cfg = tiny_cluster(thermal_enabled=True, rack_tau_s=120.0,
+                       thermal_trip_c=22.0, throttle_start_c=20.0,
+                       throttle_full_c=30.0)
+    jobs, bank = synth_workload(cfg, 24, 600.0, seed=8)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    n_steps = 1500
+
+    run_p = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "fcfs",
+                                          summary_only=True))
+    run_m = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "fcfs",
+                                          macro=True))
+    dt_p = _timeit(run_p, state, n=2)
+    dt_m = _timeit(run_m, state, n=2)
+    fs_p, tel_p = run_p(state)
+    fs_m, tel_m = run_m(state)
+    sp, sm = summary(fs_p, tel_p), summary(fs_m, tel_m)
+    match = (sm["completed"] == sp["completed"]
+             and abs(sm["energy_kwh"] - sp["energy_kwh"]) < 1e-3
+             and abs(sm["peak_rack_outlet_c"] - sp["peak_rack_outlet_c"]) < 1e-4)
+    tripped = sp["peak_rack_outlet_c"] >= cfg.thermal_trip_c
+    return [
+        ("thermal_smoke_pertick", dt_p / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_p:,.0f};completed={sp['completed']:.0f};"
+         f"peak_rack_c={sp['peak_rack_outlet_c']:.2f};tripped={tripped}"),
+        ("thermal_smoke_macro", dt_m / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_m:,.0f};completed={sm['completed']:.0f};"
+         f"speedup_vs_pertick={dt_p/dt_m:.2f}x;"
+         f"skip_ratio={sm['macro_skip_ratio']:.1f};match_pertick={match}"),
+    ]
+
+
 def bench_vectorized_envs() -> List[Row]:
     """Beyond-paper: the JAX rewrite's RL-scale win — vmapped datacenters."""
     from repro.configs.sim import tiny_cluster

@@ -67,12 +67,17 @@ def _benches(smoke: bool):
     from benchmarks.bench_rl import bench_rl
 
     if smoke:
-        from benchmarks.bench_sim import bench_macro_smoke, bench_vectorized_envs
+        from benchmarks.bench_sim import (
+            bench_macro_smoke,
+            bench_thermal_smoke,
+            bench_vectorized_envs,
+        )
 
         return [
             _named(bench_dispatch, "bench_dispatch", smoke=True),
             bench_vectorized_envs,
             bench_macro_smoke,
+            bench_thermal_smoke,
             _named(bench_policy_grid, "bench_policy_grid", smoke=True),
             _named(bench_rl, "bench_rl", smoke=True),
         ]
@@ -91,12 +96,16 @@ def _benches(smoke: bool):
         bench_replay_throughput,
         bench_rl_training,
         bench_scheduler_comparison,
+        bench_thermal,
+        bench_thermal_smoke,
         bench_vectorized_envs,
     )
 
     return [
         bench_replay_throughput,
+        bench_thermal,
         bench_macro_smoke,
+        bench_thermal_smoke,
         bench_scheduler_comparison,
         bench_power_prediction,
         bench_congestion_model,

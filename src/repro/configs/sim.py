@@ -70,6 +70,24 @@ class SimConfig:
     # running jobs (linear power/progress model). 0 = uncapped.
     power_cap_w: float = 0.0
     throttle_floor: float = 0.3       # never clock below 30%
+    # thermal twin (per-rack RC cooling loop; docs/thermal.md). Python bool
+    # so thermal-off compiles the legacy static-COP chain bit-identically.
+    thermal_enabled: bool = False
+    nodes_per_rack: int = 32
+    rack_tau_s: float = 600.0          # first-order outlet-temp lag [s]
+    rack_dt_full_load_c: float = 20.0  # design outlet-supply delta at rack
+    #                                    nameplate IT power (sets R_th)
+    cooling_approach_c: float = 4.0    # supply-air approach over wetbulb
+    cooling_supply_min_c: float = 14.0 # plant never supplies below this
+    throttle_start_c: float = 55.0     # outlet temp where derating begins
+    throttle_full_c: float = 75.0      # outlet temp where derating saturates
+    thermal_throttle_floor: float = 0.4
+    thermal_trip_c: float = 65.0       # racks above this accept no NEW jobs
+    # COP(wetbulb, IT load): plants run closest to design efficiency near
+    # their rated load — part-load COP drops (ISO chiller part-load curves)
+    cop_load_coef: float = 1.2         # COP gain per unit IT-load fraction
+    cop_load_ref: float = 0.5          # load fraction of the nominal COP
+    cop_min: float = 1.5
     # RL / scheduling
     sched_max_candidates: int = 8     # jobs visible to the RL agent per step
     backfill_reserve: int = 1         # EASY: #head jobs that get reservations
@@ -82,6 +100,10 @@ class SimConfig:
     @property
     def n_types(self) -> int:
         return len(self.node_types)
+
+    @property
+    def n_racks(self) -> int:
+        return -(-self.n_nodes // self.nodes_per_rack)
 
     @property
     def nameplate_it_w(self) -> float:

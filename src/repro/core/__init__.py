@@ -13,6 +13,15 @@ from repro.core.placement import (
     stack_policies,
 )
 from repro.core.schedulers import SCHEDULERS, SELECT_IDS
+from repro.core.thermal import (
+    cooling_cop,
+    node_trip_ok,
+    rack_throttle,
+    rack_thermal_update,
+    supply_temp,
+    thermal_alpha,
+    thermal_crossing_horizon,
+)
 from repro.core.sim import (
     StepOut,
     TelemetrySummary,

@@ -153,11 +153,13 @@ def finish_power(cfg: SimConfig, state: SimState, statics: Statics,
     wb = eval_signal(statics.scenario.wetbulb, state.t)
     cop = jnp.maximum(
         cfg.cop_base + cfg.cop_wetbulb_coef * (wb - cfg.wetbulb_ref_c),
-        1.5,
+        cfg.cop_min,
     )
     cooling_w = input_w / cop
     facility_w = input_w + cooling_w
-    pue = facility_w / jnp.maximum(it_w, 1.0)
+    # PUE is undefined at zero IT load (every node down / idle-slept):
+    # report the 1.0 ideal instead of facility_w / 1 W blowing up to ~1e5
+    pue = jnp.where(it_w > 1.0, facility_w / jnp.maximum(it_w, 1.0), 1.0)
     gflops = jnp.sum(
         statics.peak_gflops * jnp.maximum(cpu_frac, gpu_frac) * state.node_up
     )

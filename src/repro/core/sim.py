@@ -33,6 +33,7 @@ import numpy as np
 from repro.configs.sim import SimConfig
 from repro.core import placement as plc
 from repro.core import schedulers as sched
+from repro.core import thermal as thm
 from repro.core.network import congestion_slowdown
 from repro.core.placement import Policy
 from repro.core.power import (
@@ -73,6 +74,11 @@ class StepOut(NamedTuple):
     power_cap_w: jax.Array     # effective facility cap (0 = uncapped)
     cost_usd_step: jax.Array   # electricity cost of this step
     throttle: jax.Array        # DVFS clock fraction applied [floor, 1]
+    # thermal twin telemetry (core.thermal); with thermal_enabled off these
+    # report the static plant (constant rack temps, wetbulb-only COP, 0)
+    rack_max_c: jax.Array      # hottest rack outlet this tick
+    cop: jax.Array             # cooling plant COP in effect
+    thermal_throttle_s_step: jax.Array  # dt if any rack was derated else 0
 
 
 def _parse_weights(reward_weights) -> Tuple[float, float, float, float, float]:
@@ -83,17 +89,22 @@ def _parse_weights(reward_weights) -> Tuple[float, float, float, float, float]:
     return w_thr, w_en, w_co2, w_q, w_cost
 
 
-def _make_tail(cfg: SimConfig, statics: Statics, reward_weights):
+def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
+               use_thermal_kernel: bool = False):
     """The per-tick accounting tail shared by the full step and the
-    macro-step fast tick: grid signals at ``state.t``, the DVFS throttle,
+    macro-step fast tick: grid signals at ``state.t``, thermal derating +
+    the rack RC update (when ``cfg.thermal_enabled``), the DVFS throttle,
     job progress, energy/carbon/cost accumulation, reward and ``StepOut``.
 
     Keeping this a single code path is what makes fast-forwarded ticks
     bit-identical to per-tick quiet ticks — both run EXACTLY these float
     ops in this order; they differ only in where the inputs (power chain,
-    congestion rate, queue/util counts) come from."""
+    congestion rate, queue/util counts) come from. ``thermal_enabled`` is
+    a Python bool, so the thermal-off tail compiles to byte-for-byte the
+    legacy static-COP program."""
     w_thr, w_en, w_co2, w_q, w_cost = _parse_weights(reward_weights)
     scn = statics.scenario
+    nameplate = max(cfg.nameplate_it_w, 1.0)
 
     def tail(
         state: SimState,
@@ -109,6 +120,46 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights):
         carbon_g = eval_signal(scn.carbon, state.t)          # gCO2/kWh
         price = eval_signal(scn.price, state.t)              # $/kWh
         cap_w = power_cap_at(scn.power_cap, state.t)         # W; 0 = uncapped
+        wb = eval_signal(scn.wetbulb, state.t)               # degC
+
+        if cfg.thermal_enabled:
+            # --- thermal feedback (core.thermal): derate from the PREVIOUS
+            # tick's outlet temps (explicit one-tick control lag), then
+            # re-close the plant chain with the dynamic COP(wetbulb, load).
+            # Only the node DYNAMIC power throttles — idle power burns at
+            # any clock — and input power scales with IT (the rectifier-eta
+            # shift under derating is second-order; docs/thermal.md).
+            th_r = thm.rack_throttle(cfg, state.rack_outlet_c)   # (R,)
+            node_th = th_r[statics.node_rack]                    # (N,)
+            node_idle = statics.idle_w * state.node_up
+            node_dyn = jnp.maximum(p.node_it_w - node_idle, 0.0)
+            node_it = node_idle + node_th * node_dyn
+            node_input = p.node_input_w * (
+                node_it / jnp.maximum(p.node_it_w, 1e-9))
+            it_w = jnp.sum(node_it)
+            input_w = jnp.sum(node_input)
+            dyn_tot = jnp.sum(node_dyn)
+            gscale = jnp.where(
+                dyn_tot > 0.0,
+                jnp.sum(node_th * node_dyn) / jnp.maximum(dyn_tot, 1e-9),
+                1.0)
+            cop = thm.cooling_cop(cfg, wb, it_w / nameplate)
+            cooling_w = input_w / cop
+            facility_w = input_w + cooling_w
+            pue = jnp.where(it_w > 1.0,
+                            facility_w / jnp.maximum(it_w, 1.0), 1.0)
+            p = p._replace(
+                node_it_w=node_it, node_input_w=node_input, it_w=it_w,
+                input_w=input_w, cooling_w=cooling_w,
+                facility_w=facility_w, pue=pue, gflops=p.gflops * gscale)
+            # synchronous ranks run at the slowest clock over a job's nodes
+            rate = rate * thm.job_thermal_rate(state, statics, node_th)
+        else:
+            # telemetry-only mirror of power.finish_power's static plant
+            # (dead for the accumulators, so the legacy math is untouched)
+            cop = jnp.maximum(
+                cfg.cop_base + cfg.cop_wetbulb_coef * (wb - cfg.wetbulb_ref_c),
+                cfg.cop_min)
 
         # --- demand response: DVFS-throttle to the facility power cap
         # (DCFlex-style [3]; linear dynamic-power/progress model). The cap
@@ -156,6 +207,24 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights):
             n_steps=state.n_steps + 1.0,
         )
 
+        if cfg.thermal_enabled:
+            # --- rack RC update: post-cap per-node input power (IT plus
+            # conversion losses, all of it room heat) relaxes each rack
+            # toward its loaded steady state. Committed LAST, so this
+            # tick's derate used the pre-update temps (the one-tick lag).
+            new_t, _ = thm.rack_thermal_update(
+                cfg, statics, state.rack_outlet_c, p.node_input_w * r,
+                thm.supply_temp(cfg, wb), use_kernel=use_thermal_kernel)
+            th_step = jnp.where(jnp.any(th_r < 1.0), cfg.dt, 0.0)
+            state = state._replace(
+                rack_outlet_c=new_t,
+                thermal_throttle_s=state.thermal_throttle_s + th_step,
+                peak_rack_c=jnp.maximum(state.peak_rack_c, jnp.max(new_t)))
+            rack_max = jnp.max(new_t)
+        else:
+            rack_max = jnp.max(state.rack_outlet_c)
+            th_step = jnp.float32(0.0)
+
         # reward: throughput-positive, energy/carbon/queue-negative,
         # normalized to O(1) per step
         reward = (
@@ -175,6 +244,7 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights):
             net_load=net_load, reward=reward,
             carbon_gkwh=carbon_g, price_usd_kwh=price, power_cap_w=cap_w,
             cost_usd_step=cost_step, throttle=throttle,
+            rack_max_c=rack_max, cop=cop, thermal_throttle_s_step=th_step,
         )
         return state, out
 
@@ -296,6 +366,7 @@ def make_step(
     starts_per_step: int = 2,
     reward_weights: Tuple[float, ...] = (1.0, 1.0, 1.0, 0.05),
     use_power_kernel: bool = False,
+    use_thermal_kernel: bool = False,
 ):
     """Returns step(state, action) -> (state, StepOut).
 
@@ -328,16 +399,32 @@ def make_step(
         placement = "first_fit"
     if placement not in plc.PLACEMENTS:
         raise KeyError(f"unknown placement {placement}")
-    tail = _make_tail(cfg, statics, reward_weights)
+    tail = _make_tail(cfg, statics, reward_weights,
+                      use_thermal_kernel=use_thermal_kernel)
+
+    if cfg.thermal_enabled:
+        # tripped racks accept no NEW jobs (core.thermal.node_trip_ok):
+        # fold the trip gate into node_up for the DISPATCH stage only, so
+        # every selection/placement feasibility check — all five placement
+        # strategies, EASY's backfill window, fits_now_mask — sees it
+        # through one seam, while power/progress still run the node (the
+        # continuous throttle handles hot-but-running racks)
+        def _dispatch_view(s: SimState) -> SimState:
+            ok = thm.node_trip_ok(cfg, s, statics)
+            return s._replace(node_up=jnp.where(ok, s.node_up, 0.0))
+    else:
+        def _dispatch_view(s: SimState) -> SimState:
+            return s
 
     if policy_mode:
         def place_fn(s, j):
-            return plc.place_job(s, statics, j, scheduler.place)
+            return plc.place_job(_dispatch_view(s), statics, j,
+                                 scheduler.place)
     else:
         eager_place = plc.PLACEMENTS[placement]
 
         def place_fn(s, j):
-            return eager_place(s, statics, j)
+            return eager_place(_dispatch_view(s), statics, j)
 
     def step(state: SimState, action: jax.Array) -> Tuple[SimState, StepOut]:
         state = state._replace(t=state.t + cfg.dt)
@@ -366,8 +453,8 @@ def make_step(
                                                     scheduler.place)
 
                 def select(c, s):
-                    return sched.select_job(c, s, statics, scheduler.select,
-                                            node_mask)
+                    return sched.select_job(c, _dispatch_view(s), statics,
+                                            scheduler.select, node_mask)
             else:
                 eager_select = sched.SCHEDULERS[scheduler]
                 mask_fn = plc.PLACEMENT_MASKS[placement]
@@ -375,7 +462,8 @@ def make_step(
                                                                  statics)
 
                 def select(c, s):
-                    return eager_select(c, s, statics, node_mask)
+                    return eager_select(c, _dispatch_view(s), statics,
+                                        node_mask)
 
             def dispatch(_, s: SimState) -> SimState:
                 return _try_start(cfg, s, select(cfg, s), place_fn)
@@ -407,6 +495,7 @@ class TelemetrySummary(NamedTuple):
     carbon_kg: jax.Array
     cost_usd: jax.Array
     reward: jax.Array
+    thermal_throttle_s: jax.Array  # seconds any rack was thermally derated
     # per-step means
     mean_facility_w: jax.Array
     mean_it_w: jax.Array
@@ -418,9 +507,13 @@ class TelemetrySummary(NamedTuple):
     mean_carbon_gkwh: jax.Array
     mean_price_usd_kwh: jax.Array
     mean_throttle: jax.Array
+    # with thermal_enabled, ``mean_pue`` above becomes the DYNAMIC PUE
+    # (COP responds to wetbulb AND IT load) and these two activate:
+    mean_cop: jax.Array        # cooling-plant COP (wetbulb x load aware)
     # extremes
     max_facility_w: jax.Array
     max_queue_len: jax.Array
+    max_rack_c: jax.Array      # hottest rack outlet over the window
     n_steps: jax.Array
     # macro-stepping skip accounting: how many ticks ran the full event
     # step (dispatch/completions/failures machinery) vs. the fast-forward
@@ -443,6 +536,8 @@ def _telem_update(acc: TelemetrySummary, out: StepOut,
         carbon_kg=acc.carbon_kg + out.carbon_kg_step,
         cost_usd=acc.cost_usd + out.cost_usd_step,
         reward=acc.reward + out.reward,
+        thermal_throttle_s=acc.thermal_throttle_s
+        + out.thermal_throttle_s_step,
         mean_facility_w=acc.mean_facility_w + out.facility_w,
         mean_it_w=acc.mean_it_w + out.it_w,
         mean_pue=acc.mean_pue + out.pue,
@@ -453,8 +548,10 @@ def _telem_update(acc: TelemetrySummary, out: StepOut,
         mean_carbon_gkwh=acc.mean_carbon_gkwh + out.carbon_gkwh,
         mean_price_usd_kwh=acc.mean_price_usd_kwh + out.price_usd_kwh,
         mean_throttle=acc.mean_throttle + out.throttle,
+        mean_cop=acc.mean_cop + out.cop,
         max_facility_w=jnp.maximum(acc.max_facility_w, out.facility_w),
         max_queue_len=jnp.maximum(acc.max_queue_len, out.queue_len),
+        max_rack_c=jnp.maximum(acc.max_rack_c, out.rack_max_c),
         n_steps=acc.n_steps + 1.0,
         macro_steps=acc.macro_steps + macro_inc,
     )
@@ -493,6 +590,17 @@ _FAST_FIELDS = (
     "cool_energy_kwh", "carbon_kg", "elec_cost_usd", "flops_integral",
     "sum_power_w", "n_steps",
 )
+
+
+def _fast_fields(cfg: SimConfig) -> tuple:
+    """Fast-tick-mutable SimState leaves for this config: the thermal
+    carry joins only when the cooling loop is on (the thermal-off tail
+    never writes it, and keeping the commit-select identical preserves the
+    legacy program byte-for-byte)."""
+    if cfg.thermal_enabled:
+        return _FAST_FIELDS + (
+            "rack_outlet_c", "thermal_throttle_s", "peak_rack_c")
+    return _FAST_FIELDS
 
 
 def _horizon_parts(cfg: SimConfig, state: SimState, statics: Statics,
@@ -570,6 +678,15 @@ def quiet_horizon(
     queue is proven unservable — every selection policy's pick is
     constant between events for a frozen machine state — and fast-forward
     may proceed; pass True (the macro engine does) to encode that proof.
+
+    With ``cfg.thermal_enabled`` the trip gate makes dispatch eligibility
+    temperature-dependent, so a *thermal breakpoint* joins the min: a
+    conservative tick count within which no rack can cross
+    ``thermal_trip_c`` (``core.thermal.thermal_crossing_horizon``; the
+    RC update is a contraction, so the bound follows from the box the
+    temperatures are confined to). The macro engine additionally detects
+    actual crossings authoritatively per fast tick — this bound only
+    keeps segments short enough that the detection stays cheap.
     """
     policy_mode = isinstance(scheduler, Policy)
     dispatch_on = policy_mode or scheduler != "none"
@@ -580,7 +697,11 @@ def quiet_horizon(
         cfg, state, statics, rate, dispatch_on, replay_gated,
         eligibility_vis, max_ticks)
     blocked = visible_now & ~jnp.asarray(assume_undispatchable)
-    return jnp.where(blocked, 0, jnp.minimum(k_time, k_complete))
+    horizon = jnp.where(blocked, 0, jnp.minimum(k_time, k_complete))
+    if cfg.thermal_enabled and dispatch_on:
+        horizon = jnp.minimum(horizon, thm.thermal_crossing_horizon(
+            cfg, statics, state, max_ticks))
+    return horizon
 
 
 def make_macro_step(
@@ -592,6 +713,7 @@ def make_macro_step(
     starts_per_step: int = 2,
     reward_weights: Tuple[float, ...] = (1.0, 1.0, 1.0, 0.05),
     use_power_kernel: bool = False,
+    use_thermal_kernel: bool = False,
     horizon_cap: int = 4096,
     chunk_ticks: int = 16,
     update=None,
@@ -623,13 +745,27 @@ def make_macro_step(
     step = make_step(cfg, statics, scheduler, placement=placement,
                      starts_per_step=starts_per_step,
                      reward_weights=reward_weights,
-                     use_power_kernel=use_power_kernel)
-    tail = _make_tail(cfg, statics, reward_weights)
+                     use_power_kernel=use_power_kernel,
+                     use_thermal_kernel=use_thermal_kernel)
+    tail = _make_tail(cfg, statics, reward_weights,
+                      use_thermal_kernel=use_thermal_kernel)
     policy_mode = isinstance(scheduler, Policy)
     dispatch_on = policy_mode or scheduler != "none"
     replay_gated = policy_mode or scheduler == "replay"
     eligibility_vis = (not policy_mode) and scheduler == "replay"
     mtbf_on = cfg.node_mtbf_hours > 0
+    # thermal breakpoints: the trip gate makes DISPATCH eligibility depend
+    # on rack temps, which keep evolving across fast ticks. A segment must
+    # therefore end the tick a rack crosses thermal_trip_c (either
+    # direction): detection is authoritative — each committed fast tick
+    # compares its pre/post trip sets — and stopping AFTER the crossing
+    # tick is exact because a tick's dispatch reads the temps its
+    # PREDECESSOR committed (the tail's one-tick control lag), so the
+    # crossing tick itself was still quiet under the old trip set. Without
+    # dispatch there is no trip consumer and thermals stay breakpoint-free.
+    thermal_gate = cfg.thermal_enabled and dispatch_on
+    trip_c = jnp.float32(cfg.thermal_trip_c)
+    fast_fields = _fast_fields(cfg)
     N = cfg.n_nodes
     C = max(int(chunk_ticks), 1)
     # shared power path (bit-identical to the full step) whenever the
@@ -690,8 +826,14 @@ def make_macro_step(
         # boundaries), both allow fast-forward. Completions are peeked per
         # tick (authoritative), so the budget only carries the
         # deterministic time-event horizon.
-        budget = jnp.where(started & visible_now, 0,
-                           jnp.minimum(k_time, max_ticks - 1))
+        k_quiet = jnp.minimum(k_time, max_ticks - 1)
+        if thermal_gate:
+            # conservative thermal-crossing horizon (belt to the per-tick
+            # detection's suspenders: keeps segments from even entering
+            # the neighborhood of a trip crossing un-checked)
+            k_quiet = jnp.minimum(k_quiet, thm.thermal_crossing_horizon(
+                cfg, statics, state, horizon_cap))
+        budget = jnp.where(started & visible_now, 0, k_quiet)
         queued, running, util = _counts_and_util(state, statics)
 
         def peek_stop(s, t_next):
@@ -714,7 +856,7 @@ def make_macro_step(
             ns, o = tail(ns, p, rate, net_load, jnp.int32(0),
                          queued, running, util)
             na = update(a, o, 0.0)
-            fields = _FAST_FIELDS + (("key",) if mtbf_on else ())
+            fields = fast_fields + (("key",) if mtbf_on else ())
             s = s._replace(**{
                 f: _where_leaf(stop, getattr(s, f), getattr(ns, f))
                 for f in fields
@@ -732,8 +874,12 @@ def make_macro_step(
                 stop, key = peek_stop(s, t_next)
                 p = compute_power(cfg, s._replace(t=t_next), statics,
                                   use_kernel=use_power_kernel)
+                was_hot = s.rack_outlet_c >= trip_c
                 s, a, i = commit(s, a, i, stop, t_next, key, p)
-                return (s, a, i, ~stop)
+                go = ~stop
+                if thermal_gate:   # authoritative trip-crossing breakpoint
+                    go &= ~jnp.any((s.rack_outlet_c >= trip_c) != was_hot)
+                return (s, a, i, go)
 
             state, acc, took, _ = jax.lax.while_loop(
                 lambda c: c[3] & (c[2] < budget), body,
@@ -755,8 +901,12 @@ def make_macro_step(
             t_next = ts[j]
             stop, key = peek_stop(s, t_next)
             p = jax.tree.map(lambda x: x[j], pc)
+            was_hot = s.rack_outlet_c >= trip_c
             s, a, i = commit(s, a, i, stop, t_next, key, p)
-            return (s, a, i, j + 1, ~stop, chk)
+            go = ~stop
+            if thermal_gate:       # authoritative trip-crossing breakpoint
+                go &= ~jnp.any((s.rack_outlet_c >= trip_c) != was_hot)
+            return (s, a, i, j + 1, go, chk)
 
         def outer_body(c):
             s, a, i, go = c
@@ -915,6 +1065,10 @@ def summary(state: SimState,
         "avg_pue": (
             float(s.energy_kwh) / max(float(s.it_energy_kwh), 1e-9)
         ),
+        # thermal twin (core.thermal); with thermal_enabled off these
+        # report the supply-temperature initial condition and 0
+        "peak_rack_outlet_c": float(s.peak_rack_c),
+        "thermal_throttle_s": float(s.thermal_throttle_s),
     }
     if telemetry is not None:
         # macro-stepping skip accounting (satellite of the macro engine):
@@ -927,4 +1081,9 @@ def summary(state: SimState,
         out["ticks_simulated"] = ticks
         out["macro_steps_taken"] = full
         out["macro_skip_ratio"] = ticks / max(full, 1.0)
+        # cooling-plant telemetry (tick-weighted across windows)
+        out["mean_cop"] = float(
+            np.sum(np.asarray(tl.mean_cop) * np.asarray(tl.n_steps))
+            / max(ticks, 1.0))
+        out["max_rack_outlet_c"] = float(np.max(np.asarray(tl.max_rack_c)))
     return out

@@ -40,6 +40,12 @@ class Statics(NamedTuple):
     gpu_dyn_w: jax.Array       # (N,)
     node_max_w: jax.Array      # (N,)
     peak_gflops: jax.Array     # (N,)
+    # thermal twin topology (core.thermal): which rack each node sits in,
+    # each rack's steady-state thermal resistance [degC/W] derived from the
+    # design delta-T at nameplate, and the rack IT nameplate itself
+    node_rack: jax.Array       # (N,) int32 in [0, R)
+    rack_r_th: jax.Array       # (R,) degC per W of rack heat
+    rack_cap_w: jax.Array      # (R,) sum of member node_max_w
     # telemetry bank: per-job utilization profiles at trace-quanta resolution
     cpu_trace: jax.Array       # (J, Q) in [0,1], or (W, J, Q) banked
     gpu_trace: jax.Array       # (J, Q) / (W, J, Q)
@@ -83,6 +89,13 @@ class SimState(NamedTuple):
     sum_slowdown: jax.Array
     sum_power_w: jax.Array     # for mean power
     n_steps: jax.Array
+    # thermal twin carry (core.thermal): per-rack outlet temps (first-order
+    # RC lag) + episode accumulators. Present even with thermal_enabled
+    # off — the pytree structure must not depend on the model flag — but
+    # then never written after init.
+    rack_outlet_c: jax.Array   # (R,)
+    thermal_throttle_s: jax.Array  # seconds with any rack derated
+    peak_rack_c: jax.Array     # running max outlet temp
     # which workload this replica runs: index into a banked Statics trace
     # bank ((W, J, Q) leading axis); ignored when the bank is unbatched.
     # Scalar int32 — O(1) per env, vs. the O(J*Q) per-env bank copy the
@@ -114,6 +127,13 @@ def build_statics(
             "gpu": np.zeros((J, q), np.float32),
             "net_tx": np.zeros((J,), np.float32),
         }
+    # rack topology: consecutive index blocks (nodes are emitted type-major,
+    # so racks are type-homogeneous except at type boundaries); R_th per
+    # rack from the design delta-T at the rack's IT nameplate
+    node_rack = np.arange(cfg.n_nodes, dtype=np.int32) // cfg.nodes_per_rack
+    rack_cap = np.zeros((cfg.n_racks,), np.float32)
+    np.add.at(rack_cap, node_rack, np.array(nmax, np.float32))
+    rack_r_th = cfg.rack_dt_full_load_c / np.maximum(rack_cap, 1.0)
     return Statics(
         capacity=jnp.asarray(np.array(caps, np.float32).T),
         node_type=jnp.asarray(np.array(types, np.int32)),
@@ -122,6 +142,9 @@ def build_statics(
         gpu_dyn_w=jnp.asarray(np.array(gdyn, np.float32)),
         node_max_w=jnp.asarray(np.array(nmax, np.float32)),
         peak_gflops=jnp.asarray(np.array(gflops, np.float32)),
+        node_rack=jnp.asarray(node_rack),
+        rack_r_th=jnp.asarray(rack_r_th),
+        rack_cap_w=jnp.asarray(rack_cap),
         cpu_trace=jnp.asarray(trace_bank["cpu"], jnp.float32),
         gpu_trace=jnp.asarray(trace_bank["gpu"], jnp.float32),
         net_tx=jnp.asarray(trace_bank["net_tx"], jnp.float32),
@@ -130,11 +153,17 @@ def build_statics(
 
 
 def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
+    from repro.core.thermal import supply_temp
+    from repro.scenarios.signals import eval_signal
+
     N = cfg.n_nodes
     J = cfg.max_jobs
     K = cfg.max_nodes_per_job
     f = jnp.float32
     zJ = jnp.zeros((J,), f)
+    # racks start at the cooling supply temperature (the idle steady state
+    # sans heat); the RC update pulls them toward the loaded steady state
+    supply0 = supply_temp(cfg, eval_signal(statics.scenario.wetbulb, f(0.0)))
     return SimState(
         t=f(0.0),
         key=key,
@@ -166,6 +195,9 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
         sum_slowdown=f(0.0),
         sum_power_w=f(0.0),
         n_steps=f(0.0),
+        rack_outlet_c=supply0 * jnp.ones((cfg.n_racks,), f),
+        thermal_throttle_s=f(0.0),
+        peak_rack_c=supply0,
         workload=jnp.int32(0),
     )
 

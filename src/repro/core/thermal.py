@@ -1,0 +1,166 @@
+"""Rack thermal twin: the cooling loop as first-class simulation state.
+
+The paper positions the twin as a power *and cooling* model; this module
+supplies the cooling half (Brewer et al. 2410.05133's liquid-cooled twin
+is the reference architecture). Per rack we carry one outlet temperature
+with a first-order RC lag — rooms do not cool instantly:
+
+    T[k+1] = T[k] + alpha * (T_ss - T[k]),  alpha = 1 - exp(-dt / tau)
+    T_ss   = supply + R_th * heat_w
+    supply = max(wetbulb + approach, supply_min)
+
+``heat_w`` is the rack's total *input* power (IT + rectification and
+conversion losses all end up as room heat). Feedback into the schedule is
+two-fold, both computed from the PREVIOUS tick's outlet temps (a one-tick
+control lag keeps the update explicit):
+
+* continuous DVFS derating — ``rack_throttle`` ramps the clock from 1 at
+  ``throttle_start_c`` down to ``thermal_throttle_floor`` at
+  ``throttle_full_c`` (monotone non-increasing in temperature, a property
+  test pins this), scaling each node's dynamic power and each resident
+  job's progress;
+* a binary dispatch trip — racks at/above ``thermal_trip_c`` accept no
+  NEW placements (``node_trip_ok``). Only the trip is dispatch-relevant,
+  which is what keeps the macro-stepping proof obligations finite: a
+  quiet segment may end at a *trip crossing* and nowhere else
+  (``thermal_crossing_horizon`` bounds those conservatively).
+
+The cooling plant COP depends on wetbulb AND IT load (``cooling_cop``),
+replacing the static wetbulb-only factor — PUE becomes a dynamic output.
+
+Everything here is pure jnp on (cfg, arrays); the per-rack scatter + RC
+update has a fused Pallas kernel (``kernels.rack_thermal``) with the
+eager oracle in ``kernels.ref.rack_thermal_ref``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sim import SimConfig
+from repro.kernels.ref import rack_thermal_ref
+from repro.scenarios.signals import signal_bounds
+
+if TYPE_CHECKING:  # type hints only — state.py imports us (supply_temp)
+    from repro.core.state import SimState, Statics
+
+
+def thermal_alpha(cfg: SimConfig) -> float:
+    """Per-tick RC relaxation factor, as a Python float so every code path
+    (eager tail, macro fast tick, Pallas kernel static arg, NumPy oracle)
+    bakes in the IDENTICAL constant."""
+    return float(-math.expm1(-cfg.dt / max(cfg.rack_tau_s, 1e-6)))
+
+
+def supply_temp(cfg: SimConfig, wetbulb_c: jax.Array) -> jax.Array:
+    """Cooling supply-air temperature: wetbulb + tower/CDU approach,
+    floored at the plant's minimum supply setpoint."""
+    return jnp.maximum(wetbulb_c + cfg.cooling_approach_c,
+                       cfg.cooling_supply_min_c)
+
+
+def cooling_cop(cfg: SimConfig, wetbulb_c: jax.Array,
+                load_frac: jax.Array) -> jax.Array:
+    """COP(wetbulb, IT load): linear wetbulb derate (as before) plus a
+    part-load penalty — plants run closest to design efficiency near rated
+    load. Floored at ``cop_min``."""
+    return jnp.maximum(
+        cfg.cop_base
+        + cfg.cop_wetbulb_coef * (wetbulb_c - cfg.wetbulb_ref_c)
+        + cfg.cop_load_coef * (load_frac - cfg.cop_load_ref),
+        cfg.cop_min,
+    )
+
+
+def rack_throttle(cfg: SimConfig, rack_outlet_c: jax.Array) -> jax.Array:
+    """(R,) DVFS clock fraction per rack: 1 below ``throttle_start_c``,
+    linear ramp to ``thermal_throttle_floor`` at ``throttle_full_c``.
+    Monotone non-increasing in outlet temperature."""
+    span = max(cfg.throttle_full_c - cfg.throttle_start_c, 1e-6)
+    ramp = (rack_outlet_c - cfg.throttle_start_c) / span
+    return jnp.clip(1.0 - (1.0 - cfg.thermal_throttle_floor) * ramp,
+                    cfg.thermal_throttle_floor, 1.0)
+
+
+def job_thermal_rate(state: "SimState", statics: "Statics",
+                     node_th: jax.Array) -> jax.Array:
+    """(J,) progress factor per job: the MIN clock over the job's placed
+    nodes (synchronous apps run at the slowest rank). Unplaced slots
+    contribute 1, so queued/done jobs are unaffected."""
+    place = state.placement                                   # (J, K)
+    valid = place >= 0
+    slot_th = jnp.where(valid, node_th[jnp.where(valid, place, 0)], 1.0)
+    return jnp.min(slot_th, axis=1)
+
+
+def node_trip_ok(cfg: SimConfig, state: "SimState",
+                 statics: "Statics") -> jax.Array:
+    """(N,) bool: nodes whose rack is below the dispatch trip threshold —
+    the thermal half of placement eligibility. The throttle stays
+    continuous; only THIS boolean gates dispatch, so fast-forwarded
+    segments need to stop only at trip crossings."""
+    return (state.rack_outlet_c < cfg.thermal_trip_c)[statics.node_rack]
+
+
+def rack_thermal_update(
+    cfg: SimConfig,
+    statics: "Statics",
+    rack_outlet_c: jax.Array,     # (R,)
+    node_heat_w: jax.Array,       # (N,) post-throttle input power
+    supply_c: jax.Array,          # scalar
+    *,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """One RC step of every rack: scatter node heat onto racks and relax
+    toward the steady state. Returns (new_outlet_c (R,), rack_heat_w (R,)).
+    ``use_kernel`` swaps in the fused Pallas pass (kernels.rack_thermal);
+    both paths share the one-hot-contraction math so they agree bitwise on
+    CPU (tests/test_thermal.py pins this)."""
+    alpha = thermal_alpha(cfg)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.rack_thermal(
+            node_heat_w, statics.node_rack, rack_outlet_c, supply_c,
+            statics.rack_r_th, alpha=alpha)
+    return rack_thermal_ref(node_heat_w, statics.node_rack, rack_outlet_c,
+                            supply_c, statics.rack_r_th, alpha=alpha)
+
+
+def thermal_crossing_horizon(cfg: SimConfig, statics: "Statics",
+                             state: "SimState", max_ticks: int) -> jax.Array:
+    """Conservative tick count guaranteed free of dispatch-trip crossings.
+
+    The RC update is a contraction: every rack temperature stays inside
+    the box [min(T, ss_lo), max(T, ss_hi)] spanned by its current value
+    and the extreme steady states (wetbulb signal bounds x zero-to-max
+    heat), and moves at most ``alpha * box_width`` per tick. A rack whose
+    trip threshold lies outside its box can never cross; otherwise it
+    needs at least ``distance / (alpha * width)`` ticks. The small margin
+    subtracted before the floor absorbs float drift of the per-tick
+    chain, mirroring the arrival-horizon margin in ``sim._horizon_parts``.
+    """
+    kf = jnp.float32(max_ticks)
+    wb_lo, wb_hi = signal_bounds(statics.scenario.wetbulb)
+    sup_lo = supply_temp(cfg, wb_lo)
+    sup_hi = supply_temp(cfg, wb_hi)
+    # max rack input power: nameplate IT through the worst-case chain
+    # (load clip 1.2, rectifier eta floor 0.5) — matches power_from_fracs
+    heat_hi = statics.rack_cap_w * 1.2 / (0.5 * cfg.conv_eff)
+    ss_lo = sup_lo                                   # zero heat
+    ss_hi = sup_hi + heat_hi * statics.rack_r_th     # (R,)
+    T = state.rack_outlet_c
+    lo = jnp.minimum(T, ss_lo)
+    hi = jnp.maximum(T, ss_hi)
+    width = jnp.maximum(hi - lo, 1e-6)
+    alpha = thermal_alpha(cfg)
+    trip = jnp.float32(cfg.thermal_trip_c)
+    reachable = (trip >= lo) & (trip <= hi)
+    dist = jnp.abs(T - trip)
+    ticks = jnp.floor(dist / (alpha * width) - 1e-3)
+    ticks = jnp.where(reachable, ticks, kf)
+    return jnp.clip(jnp.min(ticks), 0.0, kf).astype(jnp.int32)

@@ -48,6 +48,7 @@ import numpy as np
 from repro.configs.sim import SimConfig
 from repro.core import placement as plc
 from repro.core import schedulers as sched
+from repro.core import thermal
 from repro.core.sim import make_macro_step, make_step
 from repro.data.bank import stack_workloads
 from repro.scenarios import Scenario, eval_signal, power_cap_at
@@ -69,6 +70,13 @@ GLOBAL_FEATURES = (
     "queued_frac", "running_frac", "nodes_up_frac", "day_frac",
     "episode_progress",
 )
+# thermal-twin features, appended to the globals ONLY when
+# ``cfg.thermal_enabled`` (the layout — and thus any pinned obs — is
+# unchanged with the cooling loop off): hottest/mean rack outlet as a
+# fraction of the dispatch trip threshold, the worst rack clock, and the
+# fraction of racks currently refusing new jobs
+THERMAL_FEATURES = ("rack_hot_frac", "rack_mean_frac",
+                    "throttle_min", "tripped_frac")
 # per-node-type features: free fraction of each resource
 TYPE_FEATURES = ("cpu_free", "gpu_free", "mem_free")
 CANDIDATE_FEATURES = (
@@ -243,7 +251,8 @@ class SchedEnv:
 
     # ------------------------------------------------------------ features
     def _obs_spec(self) -> int:
-        return (len(GLOBAL_FEATURES) + len(plc.PLACEMENTS)
+        thermal = len(THERMAL_FEATURES) if self.cfg.thermal_enabled else 0
+        return (len(GLOBAL_FEATURES) + thermal + len(plc.PLACEMENTS)
                 + len(TYPE_FEATURES) * self.cfg.n_types
                 + len(CANDIDATE_FEATURES) * self.k)
 
@@ -272,6 +281,24 @@ class SchedEnv:
         assert tuple(glob) == GLOBAL_FEATURES
         glob = jnp.stack([glob[name] for name in GLOBAL_FEATURES])
 
+        if cfg.thermal_enabled:
+            # rack temps + throttle state so the policy can learn
+            # thermally-aware dispatch (place away from hot racks, hold
+            # jobs through trip windows)
+            trip = max(cfg.thermal_trip_c, 1e-6)
+            th_r = thermal.rack_throttle(cfg, sim.rack_outlet_c)   # (R,)
+            therm = dict(
+                rack_hot_frac=jnp.max(sim.rack_outlet_c) / trip,
+                rack_mean_frac=jnp.mean(sim.rack_outlet_c) / trip,
+                throttle_min=jnp.min(th_r),
+                tripped_frac=jnp.mean(
+                    (sim.rack_outlet_c >= cfg.thermal_trip_c
+                     ).astype(jnp.float32)),
+            )
+            assert tuple(therm) == THERMAL_FEATURES
+            glob = jnp.concatenate(
+                [glob, jnp.stack([therm[n] for n in THERMAL_FEATURES])])
+
         # per-node-type free fractions, fused: the python per-(type,
         # resource) loop of scalar reductions becomes one one-hot
         # contraction (values unchanged: the masks are exact {0,1} floats)
@@ -298,6 +325,10 @@ class SchedEnv:
         ok = jax.vmap(lambda j: sched.feasible_nodes(sim, j))(safe)  # (k, N)
         if self._mask_fn is not None:
             ok = ok & self._mask_fn(sim, statics)[safe]
+        if cfg.thermal_enabled:
+            # tripped racks refuse dispatch (core.sim applies the same
+            # gate through _dispatch_view) — show the agent the truth
+            ok = ok & thermal.node_trip_ok(cfg, sim, statics)[None, :]
         feasible = jnp.sum(ok, axis=1).astype(jnp.float32) / cfg.n_nodes
         cand = dict(
             valid=valid, wait_h=wait * valid, dur_h=dur * valid,

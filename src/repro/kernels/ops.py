@@ -20,6 +20,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.flash_attn import flash_attention_fwd
 from repro.kernels.mamba_scan import selective_scan_pallas
 from repro.kernels.node_power import node_power_pallas, power_scatter_pallas
+from repro.kernels.rack_thermal import rack_thermal_pallas
 
 
 def _default_interpret() -> bool:
@@ -107,4 +108,14 @@ def power_scatter(place_flat, cpu_abs, gpu_abs, cap_cpu, cap_gpu, idle_w,
         gpu_dyn_w, node_up, node_max_w,
         rect_peak=rect_peak, rect_load=rect_load, rect_curv=rect_curv,
         conv_eff=conv_eff, interpret=_default_interpret(),
+    )
+
+
+def rack_thermal(node_heat_w, node_rack, rack_outlet_c, supply_c, rack_r_th,
+                 *, alpha):
+    """Fused rack-heat scatter + RC outlet-temp update (core.thermal).
+    Returns (new_outlet_c, rack_heat_w)."""
+    return rack_thermal_pallas(
+        node_heat_w, node_rack, rack_outlet_c, supply_c, rack_r_th,
+        alpha=alpha, interpret=_default_interpret(),
     )

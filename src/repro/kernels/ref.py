@@ -142,6 +142,32 @@ def node_power_ref(
     return it, input_w
 
 
+def rack_thermal_ref(
+    node_heat_w,      # (N,) per-node input power (all of it becomes heat)
+    node_rack,        # (N,) int32 rack id per node, in [0, R)
+    rack_outlet_c,    # (R,) current outlet temperatures
+    supply_c,         # scalar cooling supply temperature
+    rack_r_th,        # (R,) degC per W of rack heat
+    *,
+    alpha: float,     # per-tick RC relaxation factor 1 - exp(-dt/tau)
+):
+    """Fused rack-heat scatter + first-order RC outlet-temp update oracle.
+
+    T' = T + alpha * (supply + heat * R_th - T). The node->rack reduction
+    uses the same one-hot matmul as the Pallas kernel (not segment_sum) so
+    both paths accumulate in the identical order and agree bitwise on CPU.
+    Returns (new_outlet_c, rack_heat_w), each (R,).
+    """
+    r = rack_outlet_c.shape[0]
+    onehot = (node_rack[:, None] == jnp.arange(r, dtype=jnp.int32)[None, :])
+    heat = jnp.dot(node_heat_w[None, :].astype(jnp.float32),
+                   onehot.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)[0]
+    t_ss = supply_c + heat * rack_r_th
+    new_t = rack_outlet_c + jnp.float32(alpha) * (t_ss - rack_outlet_c)
+    return new_t, heat
+
+
 def power_scatter_ref(
     place_flat,       # (J*K,) int32 node ids, -1 = unused placement slot
     cpu_abs,          # (J*K,) absolute utilized cpu cores per slot

@@ -19,6 +19,7 @@ from repro.scenarios.scenario import (
     sample_scenarios,
     solar_heavy,
     stack_scenarios,
+    thermal_stress,
 )
 from repro.scenarios.signals import (
     Signal,
@@ -27,6 +28,7 @@ from repro.scenarios.signals import (
     from_trace,
     integrate_signal,
     mean_signal,
+    signal_bounds,
     sinusoid,
     to_trace,
 )

@@ -8,6 +8,13 @@ convention consumed by the DVFS throttle in ``core/sim.py``.
 
 Fixed shape (E is padded, inactive slots have cap 0) so schedules vmap
 across fleet replicas.
+
+Cap-window edges are one of the deterministic breakpoint types the
+macro-stepping engine stops at (``core.sim.quiet_horizon`` via
+``next_cap_event``); with the thermal twin enabled, predicted
+rack-temperature trip crossings join them (``core.thermal.
+thermal_crossing_horizon``) — see docs/thermal.md for the breakpoint
+semantics.
 """
 
 from __future__ import annotations

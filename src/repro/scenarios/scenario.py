@@ -92,6 +92,30 @@ def heatwave(cfg: SimConfig, *, delta_c: float = 8.0) -> Scenario:
     )
 
 
+def thermal_stress(
+    cfg: SimConfig,
+    *,
+    delta_c: float = 10.0,
+    cap_frac: float = 0.7,
+    event_start_s: float = 13.0 * 3600.0,
+    event_len_s: float = 4.0 * 3600.0,
+) -> Scenario:
+    """The thermal-twin stress case: a heatwave (high wetbulb -> high
+    supply temperature -> racks ride the throttle/trip thresholds) PLUS an
+    afternoon demand-response window landing on the wetbulb peak — the
+    regime where cooling lag, temperature-triggered throttling and the
+    power cap all interact (``cfg.thermal_enabled`` turns the rack RC loop
+    on; this scenario merely supplies the weather/grid that exercises it).
+    """
+    base = heatwave(cfg, delta_c=delta_c)
+    cap_w = cfg.nameplate_it_w * 1.3 * cap_frac
+    return base._replace(
+        power_cap=cap_events([event_start_s],
+                             [event_start_s + event_len_s], [cap_w],
+                             base_cap_w=cfg.power_cap_w),
+    )
+
+
 def carbon_trace(cfg: SimConfig, values, dt: float, t0: float = 0.0) -> Scenario:
     """Default grid with carbon replaced by a sampled trace (e.g. a grid
     operator's 5-minute marginal-intensity feed)."""
@@ -103,6 +127,7 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "solar_heavy": solar_heavy,
     "demand_response": demand_response,
     "heatwave": heatwave,
+    "thermal_stress": thermal_stress,
 }
 
 

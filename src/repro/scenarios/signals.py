@@ -176,6 +176,24 @@ def mean_signal(sig: Signal, t0: jax.Array, t1: jax.Array) -> jax.Array:
     return jnp.where(span == 0.0, eval_signal(sig, t0), avg)
 
 
+def signal_bounds(sig: Signal) -> tuple[jax.Array, jax.Array]:
+    """Conservative (lo, hi) envelope of ``sig`` over ALL time.
+
+    Parametric family: ``mean ∓ (|amp| + noise_amp * H)`` where H bounds the
+    harmonic-noise sum (4 unit sines / sqrt(4) -> |noise| <= 2). Trace
+    family: exact min/max of the samples (the edge-held linear interpolant
+    never leaves their hull). Pure & jit-safe — used by the macro-stepping
+    engine to bound thermal steady states (``core.thermal``).
+    """
+    h_max = jnp.float32(len(_NOISE_HARMONICS)) / jnp.sqrt(
+        jnp.float32(len(_NOISE_HARMONICS)))
+    swing = jnp.abs(sig.amp) + jnp.abs(sig.noise_amp) * h_max
+    para_lo, para_hi = sig.mean - swing, sig.mean + swing
+    tr_lo, tr_hi = jnp.min(sig.values), jnp.max(sig.values)
+    tr = sig.use_trace > 0.5
+    return (jnp.where(tr, tr_lo, para_lo), jnp.where(tr, tr_hi, para_hi))
+
+
 def to_trace(sig: Signal, horizon_s: float, dt: float) -> Signal:
     """Materialize any signal onto a uniform grid (useful for stacking
     scenarios whose parametric/trace families differ in cost, or for

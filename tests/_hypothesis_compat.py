@@ -1,5 +1,19 @@
-"""Import hypothesis if available; otherwise expose stubs that skip only
-the property-based tests so the rest of the suite still runs."""
+"""Use hypothesis when installed; otherwise run property tests on a
+DETERMINISTIC example grid instead of skipping them.
+
+The old stub skipped every ``@given`` test when hypothesis was absent, so
+environments without the dependency silently lost the whole property
+suite (11 skips). The fallback here keeps the property tests *executing*:
+each strategy knows how to draw deterministic examples from a seeded RNG,
+and ``given`` expands into ``pytest.mark.parametrize`` over a fixed draw
+count — less adversarial than hypothesis' shrinking search, but the
+invariants stay enforced everywhere.
+
+Set ``REPRO_REQUIRE_HYPOTHESIS=1`` (CI does) to hard-fail when the real
+library is missing rather than degrade to the fallback grid.
+"""
+
+import os
 
 import pytest
 
@@ -8,27 +22,79 @@ try:
 
     HAS_HYPOTHESIS = True
 except ModuleNotFoundError:  # pragma: no cover - exercised when dep absent
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+        raise ImportError(
+            "REPRO_REQUIRE_HYPOTHESIS is set but hypothesis is not "
+            "installed — install the [test] extra (pip install -e .[test])")
     HAS_HYPOTHESIS = False
 
-    class _StrategyStub:
-        """Accepts any strategy constructor call at decoration time."""
+    import random
 
-        def __getattr__(self, name):
-            return lambda *a, **k: None
+    _FALLBACK_EXAMPLES = 8   # draws per @given test in fallback mode
 
-    st = _StrategyStub()
+    class _Strategy:
+        """Minimal stand-in: a deterministic draw function."""
 
-    def settings(*a, **k):
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _StrategyFactory:
+        """The subset of hypothesis.strategies the suite uses."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            return _Strategy(lambda rng: [
+                elements.example(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        def __getattr__(self, name):   # unknown strategy -> loud failure
+            raise AttributeError(
+                f"fallback strategies don't implement st.{name}; install "
+                "hypothesis or add it to _hypothesis_compat")
+
+    st = _StrategyFactory()
+
+    def settings(*_a, **_k):
+        """Fallback ignores example-count/deadline tuning."""
         return lambda f: f
 
-    def given(*a, **k):
-        def deco(f):
-            @pytest.mark.skip(reason="hypothesis not installed")
-            def stub():
-                pass
+    def given(**strategies):
+        """Expand into a parametrize over a deterministic example grid.
+        Draws are seeded from the test name, so the grid is stable across
+        runs and machines (reproducible failures, cacheable results)."""
+        if not strategies:
+            raise TypeError("fallback given() supports keyword strategies "
+                            "only (all in-repo usages are kwargs-style)")
+        names = tuple(strategies)
 
-            stub.__name__ = f.__name__
-            stub.__doc__ = f.__doc__
-            return stub
+        def deco(f):
+            rng = random.Random(f"{f.__module__}.{f.__name__}")
+            cases = [
+                # pytest wants bare values (not 1-tuples) for one argname
+                (strategies[names[0]].example(rng) if len(names) == 1
+                 else tuple(strategies[n].example(rng) for n in names))
+                for _ in range(_FALLBACK_EXAMPLES)
+            ]
+            return pytest.mark.parametrize(",".join(names), cases)(f)
 
         return deco

@@ -1,5 +1,10 @@
 """Sharded-path tests. jax locks the device count at first init, so these
 run in a subprocess with xla_force_host_platform_device_count=8.
+
+Skip guards are per-test CAPABILITY probes (hasattr on the exact APIs a
+test drives), not a module-wide version gate: the old blanket skip
+silently benched every test here whenever ANY newer API was missing, even
+the ones (mesh + NamedSharding jit) the pinned jax floor runs fine.
 """
 
 import os
@@ -10,19 +15,33 @@ import textwrap
 import jax
 import pytest
 
-# These tests drive jax.sharding.AxisType / jax.shard_map / jax.lax.pcast,
-# which the pinned jax floor (0.4.x) predates — skip on version skew
-# instead of failing so CI stays green on the old pin.
-_SKEW = not (
-    hasattr(jax.sharding, "AxisType")
-    and hasattr(jax, "shard_map")
-    and hasattr(jax.lax, "pcast")
-)
-pytestmark = pytest.mark.skipif(
-    _SKEW, reason="jax version skew: sharded-path APIs "
-    "(jax.sharding.AxisType / jax.shard_map / jax.lax.pcast) unavailable")
+_CAPS = {
+    "make_mesh": hasattr(jax, "make_mesh"),
+    "shard_map": hasattr(jax, "shard_map"),
+    "pcast": hasattr(jax.lax, "pcast"),
+}
+
+
+def _requires(*caps):
+    missing = [c for c in caps if not _CAPS[c]]
+    return pytest.mark.skipif(
+        bool(missing), reason=f"jax lacks {'/'.join(missing) or 'nothing'}")
+
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# prepended to every subprocess: build a mesh on any supported jax —
+# axis_types is a newer keyword, explicit sharding mode works without it
+_MESH_HELPER = """
+import jax
+
+def mk_mesh(shape, names):
+    try:
+        at = (jax.sharding.AxisType.Auto,) * len(shape)
+        return jax.make_mesh(shape, names, axis_types=at)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, names)
+"""
 
 
 def _run_sub(code: str, timeout=560):
@@ -30,13 +49,14 @@ def _run_sub(code: str, timeout=560):
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     r = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
+        [sys.executable, "-c", _MESH_HELPER + textwrap.dedent(code)],
         capture_output=True, text=True, timeout=timeout, env=env,
     )
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     return r.stdout
 
 
+@_requires("make_mesh")
 def test_sharded_train_step_matches_unsharded():
     """FSDP+TP on a (2,4) mesh must produce the same loss trajectory as the
     single-device run (numerical tolerance)."""
@@ -68,8 +88,7 @@ def test_sharded_train_step_matches_unsharded():
             ref.append(float(m["loss"]))
 
         # sharded
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = mk_mesh((2, 4), ("data", "model"))
         ctx = make_ctx(False, tp_size=4, dp_size=2)
         shape = ShapeConfig("t", 64, 8, "train")
         sps = train_state_pspecs(cfg, ctx, opt, mesh)
@@ -90,6 +109,7 @@ def test_sharded_train_step_matches_unsharded():
     assert "LOSSES" in out
 
 
+@_requires("make_mesh")
 def test_elastic_checkpoint_restore_across_mesh_shapes():
     """Checkpoint written from a (2,4) mesh restores onto (8,1) and (1,1)
     (elastic scaling / shrink-to-recover)."""
@@ -109,16 +129,14 @@ def test_elastic_checkpoint_restore_across_mesh_shapes():
         state = {"params": params, "opt": opt.init(params), "step": jnp.int32(3)}
         d = tempfile.mkdtemp()
 
-        mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh1 = mk_mesh((2, 4), ("data", "model"))
         ctx1 = make_ctx(False, tp_size=4)
         ns1 = jax.tree.map(lambda p: NamedSharding(mesh1, p),
                            train_state_pspecs(cfg, ctx1, opt, mesh1))
         sharded = jax.device_put(state, ns1)
         save(d, 3, sharded)
 
-        mesh2 = jax.make_mesh((8, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh2 = mk_mesh((8, 1), ("data", "model"))
         ctx2 = make_ctx(False, tp_size=1)
         ns2 = jax.tree.map(lambda p: NamedSharding(mesh2, p),
                            train_state_pspecs(cfg, ctx2, opt, mesh2))
@@ -132,6 +150,52 @@ def test_elastic_checkpoint_restore_across_mesh_shapes():
     assert "ELASTIC OK" in out
 
 
+@_requires("make_mesh")
+def test_fleet_with_thermals_shards_across_devices():
+    """run_fleet with the cooling loop enabled, replica axis device-put
+    across all 8 host devices: the sharded sweep must match the
+    single-device run replica by replica (rack temps, throttle seconds and
+    the standard accounting all thread through vmap + sharding)."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.sim import tiny_cluster
+        from repro.core import build_statics, init_state, load_jobs, run_fleet
+        from repro.data import synth_workload
+        from repro.scenarios import sample_scenarios
+
+        cfg = tiny_cluster(thermal_enabled=True, rack_tau_s=120.0,
+                           thermal_trip_c=22.0, throttle_start_c=20.0,
+                           throttle_full_c=30.0)
+        jobs, bank = synth_workload(cfg, 24, 600.0, seed=0)
+        statics = build_statics(cfg, bank)
+        state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+        scns = sample_scenarios(cfg, 8, seed=3)
+
+        fs_ref, tel_ref = run_fleet(cfg, statics, state, 400, "fcfs",
+                                    scenarios=scns, summary_only=True)
+
+        mesh = mk_mesh((8,), ("replica",))
+        shard = lambda t: jax.device_put(
+            t, jax.tree.map(lambda _: NamedSharding(mesh, P("replica")), t))
+        fs_sh, tel_sh = run_fleet(cfg, statics, state, 400, "fcfs",
+                                  scenarios=shard(scns), summary_only=True)
+
+        hot = np.asarray(fs_ref.peak_rack_c) >= cfg.thermal_trip_c
+        assert hot.any(), "no replica crossed the trip threshold"
+        for f in fs_ref._fields:
+            a, b = getattr(fs_ref, f), getattr(fs_sh, f)
+            if f == "key":
+                a, b = jax.random.key_data(a), jax.random.key_data(b)
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6,
+                err_msg=f"fleet field {f} diverged under sharding")
+        print("FLEET_THERMAL OK")
+    """)
+    assert "FLEET_THERMAL OK" in out
+
+
+@_requires("make_mesh", "shard_map", "pcast")
 def test_distributed_ppo_module_trains():
     """repro.rl.distributed: shard_map PPO with int8 grad all-reduce."""
     out = _run_sub("""
@@ -145,8 +209,7 @@ def test_distributed_ppo_module_trains():
         cfg = tiny_cluster(sched_max_candidates=4)
         wls = [synth_workload(cfg, 16, 600.0, seed=s) for s in range(2)]
         env = SchedEnv(cfg, wls, episode_steps=6, sim_steps_per_action=5)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = mk_mesh((8,), ("data",))
         params, hist = distributed_ppo_train(
             env, mesh, cfg=PPOConfig(n_envs=8, rollout_len=6, n_epochs=1,
                                      n_minibatches=1),
@@ -159,6 +222,7 @@ def test_distributed_ppo_module_trains():
     assert "DIST_PPO OK" in out
 
 
+@_requires("make_mesh", "shard_map", "pcast")
 def test_distributed_ppo_with_compressed_psum():
     """shard_map DP PPO gradient step with int8-compressed all-reduce."""
     out = _run_sub("""
@@ -168,8 +232,7 @@ def test_distributed_ppo_with_compressed_psum():
         from repro.optim.compress import compressed_psum
         from repro.rl.policy import ActorCritic
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = mk_mesh((8,), ("data",))
         pol = ActorCritic(16, 4)
         params = pol.init(jax.random.key(0))
         obs = jax.random.normal(jax.random.key(1), (64, 16))
