@@ -383,6 +383,98 @@ def bench_thermal_smoke() -> List[Row]:
     ]
 
 
+def bench_faults() -> List[Row]:
+    """Resilience twin (docs/resilience.md): the TX-GAIA replay hour with
+    event-sampled node + rack fault clocks, checkpoint/restart and retry
+    budgets on, per-tick vs ``macro=True`` (fault crossings join the
+    breakpoint set). The old per-tick Bernoulli engine forfeited the
+    macro speedup whenever MTBF was finite — the speedup in the macro
+    row's derived field is what the clock formulation buys back."""
+    from repro.configs.sim import tx_gaia
+    from repro.core import build_statics, init_state, load_jobs, run_episode, summary
+    from repro.data import synth_workload
+
+    cfg = tx_gaia(max_jobs=256, max_nodes_per_job=16,
+                  node_mtbf_hours=6.0, node_repair_hours=0.5,
+                  rack_mtbf_hours=48.0, rack_repair_hours=1.0,
+                  ckpt_interval_s=900.0, ckpt_overhead_s=30.0,
+                  max_job_retries=4)
+    jobs, bank = synth_workload(cfg, 200, 3600.0, seed=0)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    n_steps = 3600
+
+    run_p = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "replay",
+                                          summary_only=True))
+    run_m = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "replay",
+                                          macro=True))
+    dt_p = _timeit(run_p, state, n=2)
+    dt_m = _timeit(run_m, state, n=2)
+    fs_p, tel_p = run_p(state)
+    fs_m, tel_m = run_m(state)
+    sp, sm = summary(fs_p, tel_p), summary(fs_m, tel_m)
+    match = (sm["completed"] == sp["completed"]
+             and sm["killed_by_failures"] == sp["killed_by_failures"]
+             and abs(sm["energy_kwh"] - sp["energy_kwh"]) < 0.05)
+    return [
+        ("replay_tx_gaia_1h_faults", dt_p / n_steps * 1e6,
+         f"completed={sp['completed']:.0f};killed={sp['killed_by_failures']:.0f};"
+         f"lost_node_s={sp['lost_node_seconds']:.0f};"
+         f"goodput_frac={sp['goodput_frac']:.3f};"
+         f"steps_per_s={n_steps/dt_p:,.0f}"),
+        ("replay_tx_gaia_1h_faults_macro", dt_m / n_steps * 1e6,
+         f"completed={sm['completed']:.0f};killed={sm['killed_by_failures']:.0f};"
+         f"steps_per_s={n_steps/dt_m:,.0f};"
+         f"speedup_vs_pertick={dt_p/dt_m:.2f}x;"
+         f"skip_ratio={sm['macro_skip_ratio']:.1f};match_pertick={match}"),
+    ]
+
+
+def bench_faults_smoke() -> List[Row]:
+    """CI smoke for the fault engine: short-MTBF tiny cluster with rack
+    faults + checkpointing, per-tick vs macro. The derived field asserts
+    macro matched per-tick (completed, kill count, lost node-seconds,
+    energy) AND that faults actually fired, so CI gates the exactness of
+    the event-sampled clocks — the property the macro speedup rests on."""
+    from repro.configs.sim import tiny_cluster
+    from repro.core import build_statics, init_state, load_jobs, run_episode, summary
+    from repro.data import synth_workload
+
+    cfg = tiny_cluster(node_mtbf_hours=0.5, node_repair_hours=0.2,
+                       rack_mtbf_hours=1.5, rack_repair_hours=0.3,
+                       ckpt_interval_s=240.0, ckpt_overhead_s=20.0,
+                       max_job_retries=3)
+    jobs, bank = synth_workload(cfg, 24, 1500.0, seed=3)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    n_steps = 2000
+
+    run_p = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "fcfs",
+                                          summary_only=True))
+    run_m = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "fcfs",
+                                          macro=True))
+    dt_p = _timeit(run_p, state, n=2)
+    dt_m = _timeit(run_m, state, n=2)
+    fs_p, tel_p = run_p(state)
+    fs_m, tel_m = run_m(state)
+    sp, sm = summary(fs_p, tel_p), summary(fs_m, tel_m)
+    match = (sm["completed"] == sp["completed"]
+             and sm["killed_by_failures"] == sp["killed_by_failures"]
+             and abs(sm["lost_node_seconds"] - sp["lost_node_seconds"]) < 1e-2
+             and abs(sm["energy_kwh"] - sp["energy_kwh"]) < 1e-3)
+    killed = sp["killed_by_failures"] > 0
+    return [
+        ("faults_smoke_pertick", dt_p / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_p:,.0f};completed={sp['completed']:.0f};"
+         f"killed={sp['killed_by_failures']:.0f};"
+         f"goodput_frac={sp['goodput_frac']:.3f};faults_fired={killed}"),
+        ("faults_smoke_macro", dt_m / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_m:,.0f};completed={sm['completed']:.0f};"
+         f"speedup_vs_pertick={dt_p/dt_m:.2f}x;"
+         f"skip_ratio={sm['macro_skip_ratio']:.1f};match_pertick={match}"),
+    ]
+
+
 def bench_vectorized_envs() -> List[Row]:
     """Beyond-paper: the JAX rewrite's RL-scale win — vmapped datacenters."""
     from repro.configs.sim import tiny_cluster

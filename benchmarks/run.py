@@ -9,6 +9,8 @@
   congestion_bw_*          network-congestion model [14]
   vmapped_sim_*            beyond-paper: vectorized-twin RL throughput
   rollout_* / ppo_iteration  lightweight-state RL rollout engine (BENCH_4)
+  replay_tx_gaia_1h_faults[_macro] / faults_smoke_*  resilience twin:
+                           event-sampled fault clocks under macro (BENCH_7)
   fleet_*replicas          beyond-paper: scenario-sweep fleet throughput
   dispatch_* / power_scatter_*  sort-free placement + fused power kernel
   pallas_*                 kernel microbenches vs oracles
@@ -68,6 +70,7 @@ def _benches(smoke: bool):
 
     if smoke:
         from benchmarks.bench_sim import (
+            bench_faults_smoke,
             bench_macro_smoke,
             bench_thermal_smoke,
             bench_vectorized_envs,
@@ -78,6 +81,7 @@ def _benches(smoke: bool):
             bench_vectorized_envs,
             bench_macro_smoke,
             bench_thermal_smoke,
+            bench_faults_smoke,
             _named(bench_policy_grid, "bench_policy_grid", smoke=True),
             _named(bench_rl, "bench_rl", smoke=True),
         ]
@@ -91,6 +95,8 @@ def _benches(smoke: bool):
     )
     from benchmarks.bench_sim import (
         bench_congestion_model,
+        bench_faults,
+        bench_faults_smoke,
         bench_macro_smoke,
         bench_power_prediction,
         bench_replay_throughput,
@@ -104,8 +110,10 @@ def _benches(smoke: bool):
     return [
         bench_replay_throughput,
         bench_thermal,
+        bench_faults,
         bench_macro_smoke,
         bench_thermal_smoke,
+        bench_faults_smoke,
         bench_scheduler_comparison,
         bench_power_prediction,
         bench_congestion_model,

@@ -63,9 +63,30 @@ class SimConfig:
     bisection_gbps: float = 2_400.0   # system bisection bandwidth
     congestion_exp: float = 1.5       # slowdown = (1 + load^exp) beyond knee
     congestion_knee: float = 0.7      # utilization where contention kicks in
-    # failures (sustainability studies under faults)
-    node_mtbf_hours: float = 0.0      # 0 = failures off
+    # failures (sustainability studies under faults; docs/resilience.md)
+    node_mtbf_hours: float = 0.0      # 0 = node failures off
     node_repair_hours: float = 4.0
+    # correlated failure domains: a rack fault (cooling loop / PDU) downs
+    # every node in the rack at once. 0 = rack faults off.
+    rack_mtbf_hours: float = 0.0
+    rack_repair_hours: float = 2.0
+    # job resilience semantics: killed jobs restart from their last
+    # simulated checkpoint (0 = restart from zero work, the legacy rule);
+    # each checkpoint write costs ckpt_overhead_s of runtime at full power.
+    ckpt_interval_s: float = 0.0
+    ckpt_overhead_s: float = 0.0
+    # retry budget: a job killed more than max_job_retries times goes
+    # terminal FAILED (0 = unbounded retries, the legacy rule). Requeued
+    # jobs wait requeue_backoff_s * mult**(n_failures-1) before eligible.
+    max_job_retries: int = 0
+    requeue_backoff_s: float = 0.0
+    requeue_backoff_mult: float = 2.0
+    # scenario-driven grid outages / maintenance windows (Scenario.outages)
+    outages_enabled: bool = False
+    # graceful-degradation ladder (throttle -> gate -> drain -> evict) as
+    # a schedulable action (SchedEnv) / forced by outage brownout levels
+    degrade_enabled: bool = False
+    degrade_throttle_frac: float = 0.7
     # demand response (DCFlex-style): cap facility power by DVFS-throttling
     # running jobs (linear power/progress model). 0 = uncapped.
     power_cap_w: float = 0.0
@@ -96,6 +117,14 @@ class SimConfig:
     @property
     def n_nodes(self) -> int:
         return sum(t.count for t in self.node_types)
+
+    @property
+    def resilience_on(self) -> bool:
+        """Python-bool gate for the fault engine: False compiles the
+        legacy fault-free program bit-identically (no extra state reads,
+        no PRNG consumption, no horizon terms)."""
+        return (self.node_mtbf_hours > 0 or self.rack_mtbf_hours > 0
+                or self.outages_enabled or self.degrade_enabled)
 
     @property
     def n_types(self) -> int:

@@ -3,6 +3,16 @@ digital twin — trace replay, rescheduling, power/cooling/carbon chain,
 network congestion, failures — as a pure-JAX vectorized simulator.
 """
 
+from repro.core.faults import (
+    LVL_DRAIN,
+    LVL_EVICT,
+    LVL_GATE,
+    LVL_NORMAL,
+    LVL_THROTTLE,
+    apply_faults,
+    effective_level,
+    next_fault_event,
+)
 from repro.core.fleet import fleet_summary, policy_scenario_grid, run_fleet
 from repro.core.placement import (
     PLACE_IDS,
@@ -34,6 +44,7 @@ from repro.core.sim import (
 from repro.core.state import (
     DONE,
     EMPTY,
+    FAILED,
     QUEUED,
     RUNNING,
     SimState,

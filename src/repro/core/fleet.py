@@ -35,6 +35,7 @@ from repro.core.placement import Policy, make_policy, stack_policies
 from repro.core.sim import StepOut, TelemetrySummary, run_episode, summary
 from repro.core.state import SimState, Statics
 from repro.scenarios.scenario import Scenario, n_replicas, stack_scenarios
+from repro.utils import invariants
 
 
 def _ensure_batched(scenarios) -> Scenario:
@@ -228,8 +229,15 @@ def run_fleet(
                 "to the edge slice")
         state = state._replace(workload=jnp.asarray(ids_host))
     kw_items = tuple(sorted(kw.items()))
-    return _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
-                  scheduler, kw_items)
+    out = _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
+                 scheduler, kw_items)
+    if invariants.enabled():
+        # post-hoc eager audit of every replica's final state (the checks
+        # broadcast over the leading replica axis); the per-step checkify
+        # suite only instruments un-traced run_episode calls, so this is
+        # what REPRO_CHECKIFY buys on the vmapped fleet path
+        invariants.check_state(cfg, statics, out[0])
+    return out
 
 
 def fleet_summary(

@@ -31,9 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.sim import SimConfig
+from repro.core import faults as flt
 from repro.core import placement as plc
 from repro.core import schedulers as sched
 from repro.core import thermal as thm
+from repro.core.faults import release_jobs as _release
 from repro.core.network import congestion_slowdown
 from repro.core.placement import Policy
 from repro.core.power import (
@@ -79,14 +81,20 @@ class StepOut(NamedTuple):
     rack_max_c: jax.Array      # hottest rack outlet this tick
     cop: jax.Array             # cooling plant COP in effect
     thermal_throttle_s_step: jax.Array  # dt if any rack was derated else 0
+    # resilience twin telemetry (core.faults); zeros with resilience off
+    killed_now: jax.Array      # jobs killed by node loss this tick
+    lost_node_s_step: jax.Array  # node-seconds of progress destroyed
+    degrade_level: jax.Array   # effective ladder level in force (f32)
 
 
-def _parse_weights(reward_weights) -> Tuple[float, float, float, float, float]:
-    if len(reward_weights) not in (4, 5):
-        raise ValueError("reward_weights must have 4 or 5 entries")
+def _parse_weights(reward_weights) -> Tuple[
+        float, float, float, float, float, float]:
+    if len(reward_weights) not in (4, 5, 6):
+        raise ValueError("reward_weights must have 4, 5 or 6 entries")
     w_thr, w_en, w_co2, w_q = reward_weights[:4]
-    w_cost = reward_weights[4] if len(reward_weights) == 5 else 0.0
-    return w_thr, w_en, w_co2, w_q, w_cost
+    w_cost = reward_weights[4] if len(reward_weights) >= 5 else 0.0
+    w_lost = reward_weights[5] if len(reward_weights) == 6 else 0.0
+    return w_thr, w_en, w_co2, w_q, w_cost, w_lost
 
 
 def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
@@ -99,10 +107,15 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
     Keeping this a single code path is what makes fast-forwarded ticks
     bit-identical to per-tick quiet ticks — both run EXACTLY these float
     ops in this order; they differ only in where the inputs (power chain,
-    congestion rate, queue/util counts) come from. ``thermal_enabled`` is
-    a Python bool, so the thermal-off tail compiles to byte-for-byte the
-    legacy static-COP program."""
-    w_thr, w_en, w_co2, w_q, w_cost = _parse_weights(reward_weights)
+    congestion rate, queue/util counts) come from. ``thermal_enabled``
+    and ``resilience_on`` are Python bools, so with both off the tail
+    compiles to byte-for-byte the legacy program.
+
+    ``killed_now``/``lost_now`` are the fault engine's per-tick kill and
+    lost-work scalars — the full step passes them through, fast ticks
+    pass nothing (faults fire only on event ticks, so zeros are exact).
+    """
+    w_thr, w_en, w_co2, w_q, w_cost, w_lost = _parse_weights(reward_weights)
     scn = statics.scenario
     nameplate = max(cfg.nameplate_it_w, 1.0)
 
@@ -115,7 +128,13 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
         queued: jax.Array,
         running: jax.Array,
         util: jax.Array,
+        killed_now: jax.Array | None = None,
+        lost_now: jax.Array | None = None,
     ) -> Tuple[SimState, StepOut]:
+        if killed_now is None:
+            killed_now = jnp.float32(0.0)
+        if lost_now is None:
+            lost_now = jnp.float32(0.0)
         # --- grid signals at t (scenario engine)
         carbon_g = eval_signal(scn.carbon, state.t)          # gCO2/kWh
         price = eval_signal(scn.price, state.t)              # $/kWh
@@ -160,6 +179,34 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
             cop = jnp.maximum(
                 cfg.cop_base + cfg.cop_wetbulb_coef * (wb - cfg.wetbulb_ref_c),
                 cfg.cop_min)
+
+        if cfg.resilience_on:
+            # --- graceful-degradation ladder (core.faults): levels >=
+            # THROTTLE clock-throttle dynamic power and progress exactly
+            # like the DVFS cap does (idle power burns at any clock);
+            # the periodic checkpoint-write cost drags per-job progress
+            # while power keeps burning. Constant across a quiet macro
+            # segment (outage edges are breakpoints, degrade_level only
+            # changes at decision ticks), so fast ticks re-running this
+            # are exact.
+            dg_lvl = flt.effective_level(cfg, state, statics)
+            dg = flt.degrade_clock(cfg, dg_lvl)
+            dg_on = dg_lvl >= flt.LVL_THROTTLE
+            idle_dg = jnp.sum(statics.idle_w * state.node_up)
+            dyn_dg = jnp.maximum(p.it_w - idle_dg, 0.0)
+            r_dg = (idle_dg + dg * dyn_dg) / jnp.maximum(p.it_w, 1.0)
+            r_dg = jnp.where(dg_on, r_dg, 1.0)
+            p = p._replace(
+                it_w=p.it_w * r_dg, input_w=p.input_w * r_dg,
+                cooling_w=p.cooling_w * r_dg, facility_w=p.facility_w * r_dg,
+                gflops=p.gflops * jnp.where(dg_on, dg, 1.0),
+            )
+            rate = rate * jnp.where(dg_on, dg, 1.0)
+            if cfg.ckpt_overhead_s > 0:
+                rate = rate * flt.ckpt_drag(cfg, state)
+            dg_level_f = dg_lvl.astype(jnp.float32)
+        else:
+            dg_level_f = jnp.float32(0.0)
 
         # --- demand response: DVFS-throttle to the facility power cap
         # (DCFlex-style [3]; linear dynamic-power/progress model). The cap
@@ -226,7 +273,9 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
             th_step = jnp.float32(0.0)
 
         # reward: throughput-positive, energy/carbon/queue-negative,
-        # normalized to O(1) per step
+        # normalized to O(1) per step; the lost-work penalty charges the
+        # node-seconds a kill destroyed against the fleet's node-second
+        # budget for the tick
         reward = (
             w_thr * n_done
             - w_en * e_step / jnp.maximum(cfg.n_nodes * 0.4 * dt_h, 1e-9) * 0.1
@@ -235,6 +284,7 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
             - w_cost * cost_step
             / jnp.maximum(cfg.n_nodes * 0.4 * dt_h * cfg.price_mean_usd_kwh, 1e-9)
             * 0.1
+            - w_lost * lost_now / jnp.maximum(cfg.n_nodes * cfg.dt, 1e-9)
         )
 
         out = StepOut(
@@ -245,6 +295,8 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
             carbon_gkwh=carbon_g, price_usd_kwh=price, power_cap_w=cap_w,
             cost_usd_step=cost_step, throttle=throttle,
             rack_max_c=rack_max, cop=cop, thermal_throttle_s_step=th_step,
+            killed_now=killed_now, lost_node_s_step=lost_now,
+            degrade_level=dg_level_f,
         )
         return state, out
 
@@ -265,56 +317,12 @@ def _counts_and_util(state: SimState, statics: Statics):
 
 
 # ---------------------------------------------------------------------------
-def _apply_failures(cfg: SimConfig, state: SimState) -> SimState:
-    if cfg.node_mtbf_hours <= 0:
-        return state
-    key, k1 = jax.random.split(state.key)
-    N = state.node_up.shape[0]
-    p_fail = cfg.dt / (cfg.node_mtbf_hours * 3600.0)
-    fails = jax.random.bernoulli(k1, p_fail, (N,)) & (state.node_up > 0.5)
-    node_up = jnp.where(fails, 0.0, state.node_up)
-    repair_t = jnp.where(fails, state.t + cfg.node_repair_hours * 3600.0,
-                         state.repair_t)
-    # repairs
-    repaired = (node_up < 0.5) & (state.t >= repair_t)
-    node_up = jnp.where(repaired, 1.0, node_up)
-
-    # kill & requeue jobs touching failed nodes
-    J, K = state.placement.shape
-    place = state.placement
-    on_failed = jnp.any(
-        jnp.where(place >= 0, fails[jnp.where(place >= 0, place, 0)], False),
-        axis=1,
-    ) & (state.jstate == RUNNING)
-    # release resources of killed jobs
-    free = _release(state.free, state, on_failed)
-    jstate = jnp.where(on_failed, QUEUED, state.jstate)
-    work_left = jnp.where(on_failed, state.dur_est, state.work_left)
-    placement = jnp.where(on_failed[:, None], -1, place)
-    return state._replace(
-        key=key, node_up=node_up, repair_t=repair_t, free=free,
-        jstate=jstate, work_left=work_left, placement=placement,
-        n_failures=state.n_failures + on_failed.astype(jnp.int32),
-        n_killed=state.n_killed + jnp.sum(on_failed),
-    )
-
-
-def _release(free: jax.Array, state: SimState, mask: jax.Array) -> jax.Array:
-    """Add back resources of jobs in `mask` (J,) to the free pool.
-
-    Routed through ``power.scatter_add_nodes``: small configs get the
-    dense one-hot contraction (under vmap the XLA scatter-add runs a
-    generic per-env scatter loop on CPU, while the contraction is one
-    batched matmul — this sits on the RL-rollout hot path, every
-    completion sweep of every sub-step of every env)."""
-    from repro.core.power import scatter_add_nodes
-
-    place = state.placement
-    valid = (place >= 0) & mask[:, None]
-    amounts = state.req[:, :, None] * valid[None, :, :]      # (R,J,K)
-    ids = jnp.where(valid, place, -1)
-    return scatter_add_nodes(ids.reshape(-1), amounts.reshape(NRES, -1),
-                             free.shape[1], base=free)
+# Node failures/repairs, outages and the degradation ladder live in
+# ``core.faults`` (event-sampled clocks — exact macro breakpoints, zero
+# per-tick PRNG draws; the old inline Bernoulli sweep is gone, and with
+# it the unclamped dt/mtbf probability it handed jax.random.bernoulli).
+# ``_release`` is re-exported from there: dispatch/completions below and
+# the fault engine's kill path must share one resource-return routine.
 
 
 def _complete_jobs(cfg: SimConfig, state: SimState) -> Tuple[SimState, jax.Array]:
@@ -402,16 +410,25 @@ def make_step(
     tail = _make_tail(cfg, statics, reward_weights,
                       use_thermal_kernel=use_thermal_kernel)
 
-    if cfg.thermal_enabled:
-        # tripped racks accept no NEW jobs (core.thermal.node_trip_ok):
-        # fold the trip gate into node_up for the DISPATCH stage only, so
-        # every selection/placement feasibility check — all five placement
-        # strategies, EASY's backfill window, fits_now_mask — sees it
-        # through one seam, while power/progress still run the node (the
-        # continuous throttle handles hot-but-running racks)
+    if cfg.thermal_enabled or cfg.resilience_on:
+        # dispatch-only gates folded into node_up through ONE seam, so
+        # every selection/placement feasibility check — all five
+        # placement strategies, EASY's backfill window, fits_now_mask —
+        # sees them while power/progress still run the nodes:
+        # - thermal: tripped racks accept no NEW jobs
+        #   (core.thermal.node_trip_ok; the continuous throttle handles
+        #   hot-but-running racks);
+        # - resilience: degradation-ladder levels >= LVL_GATE (RL drain/
+        #   gate actions, outage brownouts) block all new dispatch.
         def _dispatch_view(s: SimState) -> SimState:
-            ok = thm.node_trip_ok(cfg, s, statics)
-            return s._replace(node_up=jnp.where(ok, s.node_up, 0.0))
+            nu = s.node_up
+            if cfg.thermal_enabled:
+                ok = thm.node_trip_ok(cfg, s, statics)
+                nu = jnp.where(ok, nu, 0.0)
+            if cfg.resilience_on:
+                gated = flt.effective_level(cfg, s, statics) >= flt.LVL_GATE
+                nu = jnp.where(gated, 0.0, nu)
+            return s._replace(node_up=nu)
     else:
         def _dispatch_view(s: SimState) -> SimState:
             return s
@@ -428,7 +445,11 @@ def make_step(
 
     def step(state: SimState, action: jax.Array) -> Tuple[SimState, StepOut]:
         state = state._replace(t=state.t + cfg.dt)
-        state = _apply_failures(cfg, state)
+        if cfg.resilience_on:
+            state, killed_now, lost_now = flt.apply_faults(cfg, state,
+                                                           statics)
+        else:
+            killed_now = lost_now = None
         state, n_done = _complete_jobs(cfg, state)
 
         # --- dispatch
@@ -476,7 +497,8 @@ def make_step(
         p: PowerOut = compute_power(cfg, state, statics, use_kernel=use_power_kernel)
         rate, net_load = congestion_slowdown(cfg, state, statics)
         queued, running, util = _counts_and_util(state, statics)
-        return tail(state, p, rate, net_load, n_done, queued, running, util)
+        return tail(state, p, rate, net_load, n_done, queued, running, util,
+                    killed_now, lost_now)
 
     return step
 
@@ -496,6 +518,8 @@ class TelemetrySummary(NamedTuple):
     cost_usd: jax.Array
     reward: jax.Array
     thermal_throttle_s: jax.Array  # seconds any rack was thermally derated
+    killed: jax.Array          # jobs killed by node loss (core.faults)
+    lost_node_s: jax.Array     # node-seconds of progress destroyed
     # per-step means
     mean_facility_w: jax.Array
     mean_it_w: jax.Array
@@ -522,14 +546,29 @@ class TelemetrySummary(NamedTuple):
     macro_steps: jax.Array
 
 
-def _telem_zero() -> TelemetrySummary:
+def _telem_zero(resilience_on: bool = True) -> TelemetrySummary:
     z = jnp.float32(0.0)
-    return TelemetrySummary(*([z] * len(TelemetrySummary._fields)))
+    acc = TelemetrySummary(*([z] * len(TelemetrySummary._fields)))
+    if not resilience_on:
+        # With the fault engine off the killed/lost accumulators would be
+        # constant zeros — but even two dead loop-carried leaves perturb
+        # XLA's scan-body codegen enough to shift float rounding elsewhere
+        # in the step (observed: 1e-6 work_left drift on the thermal
+        # macro-vs-per-tick bit-identity pin). ``None`` is an EMPTY pytree
+        # node, so the compiled carry is leaf-for-leaf the legacy program;
+        # ``_telem_finalize`` restores concrete zeros for consumers.
+        acc = acc._replace(killed=None, lost_node_s=None)
+    return acc
 
 
 def _telem_update(acc: TelemetrySummary, out: StepOut,
-                  macro_inc: jax.Array | float = 1.0) -> TelemetrySummary:
-    # mean_* fields hold running sums until _telem_finalize divides by n
+                  macro_inc: jax.Array | float = 1.0,
+                  resilience_on: bool = True) -> TelemetrySummary:
+    # mean_* fields hold running sums until _telem_finalize divides by n.
+    # The killed/lost adds are Python-gated: with the fault engine off the
+    # addends are constant zeros, but even dead adds perturb XLA's scan-body
+    # codegen enough to shift float rounding elsewhere in the step — gating
+    # keeps the legacy per-tick program (and its bit-pinned outputs) intact.
     return TelemetrySummary(
         completed=acc.completed + out.completed_now,
         energy_kwh=acc.energy_kwh + out.energy_kwh_step,
@@ -538,6 +577,9 @@ def _telem_update(acc: TelemetrySummary, out: StepOut,
         reward=acc.reward + out.reward,
         thermal_throttle_s=acc.thermal_throttle_s
         + out.thermal_throttle_s_step,
+        killed=acc.killed + out.killed_now if resilience_on else acc.killed,
+        lost_node_s=acc.lost_node_s + out.lost_node_s_step
+        if resilience_on else acc.lost_node_s,
         mean_facility_w=acc.mean_facility_w + out.facility_w,
         mean_it_w=acc.mean_it_w + out.it_w,
         mean_pue=acc.mean_pue + out.pue,
@@ -559,10 +601,14 @@ def _telem_update(acc: TelemetrySummary, out: StepOut,
 
 def _telem_finalize(acc: TelemetrySummary) -> TelemetrySummary:
     n = jnp.maximum(acc.n_steps, 1.0)
-    return acc._replace(**{
+    acc = acc._replace(**{
         f: getattr(acc, f) / n
         for f in TelemetrySummary._fields if f.startswith("mean_")
     })
+    if acc.killed is None:   # resilience off: carried as empty nodes
+        acc = acc._replace(killed=jnp.float32(0.0),
+                           lost_node_s=jnp.float32(0.0))
+    return acc
 
 
 # ---------------------------------------------------------------------------
@@ -634,6 +680,11 @@ def _horizon_parts(cfg: SimConfig, state: SimState, statics: Statics,
         state.node_up < 0.5, state.repair_t, _BIG_T)))
     # demand-response cap windows open/close at schedule breakpoints
     next_t = jnp.minimum(next_t, next_cap_event(statics.scenario.power_cap, t))
+    if cfg.resilience_on:
+        # event-sampled fault clocks + outage-window edges are exact
+        # breakpoints (core.faults keeps every clock strictly future)
+        next_t = jnp.minimum(
+            next_t, flt.next_fault_event(cfg, state, statics, t))
 
     kf = jnp.float32(max_ticks)
     k_time = jnp.where(jnp.isfinite(next_t),
@@ -667,10 +718,14 @@ def quiet_horizon(
     The horizon is the min over the next arrival (submit crossing), next
     replay-eligibility crossing, next completion (conservative: assumes
     full-rate progress, minus one tick of float margin), next node repair,
-    and next cap-schedule breakpoint, clamped to ``max_ticks``. Stochastic
-    failures (``cfg.node_mtbf_hours > 0``) cannot be predicted — the
-    macro engine replays the per-tick Bernoulli draws during fast-forward
-    and stops when one fires, keeping the PRNG stream bit-identical.
+    next cap-schedule breakpoint, and — with the fault engine on — the
+    next event-sampled fault-clock crossing / outage-window edge
+    (``core.faults.next_fault_event``), clamped to ``max_ticks``.
+    Faults are EXACT breakpoints: the clocks are absolute times redrawn
+    only when they fire, so fast-forwarded ticks consume no randomness
+    and the PRNG stream stays bit-identical (the old per-tick Bernoulli
+    model had to be replayed tick-by-tick during fast-forward, which
+    forfeited the macro speedup whenever faults were enabled).
 
     ``assume_undispatchable``: queued-but-visible jobs normally force a
     zero horizon (selection might start one any tick). When the caller
@@ -726,9 +781,11 @@ def make_macro_step(
 
     Exactness: fast ticks advance time sequentially and re-run the SAME
     accounting tail as the full step, so job/queue state is bit-identical
-    to per-tick stepping, failures replay the identical Bernoulli stream,
-    and accumulators are bit-identical on configs where the power path is
-    shared (the dense-scatter budget, i.e. every test-sized config). On
+    to per-tick stepping, fault clocks fire at exact breakpoint ticks
+    with the identical PRNG stream (quiet ticks consume zero randomness;
+    core.faults), and accumulators are bit-identical on configs where the
+    power path is shared (the dense-scatter budget, i.e. every test-sized
+    config). On
     larger configs the fast tick refreshes per-node loads through a
     per-segment job->node count matrix — one ``chunk_ticks``-wide gemm
     instead of a J*K scatter per tick; the different summation order
@@ -753,7 +810,6 @@ def make_macro_step(
     dispatch_on = policy_mode or scheduler != "none"
     replay_gated = policy_mode or scheduler == "replay"
     eligibility_vis = (not policy_mode) and scheduler == "replay"
-    mtbf_on = cfg.node_mtbf_hours > 0
     # thermal breakpoints: the trip gate makes DISPATCH eligibility depend
     # on rack temps, which keep evolving across fast ticks. A segment must
     # therefore end the tick a rack crosses thermal_trip_c (either
@@ -773,7 +829,9 @@ def make_macro_step(
     # count-matrix gemm otherwise (see docstring)
     shared_power = use_dense_scatter(cfg.max_jobs * cfg.max_nodes_per_job, N)
     if update is None:
-        update = _telem_update
+        def update(acc, out, macro_inc=1.0):
+            return _telem_update(acc, out, macro_inc,
+                                 resilience_on=cfg.resilience_on)
 
     def power_chunk(s: SimState, cnt):
         """(ts, PowerOut-with-leading-C-axis) for the next C ticks under a
@@ -838,28 +896,21 @@ def make_macro_step(
 
         def peek_stop(s, t_next):
             # authoritative, side-effect free: an event tick is NOT
-            # committed here; the next full step replays it (including
-            # the identical failure Bernoulli draw — same key split)
+            # committed here; the next full step replays it. Faults need
+            # no peek at all — their clocks are deterministic absolute
+            # times already folded into next_event_t, and quiet ticks
+            # consume zero randomness (the Bernoulli replay that used to
+            # run here per fast tick is gone; core.faults).
             stop = jnp.any((s.jstate == RUNNING) & (s.work_left <= 0.0))
-            stop = stop | (t_next >= next_event_t)
-            if not mtbf_on:
-                return stop, s.key
-            key, k1 = jax.random.split(s.key)
-            p_fail = cfg.dt / (cfg.node_mtbf_hours * 3600.0)
-            fails = jax.random.bernoulli(k1, p_fail, (N,)) \
-                & (s.node_up > 0.5)
-            return stop | jnp.any(fails), key
+            return stop | (t_next >= next_event_t)
 
-        def commit(s, a, i, stop, t_next, key, p: PowerOut):
-            ns = s._replace(t=t_next, key=key) if mtbf_on \
-                else s._replace(t=t_next)
-            ns, o = tail(ns, p, rate, net_load, jnp.int32(0),
-                         queued, running, util)
+        def commit(s, a, i, stop, t_next, p: PowerOut):
+            ns, o = tail(s._replace(t=t_next), p, rate, net_load,
+                         jnp.int32(0), queued, running, util)
             na = update(a, o, 0.0)
-            fields = fast_fields + (("key",) if mtbf_on else ())
             s = s._replace(**{
                 f: _where_leaf(stop, getattr(s, f), getattr(ns, f))
-                for f in fields
+                for f in fast_fields
             })
             a = jax.tree.map(lambda old, new: jnp.where(stop, old, new),
                              a, na)
@@ -871,11 +922,11 @@ def make_macro_step(
             def body(c):
                 s, a, i, _ = c
                 t_next = s.t + cfg.dt
-                stop, key = peek_stop(s, t_next)
+                stop = peek_stop(s, t_next)
                 p = compute_power(cfg, s._replace(t=t_next), statics,
                                   use_kernel=use_power_kernel)
                 was_hot = s.rack_outlet_c >= trip_c
-                s, a, i = commit(s, a, i, stop, t_next, key, p)
+                s, a, i = commit(s, a, i, stop, t_next, p)
                 go = ~stop
                 if thermal_gate:   # authoritative trip-crossing breakpoint
                     go &= ~jnp.any((s.rack_outlet_c >= trip_c) != was_hot)
@@ -899,10 +950,10 @@ def make_macro_step(
             s, a, i, j, _, chk = c
             ts, pc = chk
             t_next = ts[j]
-            stop, key = peek_stop(s, t_next)
+            stop = peek_stop(s, t_next)
             p = jax.tree.map(lambda x: x[j], pc)
             was_hot = s.rack_outlet_c >= trip_c
-            s, a, i = commit(s, a, i, stop, t_next, key, p)
+            s, a, i = commit(s, a, i, stop, t_next, p)
             go = ~stop
             if thermal_gate:       # authoritative trip-crossing breakpoint
                 go &= ~jnp.any((s.rack_outlet_c >= trip_c) != was_hot)
@@ -967,14 +1018,39 @@ def run_episode(
     (``summary_only`` is implied) or windowed via ``telemetry_every``;
     window edges clamp the fast-forward horizon, so windowed results stay
     tick-aligned with the per-tick path.
+
+    With ``REPRO_CHECKIFY=1`` (``utils.invariants``; hard-enabled in CI)
+    and an eager call (un-traced ``state``), every committed step runs
+    the machine-invariant suite — resource conservation, placement/
+    jstate consistency, finite accumulators, bounded rack temps — via
+    ``checkify``, raising on the first violating tick. Traced callers
+    (e.g. ``run_fleet``'s inner jit) skip the per-step harness; the
+    fleet runner re-checks final states eagerly instead.
     """
+    from repro.utils import invariants
+
+    if summary_only and telemetry_every > 1:
+        raise ValueError(
+            "summary_only=True is episode-wide; it conflicts with "
+            f"telemetry_every={telemetry_every} (pick one)"
+        )
+    if telemetry_every > 1 and n_steps % telemetry_every:
+        raise ValueError(
+            f"n_steps={n_steps} not divisible by "
+            f"telemetry_every={telemetry_every}"
+        )
+    check_on = invariants.enabled() and not isinstance(
+        state.t, jax.core.Tracer)
+
     if macro:
         mstep = make_macro_step(cfg, statics, scheduler, **kw)
-        if summary_only and telemetry_every > 1:
-            raise ValueError(
-                "summary_only=True is episode-wide; it conflicts with "
-                f"telemetry_every={telemetry_every} (pick one)"
-            )
+        if check_on:
+            raw_mstep = mstep
+
+            def mstep(s, a, n):
+                s, a, took = raw_mstep(s, a, n)
+                invariants.check_state(cfg, statics, s)
+                return s, a, took
 
         def run_window(state, n):
             def wcond(c):
@@ -986,57 +1062,63 @@ def run_episode(
                 return (s, a, ticks + took)
 
             s, a, _ = jax.lax.while_loop(
-                wcond, wbody, (state, _telem_zero(), jnp.int32(0)))
+                wcond, wbody, (state, _telem_zero(cfg.resilience_on), jnp.int32(0)))
             return s, _telem_finalize(a)
 
         if telemetry_every <= 1:
-            return run_window(state, n_steps)
-        if n_steps % telemetry_every:
-            raise ValueError(
-                f"n_steps={n_steps} not divisible by "
-                f"telemetry_every={telemetry_every}"
-            )
-        return jax.lax.scan(
-            lambda s, _: run_window(s, telemetry_every), state, None,
-            length=n_steps // telemetry_every)
+            def go(state):
+                return run_window(state, n_steps)
+        else:
+            def go(state):
+                return jax.lax.scan(
+                    lambda s, _: run_window(s, telemetry_every), state,
+                    None, length=n_steps // telemetry_every)
+    else:
+        step = make_step(cfg, statics, scheduler, **kw)
+        if check_on:
+            raw_step = step
 
-    step = make_step(cfg, statics, scheduler, **kw)
+            def step(s, a):
+                s, out = raw_step(s, a)
+                invariants.check_state(cfg, statics, s)
+                return s, out
 
-    def body(s, _):
-        return step(s, jnp.int32(-1))
+        def body(s, _):
+            return step(s, jnp.int32(-1))
 
-    def accum_body(carry, _):
-        s, acc = carry
-        s, out = step(s, jnp.int32(-1))
-        return (s, _telem_update(acc, out)), None
+        def accum_body(carry, _):
+            s, acc = carry
+            s, out = step(s, jnp.int32(-1))
+            return (s, _telem_update(
+                acc, out, resilience_on=cfg.resilience_on)), None
 
-    if summary_only:
-        if telemetry_every > 1:
-            raise ValueError(
-                "summary_only=True is episode-wide; it conflicts with "
-                f"telemetry_every={telemetry_every} (pick one)"
-            )
-        (fs, acc), _ = jax.lax.scan(
-            accum_body, (state, _telem_zero()), None, length=n_steps
-        )
-        return fs, _telem_finalize(acc)
+        if summary_only:
+            def go(state):
+                (fs, acc), _ = jax.lax.scan(
+                    accum_body, (state, _telem_zero(cfg.resilience_on)), None,
+                    length=n_steps)
+                return fs, _telem_finalize(acc)
+        elif telemetry_every <= 1:
+            def go(state):
+                return jax.lax.scan(body, state, None, length=n_steps)
+        else:
+            def window(s, _):
+                (s, acc), _ = jax.lax.scan(
+                    accum_body, (s, _telem_zero(cfg.resilience_on)), None,
+                    length=telemetry_every)
+                return s, _telem_finalize(acc)
 
-    if telemetry_every <= 1:
-        return jax.lax.scan(body, state, None, length=n_steps)
+            def go(state):
+                return jax.lax.scan(window, state, None,
+                                    length=n_steps // telemetry_every)
 
-    if n_steps % telemetry_every:
-        raise ValueError(
-            f"n_steps={n_steps} not divisible by telemetry_every={telemetry_every}"
-        )
+    if check_on:
+        from jax.experimental import checkify
 
-    def window(s, _):
-        (s, acc), _ = jax.lax.scan(
-            accum_body, (s, _telem_zero()), None, length=telemetry_every
-        )
-        return s, _telem_finalize(acc)
-
-    return jax.lax.scan(window, state, None,
-                        length=n_steps // telemetry_every)
+        err, out = checkify.checkify(go)(state)
+        err.throw()
+        return out
+    return go(state)
 
 
 def summary(state: SimState,
@@ -1070,6 +1152,19 @@ def summary(state: SimState,
         "peak_rack_outlet_c": float(s.peak_rack_c),
         "thermal_throttle_s": float(s.thermal_throttle_s),
     }
+    # resilience twin (core.faults): goodput vs throughput. "Useful" work
+    # is the node-seconds of completed jobs; lost_node_seconds is what
+    # kills destroyed (since-last-checkpoint for retries, whole jobs for
+    # terminal failures). goodput_frac = useful / (useful + lost) — the
+    # fraction of delivered node-seconds that produced finished jobs.
+    useful = float(np.sum(
+        (np.asarray(s.jstate) == DONE)
+        * np.asarray(s.dur_est) * np.asarray(s.n_nodes, np.float64)))
+    lost = float(s.lost_node_s)
+    out["lost_node_seconds"] = lost
+    out["jobs_failed_terminal"] = float(s.n_failed)
+    out["goodput_node_s"] = useful
+    out["goodput_frac"] = useful / max(useful + lost, 1e-9)
     if telemetry is not None:
         # macro-stepping skip accounting (satellite of the macro engine):
         # how much of the episode the engine fast-forwarded. Windowed

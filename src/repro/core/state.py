@@ -1,7 +1,9 @@
 """Simulator state: fixed-shape pytrees so the whole datacenter twin is a
 pure `step(state, action) -> state` function under jit/vmap/scan.
 
-Job lifecycle: EMPTY -> QUEUED -> RUNNING -> DONE (slot then reusable).
+Job lifecycle: EMPTY -> QUEUED -> RUNNING -> DONE (slot then reusable),
+plus the terminal FAILED state for jobs whose retry budget is exhausted
+(``cfg.max_job_retries``; see ``core.faults``).
 """
 
 from __future__ import annotations
@@ -15,7 +17,7 @@ import numpy as np
 from repro.configs.sim import SimConfig
 from repro.scenarios.scenario import Scenario, default_scenario
 
-EMPTY, QUEUED, RUNNING, DONE = 0, 1, 2, 3
+EMPTY, QUEUED, RUNNING, DONE, FAILED = 0, 1, 2, 3, 4
 NRES = 3  # cpu cores, gpus, mem_gb
 
 
@@ -96,6 +98,18 @@ class SimState(NamedTuple):
     rack_outlet_c: jax.Array   # (R,)
     thermal_throttle_s: jax.Array  # seconds with any rack derated
     peak_rack_c: jax.Array     # running max outlet temp
+    # resilience twin carry (core.faults): event-sampled absolute failure
+    # times (inf with faults off — exact macro breakpoints, zero per-tick
+    # PRNG draws), per-job checkpoint intervals, the current
+    # degradation-ladder level, and lost-work accounting. Present even
+    # with resilience off (pytree structure is flag-independent) but then
+    # never written after init.
+    next_fail_t: jax.Array     # (N,) absolute next node-fault time [s]
+    rack_fail_t: jax.Array     # (R,) absolute next rack-fault time [s]
+    ckpt_interval: jax.Array   # (J,) checkpoint period [s]; <=0 = none
+    degrade_level: jax.Array   # scalar int32 ladder level (0..4)
+    lost_node_s: jax.Array     # node-seconds of killed/evicted progress
+    n_failed: jax.Array        # jobs gone terminal FAILED
     # which workload this replica runs: index into a banked Statics trace
     # bank ((W, J, Q) leading axis); ignored when the bank is unbatched.
     # Scalar int32 — O(1) per env, vs. the O(J*Q) per-env bank copy the
@@ -164,6 +178,20 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
     # racks start at the cooling supply temperature (the idle steady state
     # sans heat); the RC update pulls them toward the loaded steady state
     supply0 = supply_temp(cfg, eval_signal(statics.scenario.wetbulb, f(0.0)))
+    # event-sampled fault clocks: absolute exponential first-failure times.
+    # Python-gated on the MTBF knobs so fault-free configs consume zero
+    # PRNG (the stored key — and thus every downstream draw — is unchanged
+    # vs. pre-resilience builds).
+    next_fail = jnp.full((N,), jnp.inf, f)
+    rack_fail = jnp.full((cfg.n_racks,), jnp.inf, f)
+    if cfg.node_mtbf_hours > 0:
+        key, kn = jax.random.split(key)
+        next_fail = jax.random.exponential(kn, (N,)) * f(
+            cfg.node_mtbf_hours * 3600.0)
+    if cfg.rack_mtbf_hours > 0:
+        key, kr = jax.random.split(key)
+        rack_fail = jax.random.exponential(kr, (cfg.n_racks,)) * f(
+            cfg.rack_mtbf_hours * 3600.0)
     return SimState(
         t=f(0.0),
         key=key,
@@ -198,6 +226,12 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
         rack_outlet_c=supply0 * jnp.ones((cfg.n_racks,), f),
         thermal_throttle_s=f(0.0),
         peak_rack_c=supply0,
+        next_fail_t=next_fail,
+        rack_fail_t=rack_fail,
+        ckpt_interval=jnp.full((J,), f(cfg.ckpt_interval_s)),
+        degrade_level=jnp.int32(0),
+        lost_node_s=f(0.0),
+        n_failed=f(0.0),
         workload=jnp.int32(0),
     )
 
@@ -205,13 +239,17 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
 def load_jobs(state: SimState, jobs: Dict[str, np.ndarray]) -> SimState:
     """Install a workload (from the trace loader or synthesizer) into the
     job table. ``jobs`` fields: submit_t, dur, n_nodes, req (NRES, J'),
-    priority, and optionally ``part`` (int32 node-type index per job;
-    -1 = any — the tag the ``partition`` placement enforces); J' <=
-    max_jobs."""
+    priority, optionally ``part`` (int32 node-type index per job;
+    -1 = any — the tag the ``partition`` placement enforces), and
+    optionally ``ckpt_interval`` (per-job checkpoint period [s] overriding
+    ``cfg.ckpt_interval_s``; <=0 = no checkpoints); J' <= max_jobs."""
     J = state.jstate.shape[0]
     n = len(jobs["submit_t"])
     assert n <= J, f"workload has {n} jobs > max_jobs {J}"
     sl = slice(0, n)
+    if "ckpt_interval" in jobs:
+        state = state._replace(ckpt_interval=state.ckpt_interval.at[sl].set(
+            jnp.asarray(jobs["ckpt_interval"], jnp.float32)))
     return state._replace(
         jstate=state.jstate.at[sl].set(QUEUED),
         submit_t=state.submit_t.at[sl].set(jnp.asarray(jobs["submit_t"], jnp.float32)),

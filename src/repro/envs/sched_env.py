@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.sim import SimConfig
+from repro.core import faults as flt
 from repro.core import placement as plc
 from repro.core import schedulers as sched
 from repro.core import thermal
@@ -77,6 +78,13 @@ GLOBAL_FEATURES = (
 # fraction of racks currently refusing new jobs
 THERMAL_FEATURES = ("rack_hot_frac", "rack_mean_frac",
                     "throttle_min", "tripped_frac")
+# resilience-twin features, appended ONLY when ``cfg.resilience_on``
+# (faults/outages/ladder off -> layout and pinned obs unchanged): the
+# active degradation rung, fault-kill and terminal-failure counts as
+# fractions of the job table, and lost node-seconds normalized by a
+# node-day of fleet capacity
+RESILIENCE_FEATURES = ("degrade_frac", "killed_frac",
+                       "failed_frac", "lost_frac")
 # per-node-type features: free fraction of each resource
 TYPE_FEATURES = ("cpu_free", "gpu_free", "mem_free")
 CANDIDATE_FEATURES = (
@@ -120,7 +128,11 @@ class SchedEnv:
                                        ).at[plc.PLACE_IDS[placement]].set(1.0)
         self.episode_steps = episode_steps
         self.k = cfg.sched_max_candidates
-        self.n_actions = self.k + 1
+        # with the degradation ladder schedulable, 5 extra actions set
+        # state.degrade_level to rung 0..4 (NORMAL..EVICT) before the
+        # dispatch sub-step runs; layout is k dispatches, k = no-op,
+        # k+1+r = "set rung r" (off -> Discrete(k+1), unchanged)
+        self.n_actions = self.k + 1 + (5 if cfg.degrade_enabled else 0)
         self.sim_steps_per_action = sim_steps_per_action
 
         # ONE shared Statics: stacked (W, J, Q) trace bank + stacked job
@@ -212,7 +224,17 @@ class SchedEnv:
         # (a bit-equivalent split: the old path forced a no-op action
         # through candidate ranking + placement on every sub-step).
         # Reductions accumulate in the scan carry (constant memory).
-        sim, out = self._step_rl(st.sim, jnp.asarray(action, jnp.int32))
+        action = jnp.asarray(action, jnp.int32)
+        sim0 = st.sim
+        if self.cfg.degrade_enabled:
+            # ladder actions: a > k sets the degradation rung (held until
+            # changed) and dispatches nothing this decision
+            is_lvl = action > self.k
+            rung = jnp.clip(action - self.k - 1, 0, flt.LVL_EVICT)
+            sim0 = sim0._replace(degrade_level=jnp.where(
+                is_lvl, rung, sim0.degrade_level).astype(jnp.int32))
+            action = jnp.where(is_lvl, self.k, action)
+        sim, out = self._step_rl(sim0, action)
         z = jnp.float32(0.0)
         acc = acc_of({"reward": z, "completed": z, "energy_kwh": z,
                       "carbon_kg": z, "facility_w": z, "queue_len": z}, out)
@@ -252,7 +274,8 @@ class SchedEnv:
     # ------------------------------------------------------------ features
     def _obs_spec(self) -> int:
         thermal = len(THERMAL_FEATURES) if self.cfg.thermal_enabled else 0
-        return (len(GLOBAL_FEATURES) + thermal + len(plc.PLACEMENTS)
+        resil = len(RESILIENCE_FEATURES) if self.cfg.resilience_on else 0
+        return (len(GLOBAL_FEATURES) + thermal + resil + len(plc.PLACEMENTS)
                 + len(TYPE_FEATURES) * self.cfg.n_types
                 + len(CANDIDATE_FEATURES) * self.k)
 
@@ -298,6 +321,22 @@ class SchedEnv:
             assert tuple(therm) == THERMAL_FEATURES
             glob = jnp.concatenate(
                 [glob, jnp.stack([therm[n] for n in THERMAL_FEATURES])])
+
+        if cfg.resilience_on:
+            # fault/lost-work state so the policy can learn resilience-
+            # aware control (drain ahead of maintenance windows, hold the
+            # ladder rung through brownouts, requeue-aware dispatch)
+            resil = dict(
+                degrade_frac=(flt.effective_level(cfg, sim, statics)
+                              .astype(jnp.float32) / float(flt.LVL_EVICT)),
+                killed_frac=sim.n_killed / cfg.max_jobs,
+                failed_frac=sim.n_failed / cfg.max_jobs,
+                lost_frac=sim.lost_node_s
+                / (cfg.n_nodes * cfg.day_seconds),
+            )
+            assert tuple(resil) == RESILIENCE_FEATURES
+            glob = jnp.concatenate(
+                [glob, jnp.stack([resil[n] for n in RESILIENCE_FEATURES])])
 
         # per-node-type free fractions, fused: the python per-(type,
         # resource) loop of scalar reductions becomes one one-hot

@@ -3,9 +3,15 @@ price / weather signals and demand-response power-cap events for the twin."""
 
 from repro.scenarios.events import (
     CapSchedule,
+    OutageSchedule,
     cap_events,
     next_cap_event,
+    next_outage_event,
     no_cap,
+    no_outages,
+    outage_down,
+    outage_events,
+    outage_level_at,
     power_cap_at,
 )
 from repro.scenarios.scenario import (
@@ -16,6 +22,7 @@ from repro.scenarios.scenario import (
     demand_response,
     heatwave,
     n_replicas,
+    resilience_drill,
     sample_scenarios,
     solar_heavy,
     stack_scenarios,

@@ -88,3 +88,101 @@ def power_cap_at(sched: CapSchedule, t: jax.Array) -> jax.Array:
     base = jnp.where(sched.base_cap_w > 0.0, sched.base_cap_w, _INF)
     cap = jnp.minimum(event_cap, base)
     return jnp.where(jnp.isfinite(cap), cap, 0.0)
+
+
+class OutageSchedule(NamedTuple):
+    """Grid brownout/outage + maintenance windows (docs/resilience.md).
+
+    Up to E windows ``[start_t, end_t)``. Each carries a forced
+    degradation-ladder level (``core.faults``: 0 none, 1 throttle,
+    2 dispatch-gate, 3 drain, 4 checkpoint-evict) and optionally a rack id
+    to take down outright (cooling-loop/PDU maintenance; -1 = no rack).
+    A slot with ``force_level == 0`` and ``down_rack == -1`` is padding.
+    Window edges are exact macro breakpoints via ``next_outage_event``."""
+
+    start_t: jax.Array      # (E,) window start [s]
+    end_t: jax.Array        # (E,) window end [s] (exclusive)
+    force_level: jax.Array  # (E,) int32 forced ladder level; 0 = none
+    down_rack: jax.Array    # (E,) int32 rack taken down; -1 = none
+
+
+def no_outages(n_events: int = 1) -> OutageSchedule:
+    """Schedule with no outage/maintenance windows (all padding)."""
+    E = max(n_events, 1)
+    z = jnp.zeros((E,), jnp.float32)
+    return OutageSchedule(start_t=z, end_t=z,
+                          force_level=jnp.zeros((E,), jnp.int32),
+                          down_rack=jnp.full((E,), -1, jnp.int32))
+
+
+def outage_events(
+    starts: Sequence[float],
+    ends: Sequence[float],
+    *,
+    levels: Sequence[int] | None = None,
+    down_racks: Sequence[int] | None = None,
+    n_events: int | None = None,
+) -> OutageSchedule:
+    """Build an outage schedule from parallel window lists, padded to
+    ``n_events``. ``levels`` defaults to 0 (no forced ladder level) and
+    ``down_racks`` to -1 (no rack outage) — at least one must make each
+    window non-trivial or it is padding."""
+    s = np.asarray(starts, np.float32).reshape(-1)
+    e = np.asarray(ends, np.float32).reshape(-1)
+    lv = (np.zeros_like(s, np.int32) if levels is None
+          else np.asarray(levels, np.int32).reshape(-1))
+    dr = (np.full_like(lv, -1) if down_racks is None
+          else np.asarray(down_racks, np.int32).reshape(-1))
+    if not (s.shape == e.shape == lv.shape == dr.shape):
+        raise ValueError("starts/ends/levels/down_racks lengths differ")
+    if np.any(e < s):
+        raise ValueError("outage end_t before start_t")
+    if np.any((lv < 0) | (lv > 4)):
+        raise ValueError("force_level must be in [0, 4]")
+    E = max(n_events or s.size, s.size, 1)
+    pad = E - s.size
+    if pad:
+        s = np.concatenate([s, np.zeros(pad, np.float32)])
+        e = np.concatenate([e, np.zeros(pad, np.float32)])
+        lv = np.concatenate([lv, np.zeros(pad, np.int32)])
+        dr = np.concatenate([dr, np.full(pad, -1, np.int32)])
+    return OutageSchedule(start_t=jnp.asarray(s), end_t=jnp.asarray(e),
+                          force_level=jnp.asarray(lv),
+                          down_rack=jnp.asarray(dr))
+
+
+def _outage_live(sched: OutageSchedule) -> jax.Array:
+    return (sched.force_level > 0) | (sched.down_rack >= 0)
+
+
+def next_outage_event(sched: OutageSchedule, t: jax.Array) -> jax.Array:
+    """Earliest outage-window edge strictly after ``t`` (``inf`` when
+    none) — same breakpoint contract as ``next_cap_event``."""
+    live = _outage_live(sched)
+    edges = jnp.concatenate([sched.start_t, sched.end_t])
+    live2 = jnp.concatenate([live, live])
+    edges = jnp.where(live2 & (edges > t), edges, _INF)
+    return jnp.min(edges)
+
+
+def outage_level_at(sched: OutageSchedule, t: jax.Array) -> jax.Array:
+    """Highest forced degradation-ladder level among windows active at t
+    (int32 scalar; 0 when none)."""
+    active = (t >= sched.start_t) & (t < sched.end_t) & _outage_live(sched)
+    return jnp.max(jnp.where(active, sched.force_level, 0))
+
+
+def outage_down(
+    sched: OutageSchedule, t: jax.Array, node_rack: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Per-node maintenance outage at time t: ``(forced, until)`` where
+    ``forced`` is a (N,) bool mask of nodes whose rack is taken down by an
+    active window and ``until`` the (N,) latest ``end_t`` among the windows
+    downing each node (0 where not forced) — the deterministic repair
+    time for maintenance faults."""
+    active = (t >= sched.start_t) & (t < sched.end_t) & (sched.down_rack >= 0)
+    # (N, E): window e downs node n
+    hit = active[None, :] & (node_rack[:, None] == sched.down_rack[None, :])
+    forced = jnp.any(hit, axis=1)
+    until = jnp.max(jnp.where(hit, sched.end_t[None, :], 0.0), axis=1)
+    return forced, until

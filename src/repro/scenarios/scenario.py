@@ -20,8 +20,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.sim import SimConfig
-from repro.scenarios.events import CapSchedule, cap_events, no_cap
+from repro.scenarios.events import (
+    CapSchedule,
+    OutageSchedule,
+    cap_events,
+    no_cap,
+    no_outages,
+    outage_events,
+)
 from repro.scenarios.signals import Signal, from_trace, sinusoid
+
+# class-level default shared by every scenario without outage windows:
+# one padding slot, so legacy builders need no changes and all
+# fixed-shape invariants (vmap across replicas) hold by construction
+_NO_OUTAGES = no_outages()
 
 
 class Scenario(NamedTuple):
@@ -29,6 +41,7 @@ class Scenario(NamedTuple):
     price: Signal         # electricity price [$/kWh]
     wetbulb: Signal       # outdoor wetbulb [degC] (drives cooling COP)
     power_cap: CapSchedule
+    outages: OutageSchedule = _NO_OUTAGES
 
 
 # ---------------------------------------------------------------- builders
@@ -122,12 +135,39 @@ def carbon_trace(cfg: SimConfig, values, dt: float, t0: float = 0.0) -> Scenario
     return default_scenario(cfg)._replace(carbon=from_trace(values, dt, t0))
 
 
+def resilience_drill(
+    cfg: SimConfig,
+    *,
+    maint_rack: int = 0,
+    maint_start_s: float = 2.0 * 3600.0,
+    maint_len_s: float = 1.0 * 3600.0,
+    brownout_start_s: float = 17.0 * 3600.0,
+    brownout_len_s: float = 2.0 * 3600.0,
+    brownout_level: int = 2,
+) -> Scenario:
+    """The fault-engine drill (docs/resilience.md): a morning maintenance
+    window taking one rack down (correlated PDU/cooling-loop outage) plus
+    an evening grid brownout forcing the degradation ladder to
+    ``brownout_level`` (default 2 = dispatch-gate). Pair with
+    ``cfg.outages_enabled=True`` and nonzero MTBFs for random faults on
+    top of the scheduled ones."""
+    return default_scenario(cfg)._replace(
+        outages=outage_events(
+            [maint_start_s, brownout_start_s],
+            [maint_start_s + maint_len_s, brownout_start_s + brownout_len_s],
+            levels=[0, brownout_level],
+            down_racks=[maint_rack, -1],
+        ),
+    )
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "default": default_scenario,
     "solar_heavy": solar_heavy,
     "demand_response": demand_response,
     "heatwave": heatwave,
     "thermal_stress": thermal_stress,
+    "resilience_drill": resilience_drill,
 }
 
 
@@ -159,6 +199,21 @@ def _pad_events(sched: CapSchedule, E: int) -> CapSchedule:
     )
 
 
+def _pad_outages(sched: OutageSchedule, E: int) -> OutageSchedule:
+    e = sched.start_t.shape[0]
+    if e == E:
+        return sched
+    z = jnp.zeros((E - e,), jnp.float32)
+    return OutageSchedule(
+        start_t=jnp.concatenate([sched.start_t, z]),
+        end_t=jnp.concatenate([sched.end_t, z]),
+        force_level=jnp.concatenate(
+            [sched.force_level, jnp.zeros((E - e,), jnp.int32)]),
+        down_rack=jnp.concatenate(
+            [sched.down_rack, jnp.full((E - e,), -1, jnp.int32)]),
+    )
+
+
 def stack_scenarios(scenarios: Sequence[Scenario]) -> Scenario:
     """Stack scenarios into one batched pytree (leading replica axis).
 
@@ -170,12 +225,14 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> Scenario:
     T = max(s.values.shape[0] for sc in scenarios
             for s in (sc.carbon, sc.price, sc.wetbulb))
     E = max(sc.power_cap.start_t.shape[0] for sc in scenarios)
+    Eo = max(sc.outages.start_t.shape[0] for sc in scenarios)
     norm = [
         Scenario(
             carbon=_pad_trace(sc.carbon, T),
             price=_pad_trace(sc.price, T),
             wetbulb=_pad_trace(sc.wetbulb, T),
             power_cap=_pad_events(sc.power_cap, E),
+            outages=_pad_outages(sc.outages, Eo),
         )
         for sc in scenarios
     ]

@@ -1,0 +1,112 @@
+"""checkify-based machine-invariant harness (docs/resilience.md).
+
+``check_state(cfg, statics, state)`` asserts the conservation laws and
+sanity bounds every subsystem of the twin must preserve — resource
+conservation, placement/jstate consistency, finite power/thermal
+carries, bounded rack temperatures, non-negative accounting. The checks
+are ``jax.experimental.checkify.check`` calls, so they work in two
+modes:
+
+- **eager** (un-jitted arrays): each check raises ``JaxRuntimeError``
+  immediately on violation — how ``core.fleet.run_fleet`` audits final
+  states after the compiled sweep;
+- **functionalized** (inside jit/scan/while_loop/vmap): the caller wraps
+  the whole computation with ``checkify.checkify`` and throws the
+  returned error afterwards — how ``core.sim.run_episode`` runs the
+  suite on every committed step without breaking compilation.
+
+The harness is gated by the ``REPRO_CHECKIFY`` environment variable
+(read at call time, so a test can flip it): unset/``0`` means zero
+checks compiled in — the production program is untouched. CI hard-
+enables it for the whole test matrix (``.github/workflows/ci.yml``), so
+every PR executes the invariant suite across all tier-1 episodes.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.configs.sim import SimConfig
+from repro.core.state import FAILED, RUNNING, SimState, Statics
+
+# float slop for resource conservation: free pools are add/subtract
+# chains of f32 req vectors, so allow a few ulps of drift per resource
+_EPS = 1e-3
+
+
+def enabled() -> bool:
+    """Whether the invariant harness is on (``REPRO_CHECKIFY``); read at
+    call time so tests can enable/disable it per case."""
+    return os.environ.get("REPRO_CHECKIFY", "0") not in ("", "0")
+
+
+def check_state(cfg: SimConfig, statics: Statics, state: SimState) -> None:
+    """Assert the machine invariants of one (possibly batched) SimState.
+
+    Every check broadcasts over leading batch axes, so the same suite
+    audits a single episode state and a fleet's stacked final states.
+    Must run either eagerly or under ``checkify.checkify`` — a bare jit
+    of a function calling this raises at trace time by design (checks
+    would otherwise be silently dropped).
+    """
+    from jax.experimental import checkify
+
+    # --- resource conservation: the free pool never exceeds capacity
+    # (releases are balanced by allocations) and never goes negative
+    # (allocations never oversubscribe)
+    checkify.check(
+        jnp.all(state.free <= statics.capacity + _EPS),
+        "resource conservation violated: free pool exceeds capacity "
+        "(double release)")
+    checkify.check(
+        jnp.all(state.free >= -_EPS),
+        "resource conservation violated: negative free pool "
+        "(oversubscription)")
+
+    # --- placement/jstate consistency: exactly the RUNNING jobs hold
+    # placement rows; queued/done/failed/empty slots are scrubbed to -1
+    has_nodes = jnp.any(state.placement >= 0, axis=-1)
+    checkify.check(
+        jnp.all(has_nodes == (state.jstate == RUNNING)),
+        "placement/jstate inconsistency: a non-RUNNING job holds nodes "
+        "or a RUNNING job holds none")
+    checkify.check(
+        jnp.all((state.jstate >= 0) & (state.jstate <= FAILED)),
+        "jstate outside the EMPTY..FAILED lifecycle")
+
+    # --- node liveness is boolean; down nodes carry a repair time
+    # NB: check messages are .format() templates — no literal braces
+    checkify.check(
+        jnp.all((state.node_up == 0.0) | (state.node_up == 1.0)),
+        "node_up not boolean-valued (0.0 or 1.0)")
+
+    # --- no NaN/Inf in the power/energy accumulators or progress state
+    finite_acc = (
+        jnp.isfinite(state.energy_kwh) & jnp.isfinite(state.it_energy_kwh)
+        & jnp.isfinite(state.cool_energy_kwh) & jnp.isfinite(state.carbon_kg)
+        & jnp.isfinite(state.elec_cost_usd) & jnp.isfinite(state.sum_power_w)
+        & jnp.isfinite(state.lost_node_s)
+    )
+    checkify.check(jnp.all(finite_acc),
+                   "NaN/Inf in power/energy/lost-work accumulators")
+    checkify.check(jnp.all(jnp.isfinite(state.work_left)),
+                   "NaN/Inf in per-job work_left")
+
+    # --- thermal carry: rack outlet temps finite and physically bounded
+    # (a runaway RC update or bad supply signal shows up here first)
+    checkify.check(
+        jnp.all(jnp.isfinite(state.rack_outlet_c))
+        & jnp.all(state.rack_outlet_c < 250.0)
+        & jnp.all(state.rack_outlet_c > -60.0),
+        "rack outlet temperature NaN/Inf or outside (-60, 250) degC")
+
+    # --- resilience accounting is monotone non-negative
+    checkify.check(
+        jnp.all(state.lost_node_s >= 0.0) & jnp.all(state.n_failed >= 0.0)
+        & jnp.all(state.n_killed >= 0.0),
+        "negative resilience accounting (lost_node_s/n_failed/n_killed)")
+    checkify.check(
+        jnp.all(state.n_failures >= 0),
+        "negative per-job failure count")

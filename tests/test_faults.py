@@ -1,0 +1,485 @@
+"""Resilience-twin suite (docs/resilience.md): a NumPy differential
+oracle for the event-sampled fault engine's deterministic semantics
+(who goes down, who gets killed, checkpoint-restart math, retry budgets,
+backoff, lost-work accounting), plus the macro invariants the engine
+promises (clocks strictly future, quiet ticks are RNG-free fixpoints,
+no mid-window repair flaps) and seed determinism under vmap/run_fleet.
+
+The RNG only decides the *redraw values* of fired clocks; everything
+else is a pure function of the pre-tick state, so the oracle pins exact
+equality on all job/node bookkeeping while checking redraws only for
+the strictly-future property."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.sim import tiny_cluster
+from repro.core import (
+    FAILED,
+    LVL_DRAIN,
+    LVL_EVICT,
+    LVL_GATE,
+    LVL_NORMAL,
+    LVL_THROTTLE,
+    QUEUED,
+    RUNNING,
+    apply_faults,
+    build_statics,
+    effective_level,
+    init_state,
+    load_jobs,
+    next_fault_event,
+    run_episode,
+    run_fleet,
+    summary,
+)
+from repro.core import faults as flt
+from repro.core.state import SimState
+from repro.data import synth_workload
+from repro.scenarios import (
+    default_scenario,
+    next_outage_event,
+    outage_down,
+    outage_events,
+    outage_level_at,
+    resilience_drill,
+)
+
+_RESIL = dict(node_mtbf_hours=0.5, node_repair_hours=0.1,
+              rack_mtbf_hours=2.0, rack_repair_hours=0.2)
+
+
+def _setup(seed=0, n_jobs=24, horizon=1200.0, scenario=None, **cfg_kw):
+    cfg = tiny_cluster(**cfg_kw)
+    jobs, bank = synth_workload(cfg, n_jobs, horizon, seed=seed)
+    statics = build_statics(cfg, bank, scenario=scenario)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(seed)), jobs)
+    return cfg, statics, state, jobs
+
+
+def _run_until_running(cfg, statics, state, scheduler="fcfs", max_t=600):
+    """Advance per-tick until at least one job is RUNNING."""
+    from repro.core import make_step
+    step = jax.jit(make_step(cfg, statics, scheduler))
+    for _ in range(max_t):
+        state, _ = step(state, jnp.int32(-1))
+        if int(jnp.sum(state.jstate == RUNNING)) > 0:
+            return state
+    raise AssertionError("no job ever started")
+
+
+# ------------------------------------------------------ differential oracle
+def _oracle_kill(cfg, state, down_nodes):
+    """NumPy model of apply_faults' job bookkeeping given the set of
+    newly-downed nodes: returns expected (jstate, work_left, submit_t,
+    lost_node_s_delta) — the deterministic core of the engine."""
+    place = np.asarray(state.placement)
+    jstate = np.asarray(state.jstate).copy()
+    dur = np.asarray(state.dur_est)
+    wl = np.asarray(state.work_left).copy()
+    iv = np.asarray(state.ckpt_interval)
+    sub = np.asarray(state.submit_t).copy()
+    nfail = np.asarray(state.n_failures).copy()
+    t = float(state.t)
+
+    on_down = np.zeros(jstate.shape, bool)
+    for j in range(jstate.shape[0]):
+        if jstate[j] != RUNNING:
+            continue
+        nodes = place[j][place[j] >= 0]
+        on_down[j] = np.isin(nodes, down_nodes).any()
+
+    prog = np.maximum(dur - wl, 0.0)
+    kept = np.where(iv > 0, np.floor(prog / np.maximum(iv, 1e-9)) * iv, 0.0)
+    nfail_new = nfail + on_down.astype(np.int32)
+    if cfg.max_job_retries > 0:
+        exhausted = on_down & (nfail_new > cfg.max_job_retries)
+    else:
+        exhausted = np.zeros_like(on_down)
+    wl = np.where(on_down, dur - kept, wl)
+    jstate = np.where(exhausted, FAILED, np.where(on_down, QUEUED, jstate))
+    if cfg.requeue_backoff_s > 0:
+        backoff = cfg.requeue_backoff_s * (
+            cfg.requeue_backoff_mult ** np.maximum(nfail_new - 1, 0))
+        sub = np.where(on_down & ~exhausted, t + backoff, sub)
+    lost = np.where(on_down, prog - kept, 0.0)
+    lost = np.where(exhausted, prog, lost)
+    lost_total = float(np.sum(lost * np.asarray(state.n_nodes, np.float64)))
+    return on_down, jstate, wl, sub, nfail_new, exhausted, lost_total
+
+
+def _fire_rack(cfg, statics, state, rack=0):
+    """Arm the rack-0 clock to fire on the next apply_faults call."""
+    return state._replace(
+        rack_fail_t=state.rack_fail_t.at[rack].set(state.t),
+        # keep node clocks quiet so the rack is the only cause
+        next_fail_t=jnp.full_like(state.next_fail_t, jnp.inf),
+    )
+
+
+def test_rack_fault_downs_whole_rack_oracle():
+    """A cooling-loop/PDU fault downs every node of the rack at once and
+    kills exactly the jobs touching it — bookkeeping matches the NumPy
+    oracle field by field."""
+    cfg, statics, state, _ = _setup(
+        **_RESIL, ckpt_interval_s=120.0, ckpt_overhead_s=10.0,
+        max_job_retries=3, requeue_backoff_s=30.0)
+    state = _run_until_running(cfg, statics, state)
+    state = _fire_rack(cfg, statics, state, rack=0)
+
+    rack_nodes = np.flatnonzero(np.asarray(statics.node_rack) == 0)
+    was_up = np.asarray(state.node_up)[rack_nodes] > 0.5
+    exp = _oracle_kill(cfg, state, rack_nodes[was_up])
+    on_down, jstate, wl, sub, nfail, exhausted, lost_total = exp
+
+    new, killed_now, lost_now = apply_faults(cfg, state, statics)
+    # the whole rack is down
+    assert (np.asarray(new.node_up)[rack_nodes] == 0.0).all()
+    # job bookkeeping matches the oracle exactly
+    np.testing.assert_array_equal(np.asarray(new.jstate), jstate)
+    np.testing.assert_array_equal(np.asarray(new.work_left), wl)
+    np.testing.assert_array_equal(np.asarray(new.submit_t), sub)
+    np.testing.assert_array_equal(np.asarray(new.n_failures), nfail)
+    assert float(killed_now) == float(on_down.sum())
+    np.testing.assert_allclose(float(lost_now), lost_total, rtol=1e-5)
+    # killed jobs rewound to the checkpoint grid, not to zero progress
+    prog = np.maximum(np.asarray(state.dur_est) - np.asarray(state.work_left),
+                      0.0)
+    rewound = on_down & (prog >= 120.0)
+    if rewound.any():
+        assert (np.asarray(new.work_left)[rewound]
+                < np.asarray(new.dur_est)[rewound]).all()
+    # fired rack clock redrawn strictly future
+    assert float(new.rack_fail_t[0]) > float(state.t)
+
+
+def test_quiet_tick_is_rng_free_fixpoint():
+    """With every clock in the future and no outage edge, apply_faults is
+    a no-op INCLUDING the PRNG key — the property that makes quiet-tick
+    fast-forwarding exact."""
+    cfg, statics, state, _ = _setup(**_RESIL)
+    state = state._replace(
+        next_fail_t=jnp.full_like(state.next_fail_t, 1e9),
+        rack_fail_t=jnp.full_like(state.rack_fail_t, 1e9))
+    new, killed, lost = apply_faults(cfg, state, statics)
+    assert float(killed) == 0.0 and float(lost) == 0.0
+    for f in SimState._fields:
+        a, b = getattr(state, f), getattr(new, f)
+        if f == "key":
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"quiet tick mutated {f}")
+
+
+def test_clocks_always_strictly_future():
+    """After any apply_faults call every finite clock is strictly > t
+    (absorbed fires included), so next_fault_event never hides a pending
+    event from the macro horizon."""
+    cfg, statics, state, _ = _setup(**_RESIL)
+    # fire a node clock on an already-down node (absorbed fire)
+    state = state._replace(
+        node_up=state.node_up.at[0].set(0.0),
+        repair_t=state.repair_t.at[0].set(float(state.t) + 500.0),
+        next_fail_t=state.next_fail_t.at[0].set(state.t),
+        rack_fail_t=state.rack_fail_t.at[0].set(state.t))
+    new, _, _ = apply_faults(cfg, state, statics)
+    assert (np.asarray(new.next_fail_t) > float(state.t)).all()
+    assert (np.asarray(new.rack_fail_t) > float(state.t)).all()
+    # node 0 stayed down (absorbed), and its standing repair survives
+    assert float(new.node_up[0]) == 0.0
+    assert float(new.repair_t[0]) >= float(state.t) + 500.0
+    nxt = float(next_fault_event(cfg, new, statics, new.t))
+    assert nxt > float(new.t)
+
+
+def test_retry_budget_terminal_failed():
+    """A job past its retry budget goes terminal FAILED: all progress
+    lost, placement scrubbed, never requeued."""
+    cfg, statics, state, _ = _setup(
+        **_RESIL, max_job_retries=1, ckpt_interval_s=0.0)
+    state = _run_until_running(cfg, statics, state)
+    running = np.flatnonzero(np.asarray(state.jstate) == RUNNING)
+    j = int(running[0])
+    # already at the budget: next kill exhausts it
+    state = state._replace(
+        n_failures=state.n_failures.at[j].set(cfg.max_job_retries))
+    node = int(np.asarray(state.placement)[j][0])
+    state = state._replace(
+        next_fail_t=jnp.full_like(state.next_fail_t, jnp.inf
+                                  ).at[node].set(state.t),
+        rack_fail_t=jnp.full_like(state.rack_fail_t, jnp.inf))
+    new, _, lost_now = apply_faults(cfg, state, statics)
+    assert int(new.jstate[j]) == FAILED
+    assert (np.asarray(new.placement)[j] == -1).all()
+    assert float(new.end_t[j]) == float(state.t)
+    assert float(new.n_failed) == float(state.n_failed) + 1
+    prog = float(state.dur_est[j] - state.work_left[j])
+    nn = float(state.n_nodes[j])
+    # terminal failures lose ALL progress (no checkpointing here)
+    assert float(lost_now) >= prog * nn - 1e-3
+
+
+def test_requeue_backoff_schedule():
+    """Backoff grows geometrically with the kill count and reuses the
+    arrival machinery (submit_t advances); with backoff disabled the
+    legacy wait-stat baseline is untouched."""
+    for backoff_s in (0.0, 45.0):
+        cfg, statics, state, _ = _setup(
+            **_RESIL, requeue_backoff_s=backoff_s, requeue_backoff_mult=3.0)
+        state = _run_until_running(cfg, statics, state)
+        j = int(np.flatnonzero(np.asarray(state.jstate) == RUNNING)[0])
+        state = state._replace(n_failures=state.n_failures.at[j].set(2))
+        node = int(np.asarray(state.placement)[j][0])
+        state = state._replace(
+            next_fail_t=jnp.full_like(state.next_fail_t, jnp.inf
+                                      ).at[node].set(state.t),
+            rack_fail_t=jnp.full_like(state.rack_fail_t, jnp.inf))
+        old_sub = float(state.submit_t[j])
+        new, _, _ = apply_faults(cfg, state, statics)
+        assert int(new.jstate[j]) == QUEUED
+        if backoff_s > 0:
+            # third kill -> backoff_s * mult**2
+            assert float(new.submit_t[j]) == pytest.approx(
+                float(state.t) + backoff_s * 9.0)
+        else:
+            assert float(new.submit_t[j]) == old_sub
+
+
+def test_killed_and_requeued_equals_freshly_queued():
+    """Satellite (b): after a kill with no checkpoint, the per-job record
+    is indistinguishable from a freshly queued job — no stale start_t,
+    placement, or partial progress leaks into the next dispatch."""
+    cfg, statics, state, _ = _setup(**_RESIL, ckpt_interval_s=0.0)
+    state = _run_until_running(cfg, statics, state)
+    fresh = np.asarray(state.jstate) == QUEUED
+    j = int(np.flatnonzero(np.asarray(state.jstate) == RUNNING)[0])
+    node = int(np.asarray(state.placement)[j][0])
+    state = state._replace(
+        next_fail_t=jnp.full_like(state.next_fail_t, jnp.inf
+                                  ).at[node].set(state.t),
+        rack_fail_t=jnp.full_like(state.rack_fail_t, jnp.inf))
+    new, _, _ = apply_faults(cfg, state, statics)
+    assert int(new.jstate[j]) == QUEUED
+    assert float(new.start_t[j]) == 0.0
+    assert (np.asarray(new.placement)[j] == -1).all()
+    # full rewind without checkpoints: looks exactly like never-started
+    assert float(new.work_left[j]) == float(new.dur_est[j])
+    # the invariant fresh QUEUED jobs satisfy holds for the requeued one
+    if fresh.any():
+        k = int(np.flatnonzero(fresh)[0])
+        assert float(new.start_t[k]) == float(new.start_t[j]) == 0.0
+        assert (np.asarray(new.placement)[k] == -1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(prog=st.floats(0.0, 1e5), iv=st.floats(0.0, 5e3),
+       ov=st.floats(0.0, 500.0))
+def test_property_ckpt_math(prog, iv, ov):
+    """Checkpoint floor/drag vs the closed form, any (prog, iv, ov)."""
+    cfg = tiny_cluster(ckpt_interval_s=iv, ckpt_overhead_s=ov)
+    statics = build_statics(cfg)
+    state = init_state(cfg, statics, jax.random.key(0))
+    kept = np.asarray(flt.ckpt_kept(
+        state, jnp.full_like(state.work_left, np.float32(prog))))
+    drag = np.asarray(flt.ckpt_drag(cfg, state))
+    p32 = np.float32(prog)
+    if iv > 0:
+        iv32 = np.float32(iv)
+        assert (kept <= p32 + 1e-3).all()          # never invents work
+        assert (kept >= p32 - iv32 - 1e-3).all()   # loses < one interval
+        assert (0.0 < drag).all() and (drag <= 1.0).all()
+    else:
+        assert (kept == 0.0).all()
+        assert (drag == 1.0).all()
+
+
+# -------------------------------------------------------- outage schedules
+def test_outage_schedule_oracle():
+    """outage_level_at / outage_down / next_outage_event vs a brute-force
+    NumPy sweep over a two-window schedule."""
+    sched = outage_events([100.0, 400.0], [250.0, 600.0],
+                          levels=[2, 0], down_racks=[-1, 1])
+    node_rack = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    for t in np.arange(0.0, 700.0, 25.0):
+        lvl = int(outage_level_at(sched, jnp.float32(t)))
+        exp_lvl = 2 if 100.0 <= t < 250.0 else 0
+        assert lvl == exp_lvl, t
+        forced, until = outage_down(sched, jnp.float32(t), node_rack)
+        in_w2 = 400.0 <= t < 600.0
+        np.testing.assert_array_equal(
+            np.asarray(forced), [False, False, in_w2, in_w2], err_msg=str(t))
+        if in_w2:
+            assert (np.asarray(until)[2:] == 600.0).all()
+        nxt = float(next_outage_event(sched, jnp.float32(t)))
+        edges = [e for e in (100.0, 250.0, 400.0, 600.0) if e > t]
+        assert nxt == (min(edges) if edges else np.inf)
+
+
+def test_no_mid_window_repair_flap():
+    """A node that was already down entering a maintenance window has its
+    repair extended to the window end — it can never flap up inside the
+    window (an unpredictable breakpoint the macro engine couldn't see)."""
+    cfg, statics, state, _ = _setup(
+        **_RESIL, outages_enabled=True,
+        scenario=None)
+    scn = default_scenario(cfg)._replace(
+        outages=outage_events([100.0], [500.0], levels=[0], down_racks=[0]))
+    statics = statics._replace(scenario=scn)
+    # node 0 (rack 0) already down with a repair due INSIDE the window
+    state = state._replace(
+        t=jnp.float32(100.0),
+        node_up=state.node_up.at[0].set(0.0),
+        repair_t=state.repair_t.at[0].set(150.0),
+        next_fail_t=jnp.full_like(state.next_fail_t, jnp.inf),
+        rack_fail_t=jnp.full_like(state.rack_fail_t, jnp.inf))
+    new, _, _ = apply_faults(cfg, state, statics)
+    rack0 = np.flatnonzero(np.asarray(statics.node_rack) == 0)
+    assert (np.asarray(new.node_up)[rack0] == 0.0).all()
+    assert (np.asarray(new.repair_t)[rack0] >= 500.0).all()
+
+
+# ------------------------------------------------------- degradation ladder
+def test_degrade_clock_ladder():
+    cfg = tiny_cluster(degrade_enabled=True, degrade_throttle_frac=0.6)
+    vals = [float(flt.degrade_clock(cfg, jnp.int32(l)))
+            for l in (LVL_NORMAL, LVL_THROTTLE, LVL_GATE, LVL_DRAIN,
+                      LVL_EVICT)]
+    assert vals[0] == 1.0
+    assert vals[1] == vals[2] == pytest.approx(0.6)
+    assert vals[3] == vals[4] == pytest.approx(cfg.throttle_floor)
+    # effective level is the max of schedulable rung and outage forcing
+    statics = build_statics(cfg)
+    state = init_state(cfg, statics, jax.random.key(0))
+    state = state._replace(degrade_level=jnp.int32(LVL_DRAIN))
+    assert int(effective_level(cfg, state, statics)) == LVL_DRAIN
+
+
+def test_gate_blocks_dispatch_and_evict_keeps_progress():
+    """>= GATE: no new job starts; EVICT: running jobs checkpoint-evict
+    to QUEUED with progress intact and ZERO lost work."""
+    cfg, statics, state, _ = _setup(degrade_enabled=True)
+    gated = state._replace(degrade_level=jnp.int32(LVL_GATE))
+    fs, _ = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 200, "fcfs", summary_only=True))(gated)
+    assert int(jnp.sum(fs.jstate == RUNNING)) == 0
+    assert float(jnp.sum(fs.jstate == 3)) == 0.0       # nothing completed
+
+    # eviction after some real progress
+    cfg2, statics2, state2, _ = _setup(degrade_enabled=True)
+    state2 = _run_until_running(cfg2, statics2, state2)
+    state2 = state2._replace(degrade_level=jnp.int32(LVL_EVICT))
+    j = int(np.flatnonzero(np.asarray(state2.jstate) == RUNNING)[0])
+    wl_before = float(state2.work_left[j])
+    new, killed, lost = apply_faults(cfg2, state2, statics2)
+    assert int(new.jstate[j]) == QUEUED
+    assert float(new.work_left[j]) == wl_before         # progress kept
+    assert float(killed) == 0.0 and float(lost) == 0.0  # graceful
+    assert (np.asarray(new.placement)[j] == -1).all()
+
+
+def test_degrade_throttle_cuts_power_and_progress():
+    """THROTTLE clocks dynamic power: facility power under LVL_THROTTLE
+    is strictly below normal while jobs run, and completions are slower."""
+    cfg, statics, state, _ = _setup(degrade_enabled=True,
+                                    degrade_throttle_frac=0.5)
+    run = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 800, "fcfs", summary_only=True))
+    fs_n, tel_n = run(state)
+    fs_t, tel_t = run(state._replace(degrade_level=jnp.int32(LVL_THROTTLE)))
+    assert float(fs_t.energy_kwh) < float(fs_n.energy_kwh)
+    assert float(fs_t.n_completed) <= float(fs_n.n_completed)
+
+
+# ------------------------------------------------- determinism & fleet runs
+def test_seed_determinism_and_vmap_consistency():
+    """Same seed -> bit-identical faults through run_episode AND through
+    the vmapped run_fleet path; replicas with split keys diverge."""
+    cfg, statics, state, _ = _setup(**_RESIL, n_jobs=16, horizon=600.0)
+    run = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 900, "fcfs", summary_only=True))
+    fs1, _ = run(state)
+    fs2, _ = run(state)
+    np.testing.assert_array_equal(np.asarray(fs1.node_up),
+                                  np.asarray(fs2.node_up))
+    assert float(fs1.n_killed) == float(fs2.n_killed)
+
+    scns = [default_scenario(cfg)] * 3
+    fstates, _ = run_fleet(cfg, statics, state, 900, "fcfs",
+                           scenarios=scns, summary_only=True)
+    fstates2, _ = run_fleet(cfg, statics, state, 900, "fcfs",
+                            scenarios=scns, summary_only=True)
+    np.testing.assert_array_equal(np.asarray(fstates.n_killed),
+                                  np.asarray(fstates2.n_killed))
+    np.testing.assert_array_equal(np.asarray(fstates.node_up),
+                                  np.asarray(fstates2.node_up))
+
+
+def test_goodput_accounting_in_summary():
+    cfg, statics, state, _ = _setup(
+        **_RESIL, ckpt_interval_s=120.0, ckpt_overhead_s=10.0,
+        n_jobs=16, horizon=600.0)
+    fs, tel = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 2000, "fcfs", summary_only=True))(state)
+    s = summary(fs, tel)
+    assert s["lost_node_seconds"] >= 0.0
+    assert 0.0 <= s["goodput_frac"] <= 1.0
+    if s["lost_node_seconds"] > 0:
+        assert s["goodput_frac"] < 1.0
+
+
+def test_resilience_off_is_legacy_bit_path():
+    """With every resilience knob off the step program never calls the
+    fault engine: final states match a config that never knew about it
+    (the new SimState fields stay at their inert defaults)."""
+    cfg, statics, state, _ = _setup()
+    assert not cfg.resilience_on
+    fs, _ = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 400, "fcfs", summary_only=True))(state)
+    assert float(fs.n_killed) == 0.0
+    assert float(fs.lost_node_s) == 0.0
+    assert float(fs.n_failed) == 0.0
+    assert (np.asarray(fs.node_up) == 1.0).all()
+    assert np.isinf(np.asarray(fs.next_fail_t)).all()
+
+
+def test_sched_env_resilience_obs_and_ladder_actions():
+    """SchedEnv grows the resilience feature block and 5 ladder actions
+    only when the knobs are on; a ladder action sets the rung, which
+    gates dispatch at >= GATE."""
+    from repro.envs.sched_env import RESILIENCE_FEATURES, SchedEnv
+
+    cfg_off = tiny_cluster()
+    cfg_on = tiny_cluster(**_RESIL, degrade_enabled=True)
+    jobs, bank = synth_workload(cfg_on, 16, 600.0, seed=0)
+    env_off = SchedEnv(cfg_off, [(jobs, bank)], episode_steps=8)
+    env_on = SchedEnv(cfg_on, [(jobs, bank)], episode_steps=8)
+    assert env_on.n_actions == env_off.n_actions + 5
+    assert env_on.obs_dim == env_off.obs_dim + len(RESILIENCE_FEATURES)
+
+    st, obs = env_on.reset(jax.random.key(0))
+    assert obs.shape == (env_on.obs_dim,)
+    # action k+1+GATE sets the rung; it persists on the state
+    a_gate = env_on.k + 1 + LVL_GATE
+    st2, obs2, r, done, info = env_on.step(st, jnp.int32(a_gate))
+    assert int(st2.sim.degrade_level) == LVL_GATE
+    assert int(jnp.sum(st2.sim.jstate == RUNNING)) == 0
+    # a dispatch action leaves the rung untouched
+    st3, *_ = env_on.step(st2, jnp.int32(env_on.k))
+    assert int(st3.sim.degrade_level) == LVL_GATE
+    # back to NORMAL
+    st4, *_ = env_on.step(st3, jnp.int32(env_on.k + 1 + LVL_NORMAL))
+    assert int(st4.sim.degrade_level) == LVL_NORMAL
+
+
+def test_resilience_drill_scenario_registered():
+    from repro.scenarios import SCENARIOS
+    assert "resilience_drill" in SCENARIOS
+    cfg = tiny_cluster(outages_enabled=True)
+    scn = resilience_drill(cfg)
+    assert scn.outages.start_t.shape == (2,)

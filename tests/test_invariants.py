@@ -1,0 +1,107 @@
+"""The checkify invariant harness (utils.invariants): env gating, clean
+passes in eager / jit-functionalized / batched modes, and detection of
+each corruption class the suite guards."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.checkify import JaxRuntimeError
+
+from repro.configs.sim import tiny_cluster
+from repro.core import build_statics, init_state, load_jobs, run_episode
+from repro.data import synth_workload
+from repro.utils import invariants
+
+
+def _setup(seed=0, **cfg_kw):
+    cfg = tiny_cluster(**cfg_kw)
+    jobs, bank = synth_workload(cfg, 16, 600.0, seed=seed)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(seed)), jobs)
+    return cfg, statics, state
+
+
+def test_env_gating(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    assert not invariants.enabled()
+    monkeypatch.setenv("REPRO_CHECKIFY", "0")
+    assert not invariants.enabled()
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    assert invariants.enabled()
+
+
+def test_clean_state_passes_eagerly():
+    cfg, statics, state = _setup()
+    invariants.check_state(cfg, statics, state)   # must not raise
+
+
+@pytest.mark.parametrize("corrupt,label", [
+    (lambda s: s._replace(free=s.free + 100.0), "free exceeds capacity"),
+    (lambda s: s._replace(free=s.free - 1.0), "negative free"),
+    (lambda s: s._replace(jstate=s.jstate.at[0].set(9)), "bad jstate"),
+    (lambda s: s._replace(node_up=s.node_up.at[0].set(0.5)), "node_up"),
+    (lambda s: s._replace(energy_kwh=jnp.float32(jnp.nan)), "NaN energy"),
+    (lambda s: s._replace(rack_outlet_c=s.rack_outlet_c + 1e4), "thermal"),
+    (lambda s: s._replace(lost_node_s=jnp.float32(-1.0)), "lost work"),
+    (lambda s: s._replace(placement=s.placement.at[0, 0].set(0)),
+     "placement without RUNNING"),
+])
+def test_corruption_detected(corrupt, label):
+    cfg, statics, state = _setup()
+    with pytest.raises(JaxRuntimeError):
+        invariants.check_state(cfg, statics, corrupt(state))
+
+
+def test_batched_state_checked():
+    """The suite broadcasts over a leading replica axis — one corrupt
+    replica in a batch is enough to fail (the run_fleet audit path)."""
+    cfg, statics, state = _setup()
+    batched = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (3,) + jnp.shape(a)), state)
+    invariants.check_state(cfg, statics, batched)
+    bad = batched._replace(free=batched.free.at[1].add(50.0))
+    with pytest.raises(JaxRuntimeError):
+        invariants.check_state(cfg, statics, bad)
+
+
+def test_run_episode_checkified_clean(monkeypatch):
+    """REPRO_CHECKIFY=1: the per-step suite rides inside the compiled
+    episode via checkify functionalization — per-tick AND macro — and a
+    healthy run passes."""
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    cfg, statics, state = _setup(node_mtbf_hours=0.5, node_repair_hours=0.1)
+    run_episode(cfg, statics, state, 300, "fcfs", summary_only=True)
+    run_episode(cfg, statics, state, 300, "fcfs", summary_only=True,
+                macro=True)
+
+
+def test_run_episode_checkified_catches_corruption(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    cfg, statics, state = _setup()
+    bad = state._replace(free=state.free + 100.0)
+    with pytest.raises(JaxRuntimeError):
+        run_episode(cfg, statics, bad, 10, "fcfs", summary_only=True)
+
+
+def test_run_fleet_posthoc_audit(monkeypatch):
+    """REPRO_CHECKIFY=1 run_fleet audits every replica's final state."""
+    from repro.core import run_fleet
+    from repro.scenarios import default_scenario
+
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    cfg, statics, state = _setup(node_mtbf_hours=0.5, node_repair_hours=0.1)
+    run_fleet(cfg, statics, state, 200, "fcfs",
+              scenarios=[default_scenario(cfg)] * 2, summary_only=True)
+
+
+def test_disabled_means_zero_overhead_program(monkeypatch):
+    """With the gate off, run_episode takes the plain (non-checkified)
+    path — the invariant suite costs nothing unless asked for."""
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    cfg, statics, state = _setup()
+    bad = state._replace(free=state.free + 100.0)
+    # corrupt state sails through: no checks compiled in
+    run_episode(cfg, statics, bad, 5, "fcfs", summary_only=True)

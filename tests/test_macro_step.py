@@ -133,9 +133,12 @@ def test_macro_dr_cap_crossing_breakpoints():
 
 
 def test_macro_with_failures():
-    """(c) stochastic failures: the fast-forward path replays the
-    per-tick Bernoulli draws, so the PRNG stream, kill counts and
-    requeues are bit-identical."""
+    """(c) stochastic failures: fault clocks are event-sampled
+    (exponential next-failure/next-repair times drawn at commit points),
+    so crossings are exact breakpoints in the quiet horizon — the PRNG
+    stream, kill counts and requeues are bit-identical AND the engine
+    still fast-forwards between faults (the per-tick Bernoulli engine
+    forced macro back to tick-by-tick whenever MTBF was finite)."""
     cfg = tiny_cluster(node_mtbf_hours=0.3)
     jobs, bank = synth_workload(cfg, 32, 900.0, seed=0)
     statics = build_statics(cfg, bank)
@@ -143,6 +146,8 @@ def test_macro_with_failures():
     fs, tel, fs2, tel2 = _run_both(cfg, statics, state, 900, "fcfs")
     _assert_equiv(fs, tel, fs2, tel2)
     assert float(fs.n_killed) > 0              # failures actually fired
+    # faults on no longer disables fast-forwarding
+    assert float(tel2.macro_steps) < 0.5 * 900
 
 
 def test_macro_policy_grid_equivalence():
@@ -343,6 +348,34 @@ else:
          (6, 150), (7, 201)])
     def test_quiet_horizon_never_overshoots(seed, warm):
         _check_horizon_never_overshoots(seed, warm)
+
+
+def test_macro_full_resilience_stack():
+    """(c') the whole resilience twin at once — node + rack fault clocks,
+    a scheduled maintenance window downing a rack, a brownout forcing the
+    degradation ladder, checkpoint/restart with write overhead and retry
+    budgets: per-tick and macro stay bit-identical (state AND PRNG
+    stream) and the engine still skips quiet stretches."""
+    from repro.scenarios import resilience_drill
+
+    cfg = tiny_cluster(node_mtbf_hours=0.5, node_repair_hours=0.2,
+                       rack_mtbf_hours=1.5, rack_repair_hours=0.3,
+                       ckpt_interval_s=240.0, ckpt_overhead_s=20.0,
+                       max_job_retries=2, requeue_backoff_s=60.0,
+                       outages_enabled=True, degrade_enabled=True)
+    scn = resilience_drill(cfg, maint_rack=0, maint_start_s=500.0,
+                           maint_len_s=400.0, brownout_start_s=1400.0,
+                           brownout_len_s=300.0, brownout_level=2)
+    jobs, bank = synth_workload(cfg, 32, 1500.0, seed=11)
+    statics = build_statics(cfg, bank, scenario=scn)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(2)), jobs)
+    fs, tel, fs2, tel2 = _run_both(cfg, statics, state, 2000, "fcfs")
+    _assert_equiv(fs, tel, fs2, tel2)
+    assert float(fs.n_killed) > 0
+    assert float(fs.lost_node_s) > 0
+    assert float(tel2.macro_steps) < 0.5 * 2000
+    s = summary(fs2, tel2)
+    assert s["goodput_frac"] < 1.0 and s["lost_node_seconds"] > 0
 
 
 def test_quiet_horizon_visible_queue_blocks():
