@@ -1,10 +1,26 @@
 """Fleet-scale scenario-sweep benchmark: aggregate env-steps/sec of the
 vmapped twin (``run_fleet``) vs replica count, with heterogeneous grid
 scenarios (the workload the ROADMAP's "as many scenarios as you can
-imagine" north-star asks for)."""
+imagine" north-star asks for).
+
+``bench_fleet_sharded`` adds the device-sharded path (``run_fleet(mesh=
+...)``): the same macro fleet on 8 host devices vs single-device vmap,
+including a lockstep-ADVERSARIAL workload — one contiguous shard of
+cap-event-dense replicas whose quiet horizons collapse to tens of ticks
+while everyone else fast-forwards — where the vmapped while-loop pays the
+busy replicas' trip count for every lane and sharding confines it to one
+device. Every sharded row carries a ``match_vmapped`` derived field
+(bitwise final-state equality, asserted). When the current process has
+fewer than 2 devices the bench re-execs itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (device count is
+locked at first jax init, same trick as tests/test_multidevice.py)."""
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 from typing import List, Tuple
 
@@ -78,3 +94,120 @@ def bench_fleet() -> List[Row]:
         f"telemetry_floats={out_floats} (vs {long_steps*R*16} stacked)",
     ))
     return rows
+
+
+def _sharded_rows(smoke: bool = False) -> List[Row]:
+    """Body of ``bench_fleet_sharded``; needs >=2 jax devices."""
+    import numpy as np
+
+    from repro.configs.sim import tiny_cluster
+    from repro.core import build_statics, init_state, load_jobs, run_fleet
+    from repro.data import synth_workload
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.scenarios import sample_scenarios
+    from repro.scenarios.events import cap_events
+    from repro.scenarios.scenario import default_scenario, stack_scenarios
+
+    D = min(8, len(jax.devices()))
+    mesh = make_fleet_mesh(D)
+    cfg = tiny_cluster()
+    jobs, bank = synth_workload(cfg, 32, 900.0, seed=0)
+    statics = build_statics(cfg, bank)
+    st = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    R = 2 * D if smoke else 8 * D
+    n_steps = 600 if smoke else 3000
+    n_rep = 2 if smoke else 3
+
+    def timed(fn):
+        fs, _ = fn()                         # compile
+        jax.block_until_ready(fs.t)
+        t0 = time.perf_counter()
+        for _ in range(n_rep):
+            fs, tel = fn()
+        jax.block_until_ready(fs.t)
+        return (time.perf_counter() - t0) / n_rep, fs, tel
+
+    def match(a, b):
+        for f in a._fields:
+            x, y = getattr(a, f), getattr(b, f)
+            if f == "key":
+                x, y = jax.random.key_data(x), jax.random.key_data(y)
+            if not np.array_equal(np.asarray(x), np.asarray(y)):
+                return False
+        return True
+
+    rows: List[Row] = []
+    workloads = [
+        # heterogeneous-but-benign sweep: horizons vary mildly
+        ("uniform", sample_scenarios(cfg, R, seed=11)),
+    ]
+    # lockstep-adversarial: the LAST R/D replicas (= exactly one contiguous
+    # shard under the replica-axis NamedSharding) carry a cap edge every
+    # 20 simulated seconds, so their macro quiet horizons collapse to ~10
+    # ticks while everyone else's span arrival gaps and the episode tail.
+    # Under vmap every lane pays the busy trip count; sharded, only one
+    # device does.
+    edges = np.arange(10.0, n_steps * cfg.dt - 20.0, 20.0)
+    busy = default_scenario(cfg)._replace(power_cap=cap_events(
+        edges, edges + 10.0, [cfg.nameplate_it_w * 1.3 * 0.7] * len(edges),
+        base_cap_w=cfg.power_cap_w))
+    quiet = default_scenario(cfg)
+    workloads.append((
+        "adversarial",
+        stack_scenarios([quiet] * (R - R // D) + [busy] * (R // D))))
+
+    for tag, scns in workloads:
+        def vmapped(scns=scns):
+            return run_fleet(cfg, statics, st, n_steps, "fcfs",
+                             scenarios=scns, macro=True, summary_only=True)
+
+        def sharded(scns=scns):
+            return run_fleet(cfg, statics, st, n_steps, "fcfs",
+                             scenarios=scns, macro=True, summary_only=True,
+                             mesh=mesh)
+
+        dt_v, fs_v, _ = timed(vmapped)
+        dt_s, fs_s, _ = timed(sharded)
+        ok = match(fs_v, fs_s)
+        assert ok, f"sharded fleet diverged from vmapped on {tag} workload"
+        suffix = "" if not smoke else "_smoke"
+        rows.append((
+            f"fleet_vmapped_{R}replicas_macro_{tag}{suffix}",
+            dt_v / n_steps * 1e6,
+            f"agg_steps_per_s={n_steps*R/dt_v:,.0f}",
+        ))
+        rows.append((
+            f"fleet_sharded_{R}replicas_macro_{tag}{suffix}",
+            dt_s / n_steps * 1e6,
+            f"agg_steps_per_s={n_steps*R/dt_s:,.0f};devices={D};"
+            f"speedup_vs_vmapped={dt_v/dt_s:.2f}x;match_vmapped={ok}",
+        ))
+    return rows
+
+
+def bench_fleet_sharded(smoke: bool = False) -> List[Row]:
+    if len(jax.devices()) >= 2:
+        return _sharded_rows(smoke)
+    # device count is locked at first jax init — re-exec with forced host
+    # devices and relay the rows (same pattern as tests/test_multidevice)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p)
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__)]
+        + (["--smoke"] if smoke else []),
+        capture_output=True, text=True, env=env, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded fleet sub-bench failed\nSTDOUT:\n{r.stdout}\n"
+            f"STDERR:\n{r.stderr}")
+    payload = json.loads(r.stdout.strip().splitlines()[-1])
+    return [tuple(row) for row in payload]
+
+
+if __name__ == "__main__":
+    # subprocess entry for bench_fleet_sharded: emit rows as one JSON line
+    print(json.dumps(_sharded_rows(smoke="--smoke" in sys.argv[1:])))

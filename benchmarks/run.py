@@ -12,6 +12,9 @@
   replay_tx_gaia_1h_faults[_macro] / faults_smoke_*  resilience twin:
                            event-sampled fault clocks under macro (BENCH_7)
   fleet_*replicas          beyond-paper: scenario-sweep fleet throughput
+  fleet_sharded_* / fleet_vmapped_*  device-sharded fleet (run_fleet mesh=)
+                           vs single-device vmap, incl. the lockstep-
+                           adversarial macro workload (BENCH_8)
   dispatch_* / power_scatter_*  sort-free placement + fused power kernel
   pallas_*                 kernel microbenches vs oracles
   train/decode_reduced_*   LM substrate throughput (reduced configs)
@@ -47,13 +50,35 @@ sys.path.insert(0, _ROOT)   # so `benchmarks.*` imports work as a script
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
 
-def _next_artifact_path() -> str:
-    taken = [
+def _trajectory_numbers() -> list:
+    return sorted(
         int(m.group(1))
         for p in glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json"))
         if (m := re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p)))
-    ]
-    return os.path.join(BENCH_DIR, f"BENCH_{max(taken, default=0) + 1}.json")
+    )
+
+
+def _warn_trajectory_gaps() -> list:
+    """LOUDLY report holes in the numbered BENCH_<n> trajectory (e.g. a PR
+    that referenced an artifact which never landed in-tree). The rule
+    (docs/performance.md): numbering is always 1 + highest existing — gaps
+    are never silently backfilled, because BENCH_<n> is read as "the
+    artifact PR n produced" and a late write would masquerade as history.
+    """
+    nums = _trajectory_numbers()
+    missing = sorted(set(range(1, max(nums, default=0) + 1)) - set(nums))
+    if missing:
+        print(
+            f"# WARNING: perf trajectory has gaps — missing "
+            f"{', '.join(f'BENCH_{n}.json' for n in missing)}; "
+            "numbering continues from the highest existing artifact and "
+            "gaps stay empty (see docs/performance.md)", file=sys.stderr)
+    return missing
+
+
+def _next_artifact_path() -> str:
+    return os.path.join(
+        BENCH_DIR, f"BENCH_{max(_trajectory_numbers(), default=0) + 1}.json")
 
 
 def _named(fn, name, **kw):
@@ -69,6 +94,7 @@ def _benches(smoke: bool):
     from benchmarks.bench_rl import bench_rl
 
     if smoke:
+        from benchmarks.bench_fleet import bench_fleet_sharded
         from benchmarks.bench_sim import (
             bench_faults_smoke,
             bench_macro_smoke,
@@ -84,9 +110,10 @@ def _benches(smoke: bool):
             bench_faults_smoke,
             _named(bench_policy_grid, "bench_policy_grid", smoke=True),
             _named(bench_rl, "bench_rl", smoke=True),
+            _named(bench_fleet_sharded, "bench_fleet_sharded", smoke=True),
         ]
 
-    from benchmarks.bench_fleet import bench_fleet
+    from benchmarks.bench_fleet import bench_fleet, bench_fleet_sharded
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_lm import (
         bench_decode_reduced,
@@ -123,6 +150,7 @@ def _benches(smoke: bool):
         bench_dispatch,
         bench_policy_grid,
         bench_fleet,
+        bench_fleet_sharded,
         bench_kernels,
         bench_train_reduced,
         bench_decode_reduced,
@@ -140,6 +168,18 @@ def compare_artifacts(path_a: str, path_b: str,
     than a). Rows are matched by name; unmatched, failed (nan) and
     zero-time rows are listed but never counted as regressions — the
     trajectory must stay diffable even when a bench set changes shape."""
+    num = lambda p: (m := re.fullmatch(r"BENCH_(\d+)\.json",
+                                       os.path.basename(p))) and int(m.group(1))
+    na_n, nb_n = num(path_a), num(path_b)
+    if na_n and nb_n and abs(nb_n - na_n) > 1:
+        skipped = [f"BENCH_{i}.json"
+                   for i in range(min(na_n, nb_n) + 1, max(na_n, nb_n))
+                   if not os.path.exists(os.path.join(BENCH_DIR,
+                                                      f"BENCH_{i}.json"))]
+        if skipped:
+            print(f"# NOTE: comparing across a trajectory gap — "
+                  f"{', '.join(skipped)} never landed; deltas span more "
+                  "than one PR (see docs/performance.md)", file=sys.stderr)
     a = json.load(open(path_a))
     b = json.load(open(path_b))
     rows_a = {r["name"]: r for r in a["rows"]}
@@ -236,6 +276,7 @@ def main(argv=None) -> None:
     elif args.smoke:
         out = os.path.join(BENCH_DIR, "BENCH_smoke.json")
     else:
+        _warn_trajectory_gaps()
         out = _next_artifact_path()
     with open(out, "w") as f:
         json.dump({

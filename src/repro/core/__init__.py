@@ -13,7 +13,12 @@ from repro.core.faults import (
     effective_level,
     next_fault_event,
 )
-from repro.core.fleet import fleet_summary, policy_scenario_grid, run_fleet
+from repro.core.fleet import (
+    fleet_summary,
+    policy_scenario_grid,
+    run_fleet,
+    shard_fleet,
+)
 from repro.core.placement import (
     PLACE_IDS,
     PLACEMENTS,
@@ -40,6 +45,7 @@ from repro.core.sim import (
     quiet_horizon,
     run_episode,
     summary,
+    summary_columns,
 )
 from repro.core.state import (
     DONE,

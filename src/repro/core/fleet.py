@@ -1,7 +1,7 @@
-"""Vmapped fleet runner: N datacenter replicas, heterogeneous grid
-scenarios, heterogeneous scheduling policies AND heterogeneous workload
-telemetry (per-replica ids into one shared banked trace), one compiled
-call.
+"""Fleet runner: N datacenter replicas, heterogeneous grid scenarios,
+heterogeneous scheduling policies AND heterogeneous workload telemetry
+(per-replica ids into one shared banked trace), one compiled call —
+vmapped on one device, or shard_map-partitioned across a device mesh.
 
 ``run_fleet`` broadcasts one initial ``SimState``/``Statics`` across R
 replicas, installs a per-replica ``Scenario`` (batched pytree from
@@ -19,6 +19,23 @@ knobs (``telemetry_every`` / ``summary_only``, forwarded to
 ``run_episode``) replace the O(R * n_steps * 16) stacked ``StepOut`` with
 windowed or O(R * 16) episode-wide reductions — fleet-sweep memory then no
 longer scales with ``n_steps``.
+
+Device sharding (``mesh=``): a single-device ``vmap`` runs every
+replica's macro-stepping while-loop in LOCKSTEP — the loop condition
+reduces over all R lanes, so one event-busy replica drags every
+fast-forwarding replica back to per-tick speed AND per-tick cost (the
+full event tick is computed for all lanes on every iteration). Passing a
+1-D fleet mesh (``launch.mesh.make_fleet_mesh``) partitions the replica
+axis across devices via ``shard_map`` with the same ``vmap`` INSIDE each
+shard: lockstep shrinks to R/D lanes, shards with quiet replicas retire
+their episodes in a handful of outer iterations regardless of what other
+shards are doing (no collectives inside, so each device's while-loops
+run their own trip counts), and state/key donation hands XLA per-device
+buffers. The per-replica computation — including the PRNG
+``split``/``fold_in`` schedule, which happens on the host BEFORE the
+compiled call and is shared by both paths — is identical, so sharded
+final states / streams / telemetry are bit-identical to the vmapped
+path (pinned by ``tests/test_multidevice.py``).
 """
 
 from __future__ import annotations
@@ -29,12 +46,25 @@ from typing import Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
 from repro.configs.sim import SimConfig
 from repro.core.placement import Policy, make_policy, stack_policies
-from repro.core.sim import StepOut, TelemetrySummary, run_episode, summary
+from repro.core.sim import (
+    StepOut,
+    TelemetrySummary,
+    run_episode,
+    summary_columns,
+)
 from repro.core.state import SimState, Statics
 from repro.scenarios.scenario import Scenario, n_replicas, stack_scenarios
+from repro.sharding.specs import (
+    FLEET_AXIS,
+    fleet_pspecs,
+    fleet_shardings,
+    replicated_pspecs,
+    shard_map_compat,
+)
 from repro.utils import invariants
 
 
@@ -120,6 +150,51 @@ def _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
     return jax.vmap(one)(scenarios, policies, keys, state)
 
 
+# Sharded twin of ``_fleet``: the same per-replica ``one`` under the same
+# inner ``vmap``, but partitioned across ``mesh``'s fleet axis by shard_map
+# so each device's R/D-lane while-loops run their own trip counts (no
+# collectives inside => no cross-shard lockstep). ``mesh`` is hashable and
+# rides the jit static cache alongside cfg; state/keys donation is
+# per-device buffer reuse here.
+@partial(jax.jit,
+         static_argnames=("cfg", "n_steps", "scheduler", "kw_items", "mesh",
+                          "axis"),
+         donate_argnames=("state", "keys"))
+def _fleet_sharded(cfg, statics, scenarios, policies, state, keys, n_steps,
+                   scheduler, kw_items, mesh, axis):
+    kw = dict(kw_items)
+
+    def shard(statics, scenarios, policies, keys, state):
+        def one(scn: Scenario, pol, key: jax.Array, st: SimState):
+            st = st._replace(key=key)
+            stt = statics._replace(scenario=scn)
+            who = scheduler if pol is None else pol
+            return run_episode(cfg, stt, st, n_steps, who, **kw)
+
+        return jax.vmap(one)(scenarios, policies, keys, state)
+
+    # per-leaf spec pytrees from sharding.specs: statics replicate, every
+    # replica-batched operand splits its leading axis; the output prefix
+    # spec P(axis) matches (SimState, StepOut|TelemetrySummary) alike
+    return shard_map_compat(
+        shard, mesh,
+        in_specs=(replicated_pspecs(statics),
+                  fleet_pspecs(scenarios, axis), fleet_pspecs(policies, axis),
+                  fleet_pspecs(keys, axis), fleet_pspecs(state, axis)),
+        out_specs=PartitionSpec(axis),
+    )(statics, scenarios, policies, keys, state)
+
+
+def shard_fleet(tree, mesh, axis: str = FLEET_AXIS):
+    """``device_put`` a replica-batched fleet pytree (batched ``SimState``
+    / ``Scenario`` / ``Policy`` / per-replica keys) onto ``mesh``, leading
+    replica axis split in contiguous blocks across the ``axis`` devices —
+    replica i lands on device i // (R / D). Optional for ``run_fleet(...,
+    mesh=...)`` (jit reshards automatically) but placing inputs up front
+    skips the initial all-to-device scatter on repeated/chained sweeps."""
+    return jax.device_put(tree, fleet_shardings(mesh, tree, axis))
+
+
 def run_fleet(
     cfg: SimConfig,
     statics: Statics,
@@ -130,6 +205,8 @@ def run_fleet(
     scenarios: Scenario | Sequence[Scenario] | None = None,
     policies: Policy | Sequence[Policy | Tuple[str, str]] | None = None,
     workloads: Sequence[int] | jnp.ndarray | None = None,
+    mesh=None,
+    mesh_axis: str = FLEET_AXIS,
     **kw,
 ) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Simulate R replicas of the twin for ``n_steps`` in one jitted call.
@@ -160,6 +237,15 @@ def run_fleet(
     an already replica-batched one — e.g. the final states of a previous
     ``run_fleet`` call for chained sweeps. A batched state's buffers are
     donated to the compiled call and must not be reused afterwards.
+
+    ``mesh``: a 1-D fleet mesh (``launch.mesh.make_fleet_mesh``) switches
+    execution to the device-sharded path — the replica axis splits in
+    contiguous blocks across ``mesh_axis`` via shard_map with the same
+    per-shard ``vmap`` inside, so macro while-loops lockstep only within
+    a shard (see module docstring) and memory/donation happen per device.
+    R must divide evenly by the mesh size (loud error otherwise — a
+    silent pad would fabricate replicas whose summaries leak into sweep
+    statistics). Results are bit-identical to ``mesh=None``.
 
     ``**kw`` forwards to ``run_episode``/``make_step`` — in particular
     ``summary_only=True`` returns per-replica ``TelemetrySummary`` with
@@ -229,8 +315,23 @@ def run_fleet(
                 "to the edge slice")
         state = state._replace(workload=jnp.asarray(ids_host))
     kw_items = tuple(sorted(kw.items()))
-    out = _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
-                 scheduler, kw_items)
+    if mesh is not None:
+        if mesh_axis not in mesh.shape:
+            raise ValueError(
+                f"mesh has axes {tuple(mesh.shape)}, no {mesh_axis!r} — "
+                "build a fleet mesh with launch.mesh.make_fleet_mesh()")
+        n_shards = int(mesh.shape[mesh_axis])
+        if R % n_shards:
+            raise ValueError(
+                f"{R} replicas do not divide across {n_shards} "
+                f"{mesh_axis!r}-axis devices — a silent pad would "
+                "fabricate replicas; pick R as a multiple of the mesh "
+                "size or shrink the mesh (make_fleet_mesh(n_devices=...))")
+        out = _fleet_sharded(cfg, statics, scenarios, policies, state, keys,
+                             n_steps, scheduler, kw_items, mesh, mesh_axis)
+    else:
+        out = _fleet(cfg, statics, scenarios, policies, state, keys, n_steps,
+                     scheduler, kw_items)
     if invariants.enabled():
         # post-hoc eager audit of every replica's final state (the checks
         # broadcast over the leading replica axis); the per-step checkify
@@ -247,12 +348,13 @@ def fleet_summary(
     """Per-replica ``summary`` dicts from batched final states. Pass the
     per-replica ``TelemetrySummary`` (``summary_only=True`` output) to also
     surface the macro-stepping skip accounting (``ticks_simulated`` /
-    ``macro_steps_taken`` / ``macro_skip_ratio``) per replica."""
-    host = jax.device_get(final_states)        # one transfer, not R x fields
-    tel = None if telemetry is None else jax.device_get(telemetry)
-    R = int(np.shape(host.t)[0])
-    return [
-        summary(jax.tree.map(lambda a: a[i], host),
-                None if tel is None else jax.tree.map(lambda a: a[i], tel))
-        for i in range(R)
-    ]
+    ``macro_steps_taken`` / ``macro_skip_ratio``) per replica.
+
+    All reductions run vectorized over the replica axis in
+    ``sim.summary_columns`` (one device->host transfer, numpy column
+    math); only the final dict-of-floats fan-out is Python, so the host
+    tail of a 1024-replica sweep is milliseconds, not the former
+    per-replica ``summary`` loop."""
+    cols = summary_columns(final_states, telemetry)
+    R = int(np.shape(cols["t_end_s"])[0])
+    return [{k: float(v[i]) for k, v in cols.items()} for i in range(R)]

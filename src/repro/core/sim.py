@@ -1121,64 +1121,86 @@ def run_episode(
     return go(state)
 
 
-def summary(state: SimState,
-            telemetry: TelemetrySummary | None = None) -> dict:
-    # one device->host transfer (the per-field float() path issued ~16
-    # separate D2H copies; fleet_summary already batches the same way)
+def summary_columns(state: SimState,
+                    telemetry: TelemetrySummary | None = None) -> dict:
+    """Column-wise ``summary``: a dict of float64 numpy arrays with one
+    entry per replica, from replica-batched final states (leading replica
+    axis on every leaf, e.g. ``run_fleet`` output). Also accepts an
+    unbatched state, where every column is 0-d — ``summary`` is that
+    special case. ONE device->host transfer covers the whole batch, and
+    all per-replica reductions happen as numpy array ops, so
+    ``fleet_summary`` on a 1024-replica sweep no longer spends its tail
+    in a host-side Python loop over replicas."""
     s = jax.device_get(state)
-    n = max(float(s.n_completed), 1.0)
-    out = {
-        "t_end_s": float(s.t),
-        "completed": float(s.n_completed),
-        "killed_by_failures": float(s.n_killed),
-        "energy_kwh": float(s.energy_kwh),
-        "it_energy_kwh": float(s.it_energy_kwh),
-        "loss_energy_kwh": float(s.loss_energy_kwh),
-        "cooling_energy_kwh": float(s.cool_energy_kwh),
-        "carbon_kg": float(s.carbon_kg),
-        "elec_cost_usd": float(s.elec_cost_usd),
-        "mean_power_w": float(s.sum_power_w) / max(float(s.n_steps), 1.0),
-        "mean_wait_s": float(s.sum_wait) / n,
-        "mean_slowdown": float(s.sum_slowdown) / n,
+    batched = np.ndim(s.t) == 1
+
+    def f(a):
+        return np.asarray(a, np.float64)
+
+    def reduce_tail(a, op=np.sum):
+        # reduce every axis except the replica axis (all axes when
+        # unbatched) — covers per-job state axes and telemetry windows
+        x = f(a)
+        return op(x, axis=tuple(range(1, x.ndim)) if batched else None)
+
+    n = np.maximum(f(s.n_completed), 1.0)
+    cols = {
+        "t_end_s": f(s.t),
+        "completed": f(s.n_completed),
+        "killed_by_failures": f(s.n_killed),
+        "energy_kwh": f(s.energy_kwh),
+        "it_energy_kwh": f(s.it_energy_kwh),
+        "loss_energy_kwh": f(s.loss_energy_kwh),
+        "cooling_energy_kwh": f(s.cool_energy_kwh),
+        "carbon_kg": f(s.carbon_kg),
+        "elec_cost_usd": f(s.elec_cost_usd),
+        "mean_power_w": f(s.sum_power_w) / np.maximum(f(s.n_steps), 1.0),
+        "mean_wait_s": f(s.sum_wait) / n,
+        "mean_slowdown": f(s.sum_slowdown) / n,
         "gflops_per_watt": (
-            float(s.flops_integral) / 3600.0 / 1000.0
-            / max(float(s.energy_kwh), 1e-9)
+            f(s.flops_integral) / 3600.0 / 1000.0
+            / np.maximum(f(s.energy_kwh), 1e-9)
         ),
-        "avg_pue": (
-            float(s.energy_kwh) / max(float(s.it_energy_kwh), 1e-9)
-        ),
+        "avg_pue": f(s.energy_kwh) / np.maximum(f(s.it_energy_kwh), 1e-9),
         # thermal twin (core.thermal); with thermal_enabled off these
         # report the supply-temperature initial condition and 0
-        "peak_rack_outlet_c": float(s.peak_rack_c),
-        "thermal_throttle_s": float(s.thermal_throttle_s),
+        "peak_rack_outlet_c": f(s.peak_rack_c),
+        "thermal_throttle_s": f(s.thermal_throttle_s),
     }
     # resilience twin (core.faults): goodput vs throughput. "Useful" work
     # is the node-seconds of completed jobs; lost_node_seconds is what
     # kills destroyed (since-last-checkpoint for retries, whole jobs for
     # terminal failures). goodput_frac = useful / (useful + lost) — the
     # fraction of delivered node-seconds that produced finished jobs.
-    useful = float(np.sum(
-        (np.asarray(s.jstate) == DONE)
-        * np.asarray(s.dur_est) * np.asarray(s.n_nodes, np.float64)))
-    lost = float(s.lost_node_s)
-    out["lost_node_seconds"] = lost
-    out["jobs_failed_terminal"] = float(s.n_failed)
-    out["goodput_node_s"] = useful
-    out["goodput_frac"] = useful / max(useful + lost, 1e-9)
+    useful = reduce_tail(
+        (np.asarray(s.jstate) == DONE) * f(s.dur_est) * f(s.n_nodes))
+    lost = f(s.lost_node_s)
+    cols["lost_node_seconds"] = lost
+    cols["jobs_failed_terminal"] = f(s.n_failed)
+    cols["goodput_node_s"] = useful
+    cols["goodput_frac"] = useful / np.maximum(useful + lost, 1e-9)
     if telemetry is not None:
         # macro-stepping skip accounting (satellite of the macro engine):
         # how much of the episode the engine fast-forwarded. Windowed
-        # telemetry (telemetry_every=k) arrives with a leading window
-        # axis — summing it recovers the episode totals.
+        # telemetry (telemetry_every=k) arrives with a window axis after
+        # the replica one — summing it recovers the episode totals.
         tl = jax.device_get(telemetry)
-        ticks = float(np.sum(tl.n_steps))
-        full = float(np.sum(tl.macro_steps))
-        out["ticks_simulated"] = ticks
-        out["macro_steps_taken"] = full
-        out["macro_skip_ratio"] = ticks / max(full, 1.0)
+        ticks = reduce_tail(tl.n_steps)
+        full = reduce_tail(tl.macro_steps)
+        cols["ticks_simulated"] = ticks
+        cols["macro_steps_taken"] = full
+        cols["macro_skip_ratio"] = ticks / np.maximum(full, 1.0)
         # cooling-plant telemetry (tick-weighted across windows)
-        out["mean_cop"] = float(
-            np.sum(np.asarray(tl.mean_cop) * np.asarray(tl.n_steps))
-            / max(ticks, 1.0))
-        out["max_rack_outlet_c"] = float(np.max(np.asarray(tl.max_rack_c)))
-    return out
+        cols["mean_cop"] = (
+            reduce_tail(f(tl.mean_cop) * f(tl.n_steps))
+            / np.maximum(ticks, 1.0))
+        cols["max_rack_outlet_c"] = reduce_tail(tl.max_rack_c, op=np.max)
+    return cols
+
+
+def summary(state: SimState,
+            telemetry: TelemetrySummary | None = None) -> dict:
+    """Scalar episode summary of one (unbatched) final state — the 0-d
+    special case of ``summary_columns``."""
+    return {k: float(v)
+            for k, v in summary_columns(state, telemetry).items()}

@@ -8,7 +8,13 @@ footprint, and job throughput").
 
 The env is a pytree-in/pytree-out (reset, step) pair -> vmap over
 thousands of parallel datacenters, lax.scan over time, shard_map across
-the mesh for distributed PPO.
+the mesh for distributed PPO. The sharded path is live, not aspirational:
+``rl.distributed.distributed_ppo_train(env, launch.mesh.make_fleet_mesh())``
+splits the ``n_envs`` replicas across devices with the same
+replica-axis PartitionSpecs ``core.fleet.run_fleet(mesh=...)`` uses —
+because ``EnvState`` is sim-state only (shared ``Statics`` stays
+replicated, see below), each shard's rollout moves O(local envs x
+sim-state) and only PPO gradients cross the wire.
 
 Lightweight-state design (the RL-rollout hot path):
 

@@ -1,20 +1,38 @@
-"""Distributed PPO: shard_map data parallelism over the mesh 'data' axis
-with int8-compressed gradient all-reduce (error feedback).
+"""Distributed PPO: shard_map data parallelism over a mesh axis with
+int8-compressed gradient all-reduce (error feedback).
 
 Each shard rolls out its own slice of the vectorized environments and
 computes local PPO gradients; the only cross-shard communication is the
 compressed psum (4x fewer bytes on the wire than fp32 — the knob the
 brief calls "gradient compression"). Params stay replicated.
 
+Fleet wiring: ``envs.SchedEnv`` is a pure pytree env, so handing
+``distributed_ppo_train`` the 1-D fleet mesh from
+``launch.mesh.make_fleet_mesh()`` shards the ``n_envs`` datacenter
+replicas across devices exactly like ``core.fleet.run_fleet(mesh=...)``
+does for plain sweeps — each device rolls out its own block of
+simulators (macro while-loops lockstep only within the shard) and only
+gradients cross the wire. The default ``axis`` is the mesh's sole/first
+axis name, so the same mesh object works for both entry points.
+
+The outer loop is the scanned single-compile shape ``ppo_train`` uses:
+``sync_every`` iterations fuse into one ``lax.scan`` program (optimizer
+update included) and ONE ``device_get`` drains each chunk's stacked
+stats — the old per-iteration ``step_jit`` dispatch + ``float()``-per-
+stat host sync (and the deprecated ``with mesh:`` context it needed) is
+gone. ``history`` carries the same per-iteration keys as ``ppo_train``
+(plus ``loss``), so benches can diff the two trainers row for row.
+
 Note the VMA detail: params enter the shard_map replicated, so they are
 pcast to "varying" before jax.grad — otherwise shard_map's AD inserts its
-own fp32 psum and the reduction (and the bytes) happen twice.
+own fp32 psum and the reduction (and the bytes) happen twice. On the
+pinned jax floor (no ``pcast``) the ``sharding.specs`` compat shims run
+shard_map with replication checking off, which has the same effect.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +43,8 @@ from repro.optim.base import clip_by_global_norm
 from repro.optim.compress import compressed_psum
 from repro.rl.gae import gae
 from repro.rl.policy import ActorCritic
-from repro.rl.ppo import PPOConfig, Transition, make_rollout, ppo_loss
+from repro.rl.ppo import PPOConfig, make_rollout, ppo_loss
+from repro.sharding.specs import pcast_varying, shard_map_compat
 
 
 def make_distributed_grad_step(
@@ -34,18 +53,20 @@ def make_distributed_grad_step(
 ):
     """Returns grad_step(params, env_states, key, error) ->
     (grads, env_states, new_error, stats); rollout+GAE+grad run per shard,
-    gradients cross the wire int8-compressed."""
+    gradients cross the wire int8-compressed. ``stats`` carries the
+    ``ppo_train`` stat set (pmean'd across shards) plus the total loss."""
     n_shards = mesh.shape[axis]
-    assert cfg.n_envs % n_shards == 0
+    if cfg.n_envs % n_shards:
+        raise ValueError(
+            f"{cfg.n_envs} envs do not divide across {n_shards} {axis!r}"
+            "-axis devices — pick n_envs as a multiple of the mesh size")
     local_cfg = PPOConfig(**{**cfg.__dict__, "n_envs": cfg.n_envs // n_shards})
     rollout = make_rollout(env, policy, local_cfg)
 
     def local(params, env_states, key, error):
         key = key[0]          # (1,) shard slice of the per-shard key array
         error = jax.tree.map(lambda e: e[0], error)
-        params = jax.tree.map(
-            lambda x: jax.lax.pcast(x, axis, to="varying"), params
-        )
+        params = pcast_varying(params, axis)
         env_states, batch, last_val, ep = rollout(params, env_states, key)
         adv, ret = gae(batch.reward, batch.value, batch.done, last_val,
                        gamma=cfg.gamma, lam=cfg.lam)
@@ -60,12 +81,15 @@ def make_distributed_grad_step(
             grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
         # window-local (ep not threaded across grad steps here; see
         # make_rollout's docstring)
+        pm = lambda x: jax.lax.pmean(x, axis)
         stats = {
-            "loss": jax.lax.pmean(loss, axis),
-            "mean_episode_return": jax.lax.pmean(
-                jnp.mean(ep["fin_ret"]), axis),
-            "mean_episode_len": jax.lax.pmean(
-                jnp.mean(ep["fin_len"].astype(jnp.float32)), axis),
+            "loss": pm(loss),
+            "mean_reward": pm(jnp.mean(batch.reward)),
+            "mean_episode_return": pm(jnp.mean(ep["fin_ret"])),
+            "mean_episode_len": pm(
+                jnp.mean(ep["fin_len"].astype(jnp.float32))),
+            "mean_value": pm(jnp.mean(batch.value)),
+            **{k: pm(v) for k, v in metrics.items()},
         }
         return grads, env_states, jax.tree.map(lambda e: e[None], error), stats
 
@@ -73,13 +97,17 @@ def make_distributed_grad_step(
         return jax.tree.map(lambda _: spec, tree)
 
     def grad_step(params, env_states, keys, error):
-        return jax.shard_map(
+        return shard_map_compat(
             local,
-            mesh=mesh,
-            in_specs=(P(), spec_like(env_states, P(axis)), P(axis),
+            mesh,
+            in_specs=(spec_like(params, P()),
+                      spec_like(env_states, P(axis)),
+                      P(axis),
                       spec_like(error, P(axis))),
-            out_specs=(P(), spec_like(env_states, P(axis)),
-                       spec_like(error, P(axis)), P()),
+            out_specs=(spec_like(params, P()),
+                       spec_like(env_states, P(axis)),
+                       spec_like(error, P(axis)),
+                       P()),
         )(params, env_states, keys, error)
 
     return grad_step
@@ -87,10 +115,18 @@ def make_distributed_grad_step(
 
 def distributed_ppo_train(
     env, mesh, *, cfg: PPOConfig = PPOConfig(), n_iterations: int = 10,
-    seed: int = 0, compress: bool = True, axis: str = "data",
-):
+    seed: int = 0, compress: bool = True, axis: Optional[str] = None,
+    log: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    sync_every: Optional[int] = None,
+) -> Tuple[Any, list]:
     """End-to-end distributed PPO (used on multi-host topologies; exercised
-    on fake devices in tests)."""
+    on fake devices in tests). Returns (params, history) with the same
+    history interface as ``ppo_train``: one dict of per-iteration floats
+    per iteration, drained chunk-wise (``sync_every`` iterations per
+    compiled program, one ``device_get`` per chunk). ``axis`` defaults to
+    the mesh's first axis name, so a ``make_fleet_mesh()`` works as-is."""
+    if axis is None:
+        axis = mesh.axis_names[0]
     policy = ActorCritic(env.obs_dim, env.n_actions)
     opt = AdamW(lr=cfg.lr, b2=0.999, weight_decay=0.0)
     key = jax.random.key(seed)
@@ -106,16 +142,37 @@ def distributed_ppo_train(
     grad_step = make_distributed_grad_step(
         env, policy, cfg, mesh, axis=axis, compress=compress)
 
+    def iteration(carry, step):
+        params, opt_state, env_states, error, key = carry
+        key, kr = jax.random.split(key)
+        keys = jax.random.split(kr, n_shards)
+        grads, env_states, error, stats = grad_step(
+            params, env_states, keys, error)
+        grads, _ = clip_by_global_norm(grads, cfg.max_grad_norm)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        return (params, opt_state, env_states, error, key), stats
+
+    def chunk(carry, steps):
+        return jax.lax.scan(iteration, carry, steps)
+
+    chunk_jit = jax.jit(chunk)
+
+    if sync_every is None:
+        sync_every = min(n_iterations, 8)
+    sync_every = max(1, sync_every)
+
     history = []
-    with mesh:
-        step_jit = jax.jit(grad_step)
-        for it in range(n_iterations):
-            key, kr = jax.random.split(key)
-            keys = jax.random.split(kr, n_shards)
-            grads, env_states, error, stats = step_jit(
-                params, env_states, keys, error)
-            grads, _ = clip_by_global_norm(grads, cfg.max_grad_norm)
-            params, opt_state = opt.update(grads, opt_state, params,
-                                           jnp.int32(it))
-            history.append({k: float(v) for k, v in stats.items()})
-    return params, history
+    carry = (params, opt_state, env_states, error, key)
+    it = 0
+    while it < n_iterations:
+        n = min(sync_every, n_iterations - it)
+        steps = jnp.arange(it, it + n, dtype=jnp.int32)
+        carry, stats = chunk_jit(carry, steps)
+        host = jax.device_get(stats)              # ONE sync per chunk
+        for i in range(n):
+            s = {k: float(v[i]) for k, v in host.items()}
+            history.append(s)
+            if log:
+                log(it + i, s)
+        it += n
+    return carry[0], history

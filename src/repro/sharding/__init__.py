@@ -1,2 +1,11 @@
 from repro.sharding.ctx import ShardCtx
-from repro.sharding.specs import param_pspecs, train_state_pspecs
+from repro.sharding.specs import (
+    FLEET_AXIS,
+    fleet_pspecs,
+    fleet_shardings,
+    param_pspecs,
+    pcast_varying,
+    replicated_pspecs,
+    shard_map_compat,
+    train_state_pspecs,
+)

@@ -15,10 +15,23 @@ import textwrap
 import jax
 import pytest
 
+def _has_shard_map_compat() -> bool:
+    # what sharding.specs.shard_map_compat needs: the public API or the
+    # jax.experimental fallback (run with check_rep=False there)
+    if hasattr(jax, "shard_map"):
+        return True
+    try:
+        from jax.experimental.shard_map import shard_map  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
 _CAPS = {
     "make_mesh": hasattr(jax, "make_mesh"),
     "shard_map": hasattr(jax, "shard_map"),
     "pcast": hasattr(jax.lax, "pcast"),
+    "shard_map_compat": _has_shard_map_compat(),
 }
 
 
@@ -195,42 +208,50 @@ def test_fleet_with_thermals_shards_across_devices():
     assert "FLEET_THERMAL OK" in out
 
 
-@_requires("make_mesh", "shard_map", "pcast")
+@_requires("make_mesh", "shard_map_compat")
 def test_distributed_ppo_module_trains():
-    """repro.rl.distributed: shard_map PPO with int8 grad all-reduce."""
+    """repro.rl.distributed: shard_map PPO on a SchedEnv fleet with int8
+    grad all-reduce, scanned outer loop, ppo_train-shaped history. Runs on
+    the jax floor through sharding.specs.shard_map_compat (formerly gated
+    on the public jax.shard_map/pcast APIs and skipped everywhere)."""
     out = _run_sub("""
         import jax
         from repro.configs.sim import tiny_cluster
         from repro.data import synth_workload
         from repro.envs import SchedEnv
+        from repro.launch.mesh import make_fleet_mesh
         from repro.rl.distributed import distributed_ppo_train
         from repro.rl.ppo import PPOConfig
 
         cfg = tiny_cluster(sched_max_candidates=4)
         wls = [synth_workload(cfg, 16, 600.0, seed=s) for s in range(2)]
         env = SchedEnv(cfg, wls, episode_steps=6, sim_steps_per_action=5)
-        mesh = mk_mesh((8,), ("data",))
+        mesh = make_fleet_mesh(8)   # axis defaults to the mesh's own name
         params, hist = distributed_ppo_train(
             env, mesh, cfg=PPOConfig(n_envs=8, rollout_len=6, n_epochs=1,
                                      n_minibatches=1),
-            n_iterations=2, compress=True)
-        assert len(hist) == 2
+            n_iterations=3, compress=True, sync_every=2)
+        assert len(hist) == 3
         import numpy as np
-        assert all(np.isfinite(h["loss"]) for h in hist)
+        # same per-iteration stat interface as ppo_train (+ total loss)
+        for k in ("loss", "mean_reward", "mean_episode_return",
+                  "mean_episode_len", "mean_value", "pg_loss", "v_loss",
+                  "entropy", "approx_kl"):
+            assert all(np.isfinite(h[k]) for h in hist), k
         print("DIST_PPO OK")
     """)
     assert "DIST_PPO OK" in out
 
 
-@_requires("make_mesh", "shard_map", "pcast")
+@_requires("make_mesh", "shard_map_compat")
 def test_distributed_ppo_with_compressed_psum():
     """shard_map DP PPO gradient step with int8-compressed all-reduce."""
     out = _run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.optim.compress import compressed_psum
         from repro.rl.policy import ActorCritic
+        from repro.sharding.specs import pcast_varying, shard_map_compat
 
         mesh = mk_mesh((8,), ("data",))
         pol = ActorCritic(16, 4)
@@ -243,19 +264,22 @@ def test_distributed_ppo_with_compressed_psum():
                 return jnp.mean((pol.apply(p, obs)[1] - tgt) ** 2)
             return jax.grad(loss)(params)
 
-        @partial(jax.shard_map, mesh=mesh,
-                 in_specs=(P(), P("data"), P("data")), out_specs=P())
-        def step(params, obs, tgt):
+        def step_local(params, obs, tgt):
             # mark params shard-varying so jax.grad stays LOCAL (otherwise
-            # shard_map AD inserts its own psum and we'd reduce twice)
-            params = jax.tree.map(
-                lambda x: jax.lax.pcast(x, "data", to="varying"), params)
+            # shard_map AD inserts its own psum and we'd reduce twice; on
+            # the jax floor pcast_varying is a no-op and check_rep=False
+            # inside shard_map_compat has the same effect)
+            params = pcast_varying(params, "data")
             g = local_grads(params, obs, tgt)
             g, _ = compressed_psum(g, "data")
             return g
 
-        with mesh:
-            g_c = step(params, obs, tgt)
+        step = shard_map_compat(
+            step_local, mesh,
+            in_specs=(jax.tree.map(lambda _: P(), params), P("data"),
+                      P("data")),
+            out_specs=jax.tree.map(lambda _: P(), params))
+        g_c = step(params, obs, tgt)
         g_ref = local_grads(params, obs, tgt)  # full-batch reference
         err = max(float(jnp.max(jnp.abs(a - b)))
                   for a, b in zip(jax.tree.leaves(g_c), jax.tree.leaves(g_ref)))
@@ -263,3 +287,94 @@ def test_distributed_ppo_with_compressed_psum():
         assert err < 0.05
     """)
     assert "ERR" in out
+
+
+@_requires("make_mesh", "shard_map_compat")
+def test_sharded_fleet_bit_identical_to_vmapped():
+    """run_fleet(mesh=...) vs the vmapped path, macro engine ON with
+    thermals AND faults enabled: final states (including the PRNG
+    streams), telemetry and fleet_summary must match BITWISE — the shard
+    boundary only changes which device hosts each replica's while-loop,
+    never a single op in it (the split/fold_in key schedule runs on the
+    host before the compiled call, shared by both paths)."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.sim import tiny_cluster
+        from repro.core import (build_statics, fleet_summary, init_state,
+                                load_jobs, run_fleet)
+        from repro.data import synth_workload
+        from repro.launch.mesh import make_fleet_mesh
+        from repro.scenarios import sample_scenarios
+
+        cfg = tiny_cluster(thermal_enabled=True, node_mtbf_hours=0.5,
+                           node_repair_hours=0.2, rack_mtbf_hours=1.5,
+                           rack_repair_hours=0.3, ckpt_interval_s=240.0,
+                           ckpt_overhead_s=20.0, max_job_retries=3)
+        jobs, bank = synth_workload(cfg, 32, 900.0, seed=0)
+        statics = build_statics(cfg, bank)
+        st = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+        scns = sample_scenarios(cfg, 8, seed=7)
+
+        sv, tv = run_fleet(cfg, statics, st, 400, "fcfs", scenarios=scns,
+                           macro=True, summary_only=True)
+        mesh = make_fleet_mesh(8)
+        ss, ts = run_fleet(cfg, statics, st, 400, "fcfs", scenarios=scns,
+                           macro=True, summary_only=True, mesh=mesh)
+
+        assert float(jnp.sum(sv.n_killed)) > 0, "faults never fired"
+        for f in sv._fields:
+            a, b = getattr(sv, f), getattr(ss, f)
+            if f == "key":   # the per-replica PRNG streams themselves
+                a, b = jax.random.key_data(a), jax.random.key_data(b)
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                f"state field {f} not bit-identical under sharding"
+        for f in tv._fields:
+            assert np.array_equal(np.asarray(getattr(tv, f)),
+                                  np.asarray(getattr(ts, f))), \\
+                f"telemetry field {f} not bit-identical under sharding"
+        for dv, ds in zip(fleet_summary(sv, tv), fleet_summary(ss, ts)):
+            assert dv == ds
+        print("SHARDED_BITWISE OK")
+    """)
+    assert "SHARDED_BITWISE OK" in out
+
+
+@_requires("make_mesh", "shard_map_compat")
+def test_sharded_fleet_uneven_replicas_loud_error():
+    """R not divisible by the mesh size must raise before tracing — a
+    silent pad would fabricate replicas whose summaries pollute sweep
+    statistics."""
+    out = _run_sub("""
+        import jax
+        from repro.configs.sim import tiny_cluster
+        from repro.core import build_statics, init_state, load_jobs, run_fleet
+        from repro.data import synth_workload
+        from repro.launch.mesh import make_fleet_mesh
+        from repro.scenarios import sample_scenarios
+
+        cfg = tiny_cluster()
+        jobs, bank = synth_workload(cfg, 8, 300.0, seed=0)
+        statics = build_statics(cfg, bank)
+        st = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+        mesh = make_fleet_mesh(8)
+        try:
+            run_fleet(cfg, statics, st, 10, "fcfs",
+                      scenarios=sample_scenarios(cfg, 6, seed=3), mesh=mesh)
+        except ValueError as e:
+            assert "6 replicas" in str(e) and "8" in str(e), e
+            print("UNEVEN_LOUD OK")
+        else:
+            raise SystemExit("6 replicas across 8 devices did not raise")
+
+        # wrong axis name is equally loud
+        try:
+            run_fleet(cfg, statics, st, 10, "fcfs",
+                      scenarios=sample_scenarios(cfg, 8, seed=3),
+                      mesh=mesh, mesh_axis="data")
+        except ValueError as e:
+            assert "data" in str(e), e
+            print("AXIS_LOUD OK")
+        else:
+            raise SystemExit("bogus mesh_axis did not raise")
+    """)
+    assert "UNEVEN_LOUD OK" in out and "AXIS_LOUD OK" in out
