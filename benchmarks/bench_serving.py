@@ -1,0 +1,170 @@
+"""Serving-twin benchmarks (docs/serving.md).
+
+``bench_serving_smoke`` (CI gate): a bursty overload episode on the tiny
+cluster, per-tick vs ``macro=True``. The macro row's derived field
+asserts bit-exact agreement on the whole SLO ledger (arrived, completed,
+shed, dropped, retried) plus energy — the exactness property the
+traffic-burst/timeout/wake breakpoints buy — and the per-tick row
+asserts the overload ladder genuinely fired.
+
+``bench_serving`` (full): the diurnal-peak replay — a day-cycle traffic
+signal riding on a batch replay, sized from the roofline serving profile
+so the pool only saturates around the peak. Macro must BEAT per-tick
+here (the trough is quiet), and a PPO smoke row checks the
+``w_slo``-weighted return improves when the agent holds the autoscale +
+admission knobs.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+from benchmarks.bench_sim import _timeit
+
+
+def _ladder_cfg():
+    from repro.configs.sim import tiny_cluster
+
+    return tiny_cluster(serving_enabled=True, serving_nodes=4,
+                        serving_concurrency=4.0, serving_service_s=3.0,
+                        serving_queue_cap=60.0, serving_timeout_s=20.0,
+                        serving_slo_s=6.0, serving_wake_s=90.0,
+                        serving_max_retries=2, serving_backoff_s=5.0)
+
+
+def bench_serving_smoke() -> List[Row]:
+    from repro.configs.sim import tiny_cluster  # noqa: F401 (doc pointer)
+    from repro.core import build_statics, init_state, load_jobs, run_episode, summary
+    from repro.data import synth_workload
+    from repro.scenarios import diurnal_serving
+
+    cfg = _ladder_cfg()
+    scn = diurnal_serving(cfg, peak_rps=8.0, base_frac=0.05,
+                          period_s=1800.0, burst_start_s=600.0,
+                          burst_len_s=200.0, burst_mult=4.0)
+    jobs, bank = synth_workload(cfg, 24, 900.0, seed=7)
+    statics = build_statics(cfg, bank, scenario=scn)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(1)), jobs)
+    n_steps = 1800
+
+    run_p = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "fcfs",
+                                          summary_only=True))
+    run_m = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "fcfs",
+                                          macro=True))
+    dt_p = _timeit(run_p, state, n=2)
+    dt_m = _timeit(run_m, state, n=2)
+    fs_p, tel_p = run_p(state)
+    fs_m, tel_m = run_m(state)
+    sp, sm = summary(fs_p, tel_p), summary(fs_m, tel_m)
+    # tiny cluster = shared (dense-scatter) power path -> the whole SLO
+    # ledger must agree bit-exactly, energy to float-print precision
+    match = all(sm[k] == sp[k] for k in
+                ("srv_arrived", "srv_completed", "srv_shed", "srv_dropped",
+                 "srv_retried", "completed")) \
+        and abs(sm["energy_kwh"] - sp["energy_kwh"]) < 1e-3
+    shed = sp["srv_shed"] > 0 and sp["srv_dropped"] > 0 \
+        and sp["srv_retried"] > 0
+    return [
+        ("serving_smoke_pertick", dt_p / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_p:,.0f};arrived={sp['srv_arrived']:.0f};"
+         f"completed={sp['srv_completed']:.0f};"
+         f"viol_frac={sp['srv_slo_violation_frac']:.3f};shed={shed}"),
+        ("serving_smoke_macro", dt_m / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_m:,.0f};"
+         f"speedup_vs_pertick={dt_p/dt_m:.2f}x;"
+         f"skip_ratio={sm['macro_skip_ratio']:.1f};match_pertick={match}"),
+    ]
+
+
+def bench_serving() -> List[Row]:
+    from repro.configs.sim import tiny_cluster
+    from repro.core import build_statics, init_state, load_jobs, run_episode, summary
+    from repro.data import synth_workload
+    from repro.envs import SchedEnv
+    from repro.perfmodel import serving_profile
+    from repro.rl import PPOConfig, ppo_train
+    from repro.scenarios import diurnal_serving
+
+    # size the pool from the roofline serving profile so the diurnal peak
+    # just saturates it: quiet troughs (macro skips), loud peak (ladder)
+    prof = serving_profile("gemma3-1b", n_chips=16, gen_tokens=256)
+    cap_rps = (4 * prof["serving_concurrency"]
+               / max(prof["serving_service_s"], 1e-9))
+    # the trough must be deeply quiet for macro to win: the crossing
+    # horizon is headroom / peak-rate, so a long timeout window and a
+    # deep queue keep the bound tens of ticks wide off-peak while the
+    # peak still (briefly) saturates the pool
+    cfg = tiny_cluster(
+        serving_enabled=True, serving_nodes=4, **prof,
+        serving_queue_cap=60.0 * cap_rps,
+        serving_timeout_s=20.0 * prof["serving_service_s"],
+        serving_slo_s=3.0 * prof["serving_service_s"],
+        serving_backoff_s=4.0 * prof["serving_service_s"])
+    scn = diurnal_serving(cfg, peak_rps=1.05 * cap_rps, base_frac=0.1,
+                          period_s=21600.0,
+                          burst_start_s=12000.0, burst_len_s=900.0,
+                          burst_mult=1.5)
+    jobs, bank = synth_workload(cfg, 48, 7200.0, seed=2)
+    statics = build_statics(cfg, bank, scenario=scn)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    n_steps = 21600                                  # one full day cycle
+
+    run_p = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "replay",
+                                          summary_only=True))
+    run_m = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps, "replay",
+                                          macro=True))
+    dt_p = _timeit(run_p, state, n=2)
+    dt_m = _timeit(run_m, state, n=2)
+    fs_p, tel_p = run_p(state)
+    fs_m, tel_m = run_m(state)
+    sp, sm = summary(fs_p, tel_p), summary(fs_m, tel_m)
+    match = all(sm[k] == sp[k] for k in
+                ("srv_arrived", "srv_completed", "srv_shed", "completed")) \
+        and abs(sm["energy_kwh"] - sp["energy_kwh"]) < 0.05
+    rows = [
+        ("serving_diurnal_day_pertick", dt_p / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_p:,.0f};arrived={sp['srv_arrived']:.0f};"
+         f"completed={sp['srv_completed']:.0f};shed={sp['srv_shed']:.0f};"
+         f"p99_x_slo={sp['srv_p99_latency_x_slo']:.1f};"
+         f"viol_frac={sp['srv_slo_violation_frac']:.3f}"),
+        ("serving_diurnal_day_macro", dt_m / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_m:,.0f};"
+         f"speedup_vs_pertick={dt_p/dt_m:.2f}x;"
+         f"skip_ratio={sm['macro_skip_ratio']:.1f};match_pertick={match}"),
+    ]
+    assert match, "macro diverged from per-tick on the serving ledger"
+    assert dt_m < dt_p, (
+        f"macro ({dt_m:.3f}s) must beat per-tick ({dt_p:.3f}s) on the "
+        "diurnal-peak day")
+
+    # PPO smoke with the autoscale + admission actions and a dominant SLO
+    # penalty: the w_slo-weighted return must improve (same caveats as
+    # the ppo_scheduler row: descent, not convergence)
+    env_cfg = _ladder_cfg()
+    env_scn = diurnal_serving(env_cfg, peak_rps=10.0, period_s=1800.0,
+                              burst_start_s=600.0, burst_len_s=300.0,
+                              burst_mult=2.0)
+    wls = [synth_workload(env_cfg, 16, 1200.0, seed=s) for s in range(2)]
+    env = SchedEnv(env_cfg, wls, episode_steps=16, sim_steps_per_action=10,
+                   scenario=env_scn,
+                   reward_weights=(1.0, 1.0, 1.0, 0.05, 0.0, 0.0, 5.0))
+    t0 = time.perf_counter()
+    n_iter = 16
+    _, hist = ppo_train(
+        env, cfg=PPOConfig(n_envs=8, rollout_len=16, lr=1e-3),
+        n_iterations=n_iter, seed=0,
+    )
+    dt = time.perf_counter() - t0
+    first = np.mean([h["mean_episode_return"] for h in hist[:3]])
+    last = np.mean([h["mean_episode_return"] for h in hist[-3:]])
+    rows.append((
+        "serving_ppo_slo", dt / n_iter * 1e6,
+        f"ep_return_first3={first:.2f};ep_return_last3={last:.2f};"
+        f"improved={last > first}"))
+    return rows

@@ -11,6 +11,8 @@
   rollout_* / ppo_iteration  lightweight-state RL rollout engine (BENCH_4)
   replay_tx_gaia_1h_faults[_macro] / faults_smoke_*  resilience twin:
                            event-sampled fault clocks under macro (BENCH_7)
+  serving_diurnal_day_* / serving_smoke_* / serving_ppo_slo  serving twin:
+                           SLO-aware overload ladder under macro (BENCH_9)
   fleet_*replicas          beyond-paper: scenario-sweep fleet throughput
   fleet_sharded_* / fleet_vmapped_*  device-sharded fleet (run_fleet mesh=)
                            vs single-device vmap, incl. the lockstep-
@@ -95,6 +97,7 @@ def _benches(smoke: bool):
 
     if smoke:
         from benchmarks.bench_fleet import bench_fleet_sharded
+        from benchmarks.bench_serving import bench_serving_smoke
         from benchmarks.bench_sim import (
             bench_faults_smoke,
             bench_macro_smoke,
@@ -108,6 +111,7 @@ def _benches(smoke: bool):
             bench_macro_smoke,
             bench_thermal_smoke,
             bench_faults_smoke,
+            bench_serving_smoke,
             _named(bench_policy_grid, "bench_policy_grid", smoke=True),
             _named(bench_rl, "bench_rl", smoke=True),
             _named(bench_fleet_sharded, "bench_fleet_sharded", smoke=True),
@@ -115,6 +119,7 @@ def _benches(smoke: bool):
 
     from benchmarks.bench_fleet import bench_fleet, bench_fleet_sharded
     from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_serving import bench_serving, bench_serving_smoke
     from benchmarks.bench_lm import (
         bench_decode_reduced,
         bench_roofline_crosscheck,
@@ -141,6 +146,8 @@ def _benches(smoke: bool):
         bench_macro_smoke,
         bench_thermal_smoke,
         bench_faults_smoke,
+        bench_serving,
+        bench_serving_smoke,
         bench_scheduler_comparison,
         bench_power_prediction,
         bench_congestion_model,

@@ -109,6 +109,32 @@ class SimConfig:
     cop_load_coef: float = 1.2         # COP gain per unit IT-load fraction
     cop_load_ref: float = 0.5          # load fraction of the nominal COP
     cop_min: float = 1.5
+    # online-inference serving twin (core/serving.py; docs/serving.md):
+    # a pool of serving_nodes inference nodes — disjoint from the batch
+    # fleet, power injected into the shared plant chain — serves a fluid
+    # request mass driven by Scenario.traffic. Python-bool + pool-size
+    # gate (``serving_on``) so serving-off compiles the legacy program
+    # bit-identically.
+    serving_enabled: bool = False
+    serving_nodes: int = 0             # inference pool size (not in n_nodes)
+    serving_concurrency: float = 8.0   # concurrent requests per awake node
+    serving_service_s: float = 4.0     # per-request service time at clock 1.0
+    serving_prefill_frac: float = 0.15  # fraction of service_s in prefill
+    serving_prefill_util: float = 0.9   # accelerator util during prefill
+    serving_decode_util: float = 0.45   # accelerator util during decode
+    serving_node_idle_w: float = 300.0  # awake-but-idle node power
+    serving_node_dyn_w: float = 700.0   # extra W at full util + occupancy
+    serving_sleep_w: float = 30.0       # asleep node power (SPARS knob)
+    serving_wake_s: float = 120.0       # sleep -> serving wake latency
+    serving_queue_cap: float = 512.0    # hard admission-queue bound [req]
+    serving_admit_thresh: float = 0.9   # initial admitted queue fraction
+    serving_timeout_s: float = 30.0     # queue-reach timeout; 0 = off
+    serving_slo_s: float = 10.0         # SLO latency target [s]
+    serving_max_retries: int = 3        # retry budget (backoff tiers)
+    serving_backoff_s: float = 4.0      # base retry backoff [s]
+    serving_backoff_mult: float = 2.0
+    serving_backoff_cap_s: float = 60.0
+    serving_scale_step: float = 1.0     # autoscale action increment [nodes]
     # RL / scheduling
     sched_max_candidates: int = 8     # jobs visible to the RL agent per step
     backfill_reserve: int = 1         # EASY: #head jobs that get reservations
@@ -125,6 +151,13 @@ class SimConfig:
         no PRNG consumption, no horizon terms)."""
         return (self.node_mtbf_hours > 0 or self.rack_mtbf_hours > 0
                 or self.outages_enabled or self.degrade_enabled)
+
+    @property
+    def serving_on(self) -> bool:
+        """Python-bool gate for the serving twin: False compiles the
+        legacy batch-only program bit-identically (no serving state
+        writes, no horizon terms, no extra obs/actions)."""
+        return self.serving_enabled and self.serving_nodes > 0
 
     @property
     def n_types(self) -> int:

@@ -28,6 +28,15 @@ from repro.core.placement import (
     stack_policies,
 )
 from repro.core.schedulers import SCHEDULERS, SELECT_IDS
+from repro.core.serving import (
+    apply_serving,
+    next_serving_event,
+    retry_backoff,
+    serving_crossing_horizon,
+    serving_flow,
+    serving_power,
+    serving_trigger,
+)
 from repro.core.thermal import (
     cooling_cop,
     node_trip_ok,

@@ -34,6 +34,7 @@ from repro.configs.sim import SimConfig
 from repro.core import faults as flt
 from repro.core import placement as plc
 from repro.core import schedulers as sched
+from repro.core import serving as srv
 from repro.core import thermal as thm
 from repro.core.faults import release_jobs as _release
 from repro.core.network import congestion_slowdown
@@ -85,16 +86,29 @@ class StepOut(NamedTuple):
     killed_now: jax.Array      # jobs killed by node loss this tick
     lost_node_s_step: jax.Array  # node-seconds of progress destroyed
     degrade_level: jax.Array   # effective ladder level in force (f32)
+    # serving twin telemetry (core.serving); None (empty pytree nodes)
+    # with serving off so scan carries/stacked outputs are unchanged
+    srv_arrived_step: jax.Array | None = None
+    srv_completed_step: jax.Array | None = None
+    srv_shed_step: jax.Array | None = None
+    srv_dropped_step: jax.Array | None = None
+    srv_retried_step: jax.Array | None = None
+    srv_slo_viol_step: jax.Array | None = None
+    srv_latency_s: jax.Array | None = None   # fluid sojourn estimate
+    srv_queue_len: jax.Array | None = None   # post-flow queued mass
+    srv_active_nodes: jax.Array | None = None
+    srv_lat_hist_step: jax.Array | None = None  # (8,) per-tick histogram
 
 
 def _parse_weights(reward_weights) -> Tuple[
-        float, float, float, float, float, float]:
-    if len(reward_weights) not in (4, 5, 6):
-        raise ValueError("reward_weights must have 4, 5 or 6 entries")
+        float, float, float, float, float, float, float]:
+    if len(reward_weights) not in (4, 5, 6, 7):
+        raise ValueError("reward_weights must have 4 to 7 entries")
     w_thr, w_en, w_co2, w_q = reward_weights[:4]
     w_cost = reward_weights[4] if len(reward_weights) >= 5 else 0.0
-    w_lost = reward_weights[5] if len(reward_weights) == 6 else 0.0
-    return w_thr, w_en, w_co2, w_q, w_cost, w_lost
+    w_lost = reward_weights[5] if len(reward_weights) >= 6 else 0.0
+    w_slo = reward_weights[6] if len(reward_weights) == 7 else 0.0
+    return w_thr, w_en, w_co2, w_q, w_cost, w_lost, w_slo
 
 
 def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
@@ -115,9 +129,14 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
     lost-work scalars — the full step passes them through, fast ticks
     pass nothing (faults fire only on event ticks, so zeros are exact).
     """
-    w_thr, w_en, w_co2, w_q, w_cost, w_lost = _parse_weights(reward_weights)
+    (w_thr, w_en, w_co2, w_q, w_cost, w_lost,
+     w_slo) = _parse_weights(reward_weights)
     scn = statics.scenario
     nameplate = max(cfg.nameplate_it_w, 1.0)
+    # serving reward scale: the pool's full-rate request budget per tick
+    srv_rate_scale = max(
+        cfg.serving_nodes * cfg.serving_concurrency
+        / max(cfg.serving_service_s, 1e-9) * cfg.dt, 1e-9)
 
     def tail(
         state: SimState,
@@ -130,11 +149,18 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
         util: jax.Array,
         killed_now: jax.Array | None = None,
         lost_now: jax.Array | None = None,
+        shed_now: jax.Array | None = None,
+        dropped_now: jax.Array | None = None,
+        retried_now: jax.Array | None = None,
     ) -> Tuple[SimState, StepOut]:
         if killed_now is None:
             killed_now = jnp.float32(0.0)
         if lost_now is None:
             lost_now = jnp.float32(0.0)
+        if cfg.serving_on and shed_now is None:
+            # fast ticks: the discrete sweep fires only on full event
+            # ticks, so zeros are exact (core.serving)
+            shed_now = dropped_now = retried_now = jnp.float32(0.0)
         # --- grid signals at t (scenario engine)
         carbon_g = eval_signal(scn.carbon, state.t)          # gCO2/kWh
         price = eval_signal(scn.price, state.t)              # $/kWh
@@ -208,12 +234,31 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
         else:
             dg_level_f = jnp.float32(0.0)
 
+        if cfg.serving_on:
+            # --- serving-pool power (core.serving): joins the plant
+            # chain BEFORE the DVFS cap so the cap throttles batch and
+            # serving dynamic power together; the pool's awake-idle +
+            # sleep floor joins the unthrottleable idle base below. The
+            # pool rides the same plant COP but heats no batch rack
+            # (the RC update stays on p.node_input_w).
+            srv_it, srv_in, srv_cool, srv_idle = srv.serving_power(
+                cfg, state, cop)
+            it2 = p.it_w + srv_it
+            fac2 = p.facility_w + srv_in + srv_cool
+            p = p._replace(
+                it_w=it2, input_w=p.input_w + srv_in,
+                cooling_w=p.cooling_w + srv_cool, facility_w=fac2,
+                pue=jnp.where(it2 > 1.0,
+                              fac2 / jnp.maximum(it2, 1.0), 1.0))
+
         # --- demand response: DVFS-throttle to the facility power cap
         # (DCFlex-style [3]; linear dynamic-power/progress model). The cap
         # is a traced value so scheduled events switch inside one compiled
         # step; `capped` gates the rescale exactly off when uncapped.
         capped = cap_w > 0.0
         idle_total = jnp.sum(statics.idle_w * state.node_up)
+        if cfg.serving_on:
+            idle_total = idle_total + srv_idle
         dyn = jnp.maximum(p.it_w - idle_total, 0.0)
         # facility ~ it * overhead; solve idle + a*dyn <= cap/overhead
         overhead = p.facility_w / jnp.maximum(p.it_w, 1.0)
@@ -254,6 +299,13 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
             n_steps=state.n_steps + 1.0,
         )
 
+        if cfg.serving_on:
+            # --- continuous request-mass flow (core.serving): arrivals,
+            # admission, completions, SLO accounting — every tick,
+            # shared by fast ticks, so macro stays bit-identical
+            (state, srv_arr, srv_comp, srv_viol, srv_w, srv_q,
+             srv_hist) = srv.serving_flow(cfg, state, statics, throttle)
+
         if cfg.thermal_enabled:
             # --- rack RC update: post-cap per-node input power (IT plus
             # conversion losses, all of it room heat) relaxes each rack
@@ -287,6 +339,23 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
             - w_lost * lost_now / jnp.maximum(cfg.n_nodes * cfg.dt, 1e-9)
         )
 
+        srv_out = {}
+        if cfg.serving_on:
+            # SLO penalty normalized by the pool's full-rate request
+            # budget for the tick; shed/dropped mass counts as violated —
+            # a ladder that sheds its way out of latency trouble still
+            # pays, so goodput is the objective the policy faces
+            reward = reward - w_slo * (
+                srv_viol + shed_now + dropped_now) / srv_rate_scale
+            srv_out = dict(
+                srv_arrived_step=srv_arr, srv_completed_step=srv_comp,
+                srv_shed_step=shed_now, srv_dropped_step=dropped_now,
+                srv_retried_step=retried_now, srv_slo_viol_step=srv_viol,
+                srv_latency_s=srv_w, srv_queue_len=srv_q,
+                srv_active_nodes=state.srv_active,
+                srv_lat_hist_step=srv_hist,
+            )
+
         out = StepOut(
             facility_w=p.facility_w, it_w=p.it_w, pue=p.pue, util=util,
             queue_len=queued, running=running, completed_now=n_done,
@@ -297,6 +366,7 @@ def _make_tail(cfg: SimConfig, statics: Statics, reward_weights,
             rack_max_c=rack_max, cop=cop, thermal_throttle_s_step=th_step,
             killed_now=killed_now, lost_node_s_step=lost_now,
             degrade_level=dg_level_f,
+            **srv_out,
         )
         return state, out
 
@@ -450,6 +520,14 @@ def make_step(
                                                            statics)
         else:
             killed_now = lost_now = None
+        if cfg.serving_on:
+            # discrete overload ladder: autoscale, retry re-injection,
+            # timeout/admission/shed cascade (full event ticks only;
+            # bitwise fixpoint on quiet ticks — core.serving)
+            state, shed_now, dropped_now, retried_now = srv.apply_serving(
+                cfg, state, statics)
+        else:
+            shed_now = dropped_now = retried_now = None
         state, n_done = _complete_jobs(cfg, state)
 
         # --- dispatch
@@ -498,7 +576,7 @@ def make_step(
         rate, net_load = congestion_slowdown(cfg, state, statics)
         queued, running, util = _counts_and_util(state, statics)
         return tail(state, p, rate, net_load, n_done, queued, running, util,
-                    killed_now, lost_now)
+                    killed_now, lost_now, shed_now, dropped_now, retried_now)
 
     return step
 
@@ -520,6 +598,17 @@ class TelemetrySummary(NamedTuple):
     thermal_throttle_s: jax.Array  # seconds any rack was thermally derated
     killed: jax.Array          # jobs killed by node loss (core.faults)
     lost_node_s: jax.Array     # node-seconds of progress destroyed
+    # serving twin (core.serving): windowed request-mass totals + the
+    # log-2 latency histogram the SLO quantiles come from; None (empty
+    # pytree nodes) with serving off
+    srv_arrived: jax.Array
+    srv_completed: jax.Array
+    srv_shed: jax.Array
+    srv_dropped: jax.Array
+    srv_retried: jax.Array
+    srv_slo_viol: jax.Array
+    srv_lat_sum: jax.Array     # mass-weighted latency integral [req*s]
+    srv_lat_hist: jax.Array    # (8,) completion mass per log-2 SLO bucket
     # per-step means
     mean_facility_w: jax.Array
     mean_it_w: jax.Array
@@ -546,7 +635,12 @@ class TelemetrySummary(NamedTuple):
     macro_steps: jax.Array
 
 
-def _telem_zero(resilience_on: bool = True) -> TelemetrySummary:
+_SRV_TELEM = ("srv_arrived", "srv_completed", "srv_shed", "srv_dropped",
+              "srv_retried", "srv_slo_viol", "srv_lat_sum", "srv_lat_hist")
+
+
+def _telem_zero(resilience_on: bool = True,
+                serving_on: bool = False) -> TelemetrySummary:
     z = jnp.float32(0.0)
     acc = TelemetrySummary(*([z] * len(TelemetrySummary._fields)))
     if not resilience_on:
@@ -558,19 +652,44 @@ def _telem_zero(resilience_on: bool = True) -> TelemetrySummary:
         # node, so the compiled carry is leaf-for-leaf the legacy program;
         # ``_telem_finalize`` restores concrete zeros for consumers.
         acc = acc._replace(killed=None, lost_node_s=None)
+    if serving_on:
+        acc = acc._replace(srv_lat_hist=jnp.zeros((8,), jnp.float32))
+    else:
+        # same XLA-codegen hazard as killed/lost above: the serving
+        # accumulators ride as empty nodes when the plane is off
+        acc = acc._replace(**{f: None for f in _SRV_TELEM})
     return acc
 
 
 def _telem_update(acc: TelemetrySummary, out: StepOut,
                   macro_inc: jax.Array | float = 1.0,
-                  resilience_on: bool = True) -> TelemetrySummary:
+                  resilience_on: bool = True,
+                  serving_on: bool = False) -> TelemetrySummary:
     # mean_* fields hold running sums until _telem_finalize divides by n.
-    # The killed/lost adds are Python-gated: with the fault engine off the
-    # addends are constant zeros, but even dead adds perturb XLA's scan-body
-    # codegen enough to shift float rounding elsewhere in the step — gating
-    # keeps the legacy per-tick program (and its bit-pinned outputs) intact.
+    # The killed/lost (and serving) adds are Python-gated: with the engine
+    # off the addends are constant zeros, but even dead adds perturb XLA's
+    # scan-body codegen enough to shift float rounding elsewhere in the
+    # step — gating keeps the legacy per-tick program (and its bit-pinned
+    # outputs) intact.
     return TelemetrySummary(
         completed=acc.completed + out.completed_now,
+        srv_arrived=acc.srv_arrived + out.srv_arrived_step
+        if serving_on else acc.srv_arrived,
+        srv_completed=acc.srv_completed + out.srv_completed_step
+        if serving_on else acc.srv_completed,
+        srv_shed=acc.srv_shed + out.srv_shed_step
+        if serving_on else acc.srv_shed,
+        srv_dropped=acc.srv_dropped + out.srv_dropped_step
+        if serving_on else acc.srv_dropped,
+        srv_retried=acc.srv_retried + out.srv_retried_step
+        if serving_on else acc.srv_retried,
+        srv_slo_viol=acc.srv_slo_viol + out.srv_slo_viol_step
+        if serving_on else acc.srv_slo_viol,
+        srv_lat_sum=acc.srv_lat_sum
+        + out.srv_completed_step * out.srv_latency_s
+        if serving_on else acc.srv_lat_sum,
+        srv_lat_hist=acc.srv_lat_hist + out.srv_lat_hist_step
+        if serving_on else acc.srv_lat_hist,
         energy_kwh=acc.energy_kwh + out.energy_kwh_step,
         carbon_kg=acc.carbon_kg + out.carbon_kg_step,
         cost_usd=acc.cost_usd + out.cost_usd_step,
@@ -608,6 +727,10 @@ def _telem_finalize(acc: TelemetrySummary) -> TelemetrySummary:
     if acc.killed is None:   # resilience off: carried as empty nodes
         acc = acc._replace(killed=jnp.float32(0.0),
                            lost_node_s=jnp.float32(0.0))
+    if acc.srv_arrived is None:  # serving off: carried as empty nodes
+        acc = acc._replace(
+            **{f: jnp.float32(0.0) for f in _SRV_TELEM[:-1]},
+            srv_lat_hist=jnp.zeros((8,), jnp.float32))
     return acc
 
 
@@ -642,11 +765,16 @@ def _fast_fields(cfg: SimConfig) -> tuple:
     """Fast-tick-mutable SimState leaves for this config: the thermal
     carry joins only when the cooling loop is on (the thermal-off tail
     never writes it, and keeping the commit-select identical preserves the
-    legacy program byte-for-byte)."""
+    legacy program byte-for-byte); likewise the serving flow leaves only
+    when the serving plane is on."""
+    ff = _FAST_FIELDS
     if cfg.thermal_enabled:
-        return _FAST_FIELDS + (
-            "rack_outlet_c", "thermal_throttle_s", "peak_rack_c")
-    return _FAST_FIELDS
+        ff = ff + ("rack_outlet_c", "thermal_throttle_s", "peak_rack_c")
+    if cfg.serving_on:
+        ff = ff + ("srv_queue", "srv_inflight", "srv_arrived",
+                   "srv_completed", "srv_slo_viol", "srv_lat_sum",
+                   "srv_lat_hist")
+    return ff
 
 
 def _horizon_parts(cfg: SimConfig, state: SimState, statics: Statics,
@@ -685,6 +813,12 @@ def _horizon_parts(cfg: SimConfig, state: SimState, statics: Statics,
         # breakpoints (core.faults keeps every clock strictly future)
         next_t = jnp.minimum(
             next_t, flt.next_fault_event(cfg, state, statics, t))
+    if cfg.serving_on:
+        # serving clock breakpoints: autoscale wake completions, retry
+        # re-injections, traffic-burst window edges (core.serving) —
+        # the discrete sweep runs on full ticks only
+        next_t = jnp.minimum(
+            next_t, srv.next_serving_event(cfg, state, statics, t))
 
     kf = jnp.float32(max_ticks)
     k_time = jnp.where(jnp.isfinite(next_t),
@@ -756,6 +890,14 @@ def quiet_horizon(
     if cfg.thermal_enabled and dispatch_on:
         horizon = jnp.minimum(horizon, thm.thermal_crossing_horizon(
             cfg, statics, state, max_ticks))
+    if cfg.serving_on:
+        # queue-threshold crossings: conservative arrival-envelope bound
+        # + a zero horizon when the queue is already over a threshold
+        # (core.serving; the macro engine also detects crossings
+        # authoritatively per committed fast tick)
+        horizon = jnp.minimum(horizon, srv.serving_crossing_horizon(
+            cfg, state, statics, max_ticks))
+        horizon = jnp.where(srv.serving_trigger(cfg, state), 0, horizon)
     return horizon
 
 
@@ -831,7 +973,8 @@ def make_macro_step(
     if update is None:
         def update(acc, out, macro_inc=1.0):
             return _telem_update(acc, out, macro_inc,
-                                 resilience_on=cfg.resilience_on)
+                                 resilience_on=cfg.resilience_on,
+                                 serving_on=cfg.serving_on)
 
     def power_chunk(s: SimState, cnt):
         """(ts, PowerOut-with-leading-C-axis) for the next C ticks under a
@@ -891,7 +1034,15 @@ def make_macro_step(
             # the neighborhood of a trip crossing un-checked)
             k_quiet = jnp.minimum(k_quiet, thm.thermal_crossing_horizon(
                 cfg, statics, state, horizon_cap))
-        budget = jnp.where(started & visible_now, 0, k_quiet)
+        blocked = started & visible_now
+        if cfg.serving_on:
+            # arrival-envelope bound on queue-threshold crossings, and
+            # stay per-tick while the queue sits over a threshold (the
+            # next tick's sweep WILL move mass): overload IS the event
+            k_quiet = jnp.minimum(k_quiet, srv.serving_crossing_horizon(
+                cfg, state, statics, horizon_cap))
+            blocked = blocked | srv.serving_trigger(cfg, state)
+        budget = jnp.where(blocked, 0, k_quiet)
         queued, running, util = _counts_and_util(state, statics)
 
         def peek_stop(s, t_next):
@@ -930,6 +1081,8 @@ def make_macro_step(
                 go = ~stop
                 if thermal_gate:   # authoritative trip-crossing breakpoint
                     go &= ~jnp.any((s.rack_outlet_c >= trip_c) != was_hot)
+                if cfg.serving_on:  # authoritative overload breakpoint
+                    go &= ~srv.serving_trigger(cfg, s)
                 return (s, a, i, go)
 
             state, acc, took, _ = jax.lax.while_loop(
@@ -957,6 +1110,8 @@ def make_macro_step(
             go = ~stop
             if thermal_gate:       # authoritative trip-crossing breakpoint
                 go &= ~jnp.any((s.rack_outlet_c >= trip_c) != was_hot)
+            if cfg.serving_on:     # authoritative overload breakpoint
+                go &= ~srv.serving_trigger(cfg, s)
             return (s, a, i, j + 1, go, chk)
 
         def outer_body(c):
@@ -1062,7 +1217,9 @@ def run_episode(
                 return (s, a, ticks + took)
 
             s, a, _ = jax.lax.while_loop(
-                wcond, wbody, (state, _telem_zero(cfg.resilience_on), jnp.int32(0)))
+                wcond, wbody,
+                (state, _telem_zero(cfg.resilience_on, cfg.serving_on),
+                 jnp.int32(0)))
             return s, _telem_finalize(a)
 
         if telemetry_every <= 1:
@@ -1090,13 +1247,15 @@ def run_episode(
             s, acc = carry
             s, out = step(s, jnp.int32(-1))
             return (s, _telem_update(
-                acc, out, resilience_on=cfg.resilience_on)), None
+                acc, out, resilience_on=cfg.resilience_on,
+                serving_on=cfg.serving_on)), None
 
         if summary_only:
             def go(state):
                 (fs, acc), _ = jax.lax.scan(
-                    accum_body, (state, _telem_zero(cfg.resilience_on)), None,
-                    length=n_steps)
+                    accum_body,
+                    (state, _telem_zero(cfg.resilience_on, cfg.serving_on)),
+                    None, length=n_steps)
                 return fs, _telem_finalize(acc)
         elif telemetry_every <= 1:
             def go(state):
@@ -1104,8 +1263,9 @@ def run_episode(
         else:
             def window(s, _):
                 (s, acc), _ = jax.lax.scan(
-                    accum_body, (s, _telem_zero(cfg.resilience_on)), None,
-                    length=telemetry_every)
+                    accum_body,
+                    (s, _telem_zero(cfg.resilience_on, cfg.serving_on)),
+                    None, length=telemetry_every)
                 return s, _telem_finalize(acc)
 
             def go(state):
@@ -1179,6 +1339,30 @@ def summary_columns(state: SimState,
     cols["jobs_failed_terminal"] = f(s.n_failed)
     cols["goodput_node_s"] = useful
     cols["goodput_frac"] = useful / np.maximum(useful + lost, 1e-9)
+    # serving twin (core.serving): request accounting from the state
+    # accumulators (zeros with serving off) + SLO quantiles from the
+    # episode latency histogram. goodput_requests = completed mass that
+    # met the SLO; shed/dropped are the terminal overload-ladder losses.
+    n_req = np.maximum(f(s.srv_completed), 1e-9)
+    cols["srv_arrived"] = f(s.srv_arrived)
+    cols["srv_completed"] = f(s.srv_completed)
+    cols["srv_shed"] = f(s.srv_shed)
+    cols["srv_dropped"] = f(s.srv_dropped)
+    cols["srv_retried"] = f(s.srv_retried)
+    cols["srv_mean_latency_s"] = f(s.srv_lat_sum) / n_req
+    cols["srv_slo_violation_frac"] = f(s.srv_slo_viol) / n_req
+    cols["srv_goodput_requests"] = f(s.srv_completed) - f(s.srv_slo_viol)
+    hist = f(s.srv_lat_hist)                    # (..., 8)
+    tot = np.maximum(hist.sum(-1, keepdims=True), 1e-9)
+    c = np.cumsum(hist, -1) / tot
+    # bucket i spans serving_slo_s * [2^(i-4), 2^(i-3)); quantiles are
+    # reported at the upper edge in SLO units (the summary has no cfg)
+    edge = 2.0 ** (np.arange(8, dtype=np.float64) - 3.0)
+    any_req = hist.sum(-1) > 0.0                # no completions -> 0.0
+    cols["srv_p50_latency_x_slo"] = np.where(
+        any_req, edge[np.argmax(c >= 0.5, axis=-1)], 0.0)
+    cols["srv_p99_latency_x_slo"] = np.where(
+        any_req, edge[np.argmax(c >= 0.99, axis=-1)], 0.0)
     if telemetry is not None:
         # macro-stepping skip accounting (satellite of the macro engine):
         # how much of the episode the engine fast-forwarded. Windowed

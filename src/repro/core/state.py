@@ -110,6 +110,29 @@ class SimState(NamedTuple):
     degrade_level: jax.Array   # scalar int32 ladder level (0..4)
     lost_node_s: jax.Array     # node-seconds of killed/evicted progress
     n_failed: jax.Array        # jobs gone terminal FAILED
+    # serving twin carry (core.serving): fluid request mass per attempt
+    # tier, backoff-retry buckets with absolute re-injection times, the
+    # autoscaled inference pool (wake clock is an absolute time — an
+    # exact macro breakpoint), and SLO accounting accumulators. Present
+    # even with serving off (pytree structure is flag-independent) but
+    # then never written after init.
+    srv_queue: jax.Array       # (B+1,) queued mass per attempt tier
+    srv_inflight: jax.Array    # in-service request mass
+    srv_retry_q: jax.Array     # (B+1,) mass waiting out backoff per tier
+    srv_retry_t: jax.Array     # (B+1,) absolute re-injection times (inf)
+    srv_active: jax.Array      # awake serving nodes
+    srv_wake_n: jax.Array      # nodes mid-wake
+    srv_wake_t: jax.Array      # absolute wake completion time (inf)
+    srv_target: jax.Array      # autoscale target (RL action)
+    srv_admit_thresh: jax.Array  # admitted queue fraction (RL action)
+    srv_arrived: jax.Array     # request-mass accumulators
+    srv_completed: jax.Array
+    srv_shed: jax.Array        # terminal: queue-cap overflow
+    srv_dropped: jax.Array     # terminal: retry budget exhausted
+    srv_retried: jax.Array
+    srv_slo_viol: jax.Array    # completed mass over the SLO
+    srv_lat_sum: jax.Array     # mass-weighted latency integral [req*s]
+    srv_lat_hist: jax.Array    # (8,) completion mass per log-2 SLO bucket
     # which workload this replica runs: index into a banked Statics trace
     # bank ((W, J, Q) leading axis); ignored when the bank is unbatched.
     # Scalar int32 — O(1) per env, vs. the O(J*Q) per-env bank copy the
@@ -232,6 +255,23 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
         degrade_level=jnp.int32(0),
         lost_node_s=f(0.0),
         n_failed=f(0.0),
+        srv_queue=jnp.zeros((cfg.serving_max_retries + 1,), f),
+        srv_inflight=f(0.0),
+        srv_retry_q=jnp.zeros((cfg.serving_max_retries + 1,), f),
+        srv_retry_t=jnp.full((cfg.serving_max_retries + 1,), jnp.inf, f),
+        srv_active=f(float(cfg.serving_nodes)),
+        srv_wake_n=f(0.0),
+        srv_wake_t=f(jnp.inf),
+        srv_target=f(float(cfg.serving_nodes)),
+        srv_admit_thresh=f(cfg.serving_admit_thresh),
+        srv_arrived=f(0.0),
+        srv_completed=f(0.0),
+        srv_shed=f(0.0),
+        srv_dropped=f(0.0),
+        srv_retried=f(0.0),
+        srv_slo_viol=f(0.0),
+        srv_lat_sum=f(0.0),
+        srv_lat_hist=jnp.zeros((8,), f),
         workload=jnp.int32(0),
     )
 

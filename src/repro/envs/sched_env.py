@@ -91,6 +91,14 @@ THERMAL_FEATURES = ("rack_hot_frac", "rack_mean_frac",
 # node-day of fleet capacity
 RESILIENCE_FEATURES = ("degrade_frac", "killed_frac",
                        "failed_frac", "lost_frac")
+# serving-twin features, appended ONLY when ``cfg.serving_on`` (serving
+# off -> layout and pinned obs unchanged): pool load (queue + in-flight
+# over total buffering), queue depth vs the shed cap, the fluid latency
+# estimate in SLO units, awake/waking pool fractions, and the current
+# (schedulable) admission threshold
+SERVING_FEATURES = ("srv_util", "srv_queue_frac", "srv_latency_slo",
+                    "srv_active_frac", "srv_waking_frac",
+                    "srv_admit_thresh")
 # per-node-type features: free fraction of each resource
 TYPE_FEATURES = ("cpu_free", "gpu_free", "mem_free")
 CANDIDATE_FEATURES = (
@@ -137,8 +145,12 @@ class SchedEnv:
         # with the degradation ladder schedulable, 5 extra actions set
         # state.degrade_level to rung 0..4 (NORMAL..EVICT) before the
         # dispatch sub-step runs; layout is k dispatches, k = no-op,
-        # k+1+r = "set rung r" (off -> Discrete(k+1), unchanged)
-        self.n_actions = self.k + 1 + (5 if cfg.degrade_enabled else 0)
+        # k+1+r = "set rung r" (off -> Discrete(k+1), unchanged); with
+        # serving on, 4 more actions follow the ladder block: autoscale
+        # the pool target down/up by serving_scale_step and nudge the
+        # admission threshold down/up by 0.05
+        self.n_actions = (self.k + 1 + (5 if cfg.degrade_enabled else 0)
+                         + (4 if cfg.serving_on else 0))
         self.sim_steps_per_action = sim_steps_per_action
 
         # ONE shared Statics: stacked (W, J, Q) trace bank + stacked job
@@ -236,10 +248,37 @@ class SchedEnv:
             # ladder actions: a > k sets the degradation rung (held until
             # changed) and dispatches nothing this decision
             is_lvl = action > self.k
+            if self.cfg.serving_on:
+                is_lvl = is_lvl & (action <= self.k + 5)
             rung = jnp.clip(action - self.k - 1, 0, flt.LVL_EVICT)
             sim0 = sim0._replace(degrade_level=jnp.where(
                 is_lvl, rung, sim0.degrade_level).astype(jnp.int32))
             action = jnp.where(is_lvl, self.k, action)
+        if self.cfg.serving_on:
+            # serving actions trail the ladder block: 0/1 scale the pool
+            # target down/up, 2/3 nudge the admission threshold down/up;
+            # the new target/threshold is held until changed and the
+            # decision dispatches nothing (quiet updates are bitwise
+            # no-ops so a non-serving action leaves the fields untouched)
+            base = self.k + (5 if self.cfg.degrade_enabled else 0)
+            is_srv = action > base
+            code = action - base - 1
+            stepn = jnp.float32(self.cfg.serving_scale_step)
+            tgt2 = jnp.clip(
+                sim0.srv_target
+                + jnp.where(code == 1, stepn, 0.0)
+                - jnp.where(code == 0, stepn, 0.0),
+                0.0, float(self.cfg.serving_nodes))
+            th2 = jnp.clip(
+                sim0.srv_admit_thresh
+                + 0.05 * (jnp.where(code == 3, 1.0, 0.0)
+                          - jnp.where(code == 2, 1.0, 0.0)),
+                0.05, 1.0)
+            sim0 = sim0._replace(
+                srv_target=jnp.where(is_srv, tgt2, sim0.srv_target),
+                srv_admit_thresh=jnp.where(
+                    is_srv, th2, sim0.srv_admit_thresh))
+            action = jnp.where(is_srv, self.k, action)
         sim, out = self._step_rl(sim0, action)
         z = jnp.float32(0.0)
         acc = acc_of({"reward": z, "completed": z, "energy_kwh": z,
@@ -281,7 +320,9 @@ class SchedEnv:
     def _obs_spec(self) -> int:
         thermal = len(THERMAL_FEATURES) if self.cfg.thermal_enabled else 0
         resil = len(RESILIENCE_FEATURES) if self.cfg.resilience_on else 0
-        return (len(GLOBAL_FEATURES) + thermal + resil + len(plc.PLACEMENTS)
+        srv = len(SERVING_FEATURES) if self.cfg.serving_on else 0
+        return (len(GLOBAL_FEATURES) + thermal + resil + srv
+                + len(plc.PLACEMENTS)
                 + len(TYPE_FEATURES) * self.cfg.n_types
                 + len(CANDIDATE_FEATURES) * self.k)
 
@@ -343,6 +384,30 @@ class SchedEnv:
             assert tuple(resil) == RESILIENCE_FEATURES
             glob = jnp.concatenate(
                 [glob, jnp.stack([resil[n] for n in RESILIENCE_FEATURES])])
+
+        if cfg.serving_on:
+            # serving-pool state so the policy can learn overload control
+            # (wake capacity ahead of the diurnal peak, tighten admission
+            # under backlog, sleep the pool through the trough)
+            conc_cap = sim.srv_active * cfg.serving_concurrency
+            q_tot = jnp.sum(sim.srv_queue)
+            svc = max(cfg.serving_service_s, 1e-9)
+            w_est = (q_tot / jnp.maximum(conc_cap / svc, 1e-9)) + svc
+            srv = dict(
+                srv_util=(sim.srv_inflight + q_tot)
+                / jnp.maximum(conc_cap + cfg.serving_queue_cap, 1e-9),
+                srv_queue_frac=q_tot / max(cfg.serving_queue_cap, 1e-9),
+                srv_latency_slo=jnp.minimum(
+                    w_est / max(cfg.serving_slo_s, 1e-9), 10.0),
+                srv_active_frac=sim.srv_active
+                / max(cfg.serving_nodes, 1),
+                srv_waking_frac=sim.srv_wake_n
+                / max(cfg.serving_nodes, 1),
+                srv_admit_thresh=sim.srv_admit_thresh,
+            )
+            assert tuple(srv) == SERVING_FEATURES
+            glob = jnp.concatenate(
+                [glob, jnp.stack([srv[n] for n in SERVING_FEATURES])])
 
         # per-node-type free fractions, fused: the python per-(type,
         # resource) loop of scalar reductions becomes one one-hot

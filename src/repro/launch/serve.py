@@ -13,6 +13,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.models import init_params
@@ -28,6 +29,8 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=5,
+                    help="timed decode repetitions (median reported)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -54,13 +57,21 @@ def main(argv=None):
     )
     out = gen(params, prompt, key)       # compile
     out.block_until_ready()
-    t0 = time.time()
-    out = gen(params, prompt, key)
-    out.block_until_ready()
-    dt = time.time() - t0
+    # one-shot timings of a jitted decode are dominated by dispatch
+    # jitter: repeat and report the median (with the p10/p90 spread)
+    times = []
+    for _ in range(max(args.iters, 1)):
+        t0 = time.perf_counter()
+        out = gen(params, prompt, key)
+        out.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    med, p10, p90 = (float(v) for v in
+                     np.percentile(np.asarray(times), [50, 10, 90]))
     toks = args.batch * args.gen
-    print(f"arch={cfg.name} generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:,.1f} tok/s); sample: {out[0, :16].tolist()}")
+    print(f"arch={cfg.name} generated {toks} tokens/iter over "
+          f"{len(times)} iters: median {med:.3f}s ({toks/med:,.1f} tok/s, "
+          f"p10-p90 {toks/p90:,.1f}-{toks/p10:,.1f} tok/s); "
+          f"sample: {out[0, :16].tolist()}")
     return out
 
 

@@ -1,3 +1,7 @@
 from repro.perfmodel.constants import V5E
 from repro.perfmodel.roofline import analytic_roofline
-from repro.perfmodel.workload_gen import lm_jobs_workload, lm_training_job
+from repro.perfmodel.workload_gen import (
+    lm_jobs_workload,
+    lm_training_job,
+    serving_profile,
+)

@@ -50,6 +50,44 @@ def lm_training_job(
     }
 
 
+def serving_profile(
+    arch: str = "gemma3-1b",
+    *,
+    n_chips: int = 16,
+    chips_per_node: int = 4,
+    gen_tokens: int = 256,
+) -> Dict[str, float]:
+    """Serving-twin knobs for one LM deployment from the roofline model.
+
+    Derives the per-request prefill/decode split, the end-to-end service
+    time, and the per-node power profile for ``core.serving`` from the
+    analytic estimates: a request is one prefill step plus ``gen_tokens``
+    decode steps on an ``n_chips`` slice. Returns kwargs consumable by
+    ``SimConfig`` (``tiny_cluster(**serving_profile(...),
+    serving_enabled=True, serving_nodes=...)``).
+    """
+    pf = analytic_roofline(get_arch(arch), SHAPES["prefill_32k"],
+                           n_chips=n_chips)
+    dc = analytic_roofline(get_arch(arch), SHAPES["decode_32k"],
+                           n_chips=n_chips)
+    prefill_s = pf.step_s
+    decode_s = gen_tokens * dc.step_s
+    service_s = prefill_s + decode_s
+    n_nodes = max(n_chips // chips_per_node, 1)
+    return {
+        "serving_service_s": service_s,
+        "serving_prefill_frac": prefill_s / max(service_s, 1e-12),
+        "serving_prefill_util": min(pf.util, 1.0),
+        "serving_decode_util": min(dc.util, 1.0),
+        # batched decode: the deployment serves global_batch concurrent
+        # streams, split across the slice's nodes
+        "serving_concurrency": SHAPES["decode_32k"].global_batch
+        / n_nodes,
+        "serving_node_idle_w": chips_per_node * V5E.idle_w,
+        "serving_node_dyn_w": chips_per_node * V5E.dyn_w,
+    }
+
+
 def lm_jobs_workload(
     cfg: SimConfig,
     archs: List[str],

@@ -2,11 +2,16 @@
 price / weather signals and demand-response power-cap events for the twin."""
 
 from repro.scenarios.events import (
+    BurstSchedule,
     CapSchedule,
     OutageSchedule,
+    burst_events,
+    burst_mult_at,
     cap_events,
+    next_burst_event,
     next_cap_event,
     next_outage_event,
+    no_bursts,
     no_cap,
     no_outages,
     outage_down,
@@ -20,6 +25,7 @@ from repro.scenarios.scenario import (
     carbon_trace,
     default_scenario,
     demand_response,
+    diurnal_serving,
     heatwave,
     n_replicas,
     resilience_drill,

@@ -172,6 +172,75 @@ def outage_level_at(sched: OutageSchedule, t: jax.Array) -> jax.Array:
     return jnp.max(jnp.where(active, sched.force_level, 0))
 
 
+class BurstSchedule(NamedTuple):
+    """Traffic-burst (flash-crowd) windows for the serving twin
+    (docs/serving.md).
+
+    Up to E windows ``[start_t, end_t)``; each scales the
+    ``Scenario.traffic`` request-rate signal by ``mult`` while active
+    (largest multiplier wins when windows overlap; 1.0 outside any
+    window). A slot with ``mult <= 0`` is padding. Window edges are
+    exact macro breakpoints via ``next_burst_event``."""
+
+    start_t: jax.Array  # (E,) window start [s]
+    end_t: jax.Array    # (E,) window end [s] (exclusive)
+    mult: jax.Array     # (E,) traffic multiplier; <= 0 = padding
+
+
+def no_bursts(n_events: int = 1) -> BurstSchedule:
+    """Schedule with no burst windows (all padding)."""
+    E = max(n_events, 1)
+    z = jnp.zeros((E,), jnp.float32)
+    return BurstSchedule(start_t=z, end_t=z, mult=z)
+
+
+def burst_events(
+    starts: Sequence[float],
+    ends: Sequence[float],
+    mults: Sequence[float],
+    *,
+    n_events: int | None = None,
+) -> BurstSchedule:
+    """Build a burst schedule from parallel window lists, padded to
+    ``n_events``. Multipliers must be positive (use < 1 for planned
+    traffic dips, > 1 for flash crowds)."""
+    s = np.asarray(starts, np.float32).reshape(-1)
+    e = np.asarray(ends, np.float32).reshape(-1)
+    m = np.asarray(mults, np.float32).reshape(-1)
+    if not (s.shape == e.shape == m.shape):
+        raise ValueError("starts/ends/mults must have equal lengths")
+    if np.any(e < s):
+        raise ValueError("burst end_t before start_t")
+    if np.any(m <= 0.0):
+        raise ValueError("burst mult must be positive")
+    E = max(n_events or s.size, s.size, 1)
+    pad = E - s.size
+    if pad:
+        s = np.concatenate([s, np.zeros(pad, np.float32)])
+        e = np.concatenate([e, np.zeros(pad, np.float32)])
+        m = np.concatenate([m, np.zeros(pad, np.float32)])
+    return BurstSchedule(start_t=jnp.asarray(s), end_t=jnp.asarray(e),
+                         mult=jnp.asarray(m))
+
+
+def next_burst_event(sched: BurstSchedule, t: jax.Array) -> jax.Array:
+    """Earliest burst-window edge strictly after ``t`` (``inf`` when
+    none) — same breakpoint contract as ``next_cap_event``."""
+    live = sched.mult > 0.0
+    edges = jnp.concatenate([sched.start_t, sched.end_t])
+    live2 = jnp.concatenate([live, live])
+    edges = jnp.where(live2 & (edges > t), edges, _INF)
+    return jnp.min(edges)
+
+
+def burst_mult_at(sched: BurstSchedule, t: jax.Array) -> jax.Array:
+    """Traffic multiplier at time t: the largest among active windows,
+    1.0 when none is active."""
+    active = (t >= sched.start_t) & (t < sched.end_t) & (sched.mult > 0.0)
+    peak = jnp.max(jnp.where(active, sched.mult, 0.0))
+    return jnp.where(jnp.any(active), peak, jnp.float32(1.0))
+
+
 def outage_down(
     sched: OutageSchedule, t: jax.Array, node_rack: jax.Array
 ) -> tuple[jax.Array, jax.Array]:

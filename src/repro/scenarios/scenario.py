@@ -21,19 +21,25 @@ import numpy as np
 
 from repro.configs.sim import SimConfig
 from repro.scenarios.events import (
+    BurstSchedule,
     CapSchedule,
     OutageSchedule,
+    burst_events,
     cap_events,
+    no_bursts,
     no_cap,
     no_outages,
     outage_events,
 )
-from repro.scenarios.signals import Signal, from_trace, sinusoid
+from repro.scenarios.signals import Signal, constant, from_trace, sinusoid
 
-# class-level default shared by every scenario without outage windows:
-# one padding slot, so legacy builders need no changes and all
-# fixed-shape invariants (vmap across replicas) hold by construction
+# class-level defaults shared by every scenario without outage/burst
+# windows or serving traffic: one padding slot / a zero-rate signal, so
+# legacy builders need no changes and all fixed-shape invariants (vmap
+# across replicas) hold by construction
 _NO_OUTAGES = no_outages()
+_NO_TRAFFIC = constant(0.0)
+_NO_BURSTS = no_bursts()
 
 
 class Scenario(NamedTuple):
@@ -42,6 +48,8 @@ class Scenario(NamedTuple):
     wetbulb: Signal       # outdoor wetbulb [degC] (drives cooling COP)
     power_cap: CapSchedule
     outages: OutageSchedule = _NO_OUTAGES
+    traffic: Signal = _NO_TRAFFIC      # serving request rate [req/s]
+    bursts: BurstSchedule = _NO_BURSTS  # flash-crowd traffic multipliers
 
 
 # ---------------------------------------------------------------- builders
@@ -161,6 +169,34 @@ def resilience_drill(
     )
 
 
+def diurnal_serving(
+    cfg: SimConfig,
+    *,
+    peak_rps: float = 40.0,
+    base_frac: float = 0.25,
+    burst_mult: float = 2.5,
+    burst_start_s: float = 13.0 * 3600.0,
+    burst_len_s: float = 1.0 * 3600.0,
+    period_s: float | None = None,
+) -> Scenario:
+    """Online-inference traffic for the serving twin (docs/serving.md):
+    a diurnal request-rate sinusoid — night trough at ``base_frac *
+    peak_rps``, peak mid-day, phase-aligned with the wetbulb peak so the
+    traffic maximum lands on the worst cooling hour — plus one
+    flash-crowd window multiplying the rate by ``burst_mult``. Pair with
+    ``cfg.serving_enabled=True`` and a nonzero ``serving_nodes`` pool;
+    ``period_s`` shrinks the diurnal cycle for short test episodes."""
+    period = cfg.day_seconds if period_s is None else period_s
+    mean = 0.5 * (1.0 + base_frac) * peak_rps
+    amp = 0.5 * (1.0 - base_frac) * peak_rps
+    return default_scenario(cfg)._replace(
+        # mean - amp*cos(2*pi*t/period): trough at t=0, peak mid-cycle
+        traffic=sinusoid(mean, amp, period, phase=-math.pi / 2),
+        bursts=burst_events([burst_start_s],
+                            [burst_start_s + burst_len_s], [burst_mult]),
+    )
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "default": default_scenario,
     "solar_heavy": solar_heavy,
@@ -168,6 +204,7 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "heatwave": heatwave,
     "thermal_stress": thermal_stress,
     "resilience_drill": resilience_drill,
+    "diurnal_serving": diurnal_serving,
 }
 
 
@@ -214,6 +251,18 @@ def _pad_outages(sched: OutageSchedule, E: int) -> OutageSchedule:
     )
 
 
+def _pad_bursts(sched: BurstSchedule, E: int) -> BurstSchedule:
+    e = sched.start_t.shape[0]
+    if e == E:
+        return sched
+    z = jnp.zeros((E - e,), jnp.float32)
+    return BurstSchedule(
+        start_t=jnp.concatenate([sched.start_t, z]),
+        end_t=jnp.concatenate([sched.end_t, z]),
+        mult=jnp.concatenate([sched.mult, z]),
+    )
+
+
 def stack_scenarios(scenarios: Sequence[Scenario]) -> Scenario:
     """Stack scenarios into one batched pytree (leading replica axis).
 
@@ -223,9 +272,10 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> Scenario:
     if not scenarios:
         raise ValueError("need at least one scenario")
     T = max(s.values.shape[0] for sc in scenarios
-            for s in (sc.carbon, sc.price, sc.wetbulb))
+            for s in (sc.carbon, sc.price, sc.wetbulb, sc.traffic))
     E = max(sc.power_cap.start_t.shape[0] for sc in scenarios)
     Eo = max(sc.outages.start_t.shape[0] for sc in scenarios)
+    Eb = max(sc.bursts.start_t.shape[0] for sc in scenarios)
     norm = [
         Scenario(
             carbon=_pad_trace(sc.carbon, T),
@@ -233,6 +283,8 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> Scenario:
             wetbulb=_pad_trace(sc.wetbulb, T),
             power_cap=_pad_events(sc.power_cap, E),
             outages=_pad_outages(sc.outages, Eo),
+            traffic=_pad_trace(sc.traffic, T),
+            bursts=_pad_bursts(sc.bursts, Eb),
         )
         for sc in scenarios
     ]

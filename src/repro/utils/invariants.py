@@ -110,3 +110,47 @@ def check_state(cfg: SimConfig, statics: Statics, state: SimState) -> None:
     checkify.check(
         jnp.all(state.n_failures >= 0),
         "negative per-job failure count")
+
+    # --- serving twin: queue depths, SLO accumulators, and the request
+    # conservation ledger (only compiled in when the twin is on — the
+    # fields exist regardless, but are frozen zeros otherwise)
+    if cfg.serving_on:
+        checkify.check(
+            jnp.all(state.srv_queue >= -_EPS)
+            & jnp.all(state.srv_retry_q >= -_EPS)
+            & jnp.all(state.srv_inflight >= -_EPS),
+            "negative serving queue depth (srv_queue/srv_retry_q/"
+            "srv_inflight)")
+        acc = (state.srv_arrived, state.srv_completed, state.srv_shed,
+               state.srv_dropped, state.srv_retried, state.srv_slo_viol,
+               state.srv_lat_sum)
+        fin = jnp.bool_(True)
+        nonneg = jnp.bool_(True)
+        for a in acc:
+            fin = fin & jnp.all(jnp.isfinite(a))
+            nonneg = nonneg & jnp.all(a >= 0.0)
+        checkify.check(fin, "NaN/Inf in serving SLO accumulators")
+        checkify.check(nonneg, "negative serving SLO accumulator")
+        # conservation: every arrived request is in a queue, a retry
+        # bucket, in flight, completed, shed, or terminally dropped
+        tol = 1e-3 * state.srv_arrived + 1e-2
+        held = (jnp.sum(state.srv_queue, axis=-1)
+                + jnp.sum(state.srv_retry_q, axis=-1)
+                + state.srv_inflight)
+        checkify.check(
+            jnp.all(state.srv_inflight + state.srv_completed
+                    <= state.srv_arrived + tol),
+            "serving in-flight + completed exceeds arrivals "
+            "(admission leak)")
+        checkify.check(
+            jnp.all(jnp.abs(
+                state.srv_arrived
+                - (held + state.srv_completed + state.srv_shed
+                   + state.srv_dropped)) <= tol),
+            "serving request conservation violated: arrived != held + "
+            "completed + shed + dropped")
+        # retries are bounded by the per-request budget
+        checkify.check(
+            jnp.all(state.srv_retried
+                    <= cfg.serving_max_retries * state.srv_arrived + tol),
+            "serving retries exceed the per-request retry budget")

@@ -378,6 +378,41 @@ def test_macro_full_resilience_stack():
     assert s["goodput_frac"] < 1.0 and s["lost_node_seconds"] > 0
 
 
+def test_macro_full_serving_stack():
+    """(e) the whole serving twin at once — diurnal traffic with a burst
+    window, admission control, load shedding, timeout/backoff retries
+    with terminal drops, and an autoscale wake in flight from t=0:
+    per-tick and macro stay bit-identical (every SimState field incl.
+    the PRNG stream, and all telemetry) and the engine still skips the
+    quiet trough stretches."""
+    from repro.scenarios import diurnal_serving
+
+    cfg = tiny_cluster(serving_enabled=True, serving_nodes=4,
+                       serving_concurrency=4.0, serving_service_s=3.0,
+                       serving_queue_cap=60.0, serving_timeout_s=20.0,
+                       serving_slo_s=6.0, serving_wake_s=90.0,
+                       serving_max_retries=2, serving_backoff_s=5.0)
+    scn = diurnal_serving(cfg, peak_rps=8.0, base_frac=0.05,
+                          period_s=1800.0, burst_start_s=600.0,
+                          burst_len_s=200.0, burst_mult=4.0)
+    jobs, bank = synth_workload(cfg, 24, 900.0, seed=7)
+    statics = build_statics(cfg, bank, scenario=scn)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(1)), jobs)
+    # start the pool half-asleep with target = full pool: apply_serving
+    # opens a wake batch on tick 0, so the wake-completion breakpoint is
+    # genuinely exercised
+    state = state._replace(srv_active=jnp.float32(2.0))
+    fs, tel, fs2, tel2 = _run_both(cfg, statics, state, 1800, "fcfs")
+    _assert_equiv(fs, tel, fs2, tel2)
+    # every rung of the overload ladder actually fired
+    assert float(fs.srv_shed) > 0
+    assert float(fs.srv_retried) > 0
+    assert float(fs.srv_dropped) > 0
+    assert float(fs.srv_completed) > 0
+    assert float(fs.srv_active) == cfg.serving_nodes     # wake completed
+    assert float(tel2.macro_steps) < 0.85 * 1800         # still skips
+
+
 def test_quiet_horizon_visible_queue_blocks():
     """A dispatch-visible queued job pins the conservative horizon to 0
     unless the caller proves the queue unservable."""

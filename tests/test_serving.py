@@ -1,0 +1,189 @@
+"""Serving-twin unit + property suite (docs/serving.md).
+
+Covers the overload ladder's conservation ledger (shed + dropped +
+completed + held == arrived), the capped-backoff retry schedule, the
+monotonicity of shedding in traffic scale, the SLO summary columns, the
+SchedEnv serving obs/action surface, and the checkify invariants.
+"""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs.sim import tiny_cluster
+from repro.core import build_statics, init_state, load_jobs, run_episode
+from repro.core.serving import retry_backoff
+from repro.core.sim import summary
+from repro.data import synth_workload
+from repro.envs import SchedEnv
+from repro.envs.sched_env import SERVING_FEATURES
+from repro.scenarios import diurnal_serving
+
+
+def _serving_cfg(**kw):
+    base = dict(serving_enabled=True, serving_nodes=4,
+                serving_concurrency=4.0, serving_service_s=3.0,
+                serving_queue_cap=60.0, serving_timeout_s=20.0,
+                serving_slo_s=6.0, serving_max_retries=2,
+                serving_backoff_s=5.0)
+    base.update(kw)
+    return tiny_cluster(**base)
+
+
+def _run(cfg, scn, n_steps=900, state_fn=None):
+    statics = build_statics(cfg, scenario=scn)
+    state = init_state(cfg, statics, jax.random.key(0))
+    if state_fn is not None:
+        state = state_fn(state)
+    fs, tel = jax.jit(lambda s: run_episode(
+        cfg, statics, s, n_steps, "fcfs", summary_only=True))(state)
+    return fs, tel
+
+
+def test_request_conservation_under_overload():
+    """Every arrived request is accounted for: still queued (admission or
+    retry buckets), in flight, completed, shed, or terminally dropped —
+    and the overload is heavy enough that every ladder rung fires."""
+    cfg = _serving_cfg()
+    scn = diurnal_serving(cfg, peak_rps=30.0, period_s=1800.0,
+                          burst_start_s=300.0, burst_len_s=200.0,
+                          burst_mult=3.0)
+    fs, _ = _run(cfg, scn)
+    held = (float(jnp.sum(fs.srv_queue)) + float(jnp.sum(fs.srv_retry_q))
+            + float(fs.srv_inflight))
+    arrived = float(fs.srv_arrived)
+    out = (float(fs.srv_completed) + float(fs.srv_shed)
+           + float(fs.srv_dropped))
+    assert arrived > 0
+    np.testing.assert_allclose(held + out, arrived,
+                               rtol=1e-5, atol=1e-2)
+    assert float(fs.srv_shed) > 0
+    assert float(fs.srv_retried) > 0
+    assert float(fs.srv_dropped) > 0
+    assert float(fs.srv_completed) > 0
+
+
+def test_retry_backoff_increasing_then_capped():
+    cfg = tiny_cluster(serving_backoff_s=4.0, serving_backoff_mult=2.0,
+                       serving_backoff_cap_s=60.0, serving_max_retries=8)
+    waits = [float(retry_backoff(cfg, a)) for a in range(1, 10)]
+    # 4, 8, 16, 32, 60, 60, ... strictly increasing until the cap
+    for a, b in zip(waits, waits[1:]):
+        assert b >= a
+        if a < 60.0:
+            assert b > a
+    assert max(waits) == 60.0
+    assert waits[0] == 4.0
+
+
+def test_shedding_monotone_in_traffic_scale():
+    """Scaling the whole traffic signal up never reduces shed mass."""
+    shed = []
+    for peak in (6.0, 15.0, 40.0):
+        cfg = _serving_cfg()
+        scn = diurnal_serving(cfg, peak_rps=peak, period_s=1800.0,
+                              burst_start_s=300.0, burst_len_s=200.0,
+                              burst_mult=2.0)
+        fs, _ = _run(cfg, scn)
+        shed.append(float(fs.srv_shed))
+    assert shed[0] <= shed[1] <= shed[2]
+    assert shed[2] > shed[0]
+
+
+def test_summary_slo_columns():
+    cfg = _serving_cfg(serving_queue_cap=200.0, serving_timeout_s=40.0)
+    scn = diurnal_serving(cfg, peak_rps=8.0, period_s=1800.0,
+                          burst_start_s=600.0, burst_len_s=200.0,
+                          burst_mult=3.0)
+    fs, tel = _run(cfg, scn, n_steps=1800)
+    s = summary(fs, tel)
+    assert s["srv_arrived"] > 0 and s["srv_completed"] > 0
+    assert 0.0 <= s["srv_slo_violation_frac"] <= 1.0
+    assert s["srv_goodput_requests"] <= s["srv_completed"]
+    assert s["srv_mean_latency_s"] > 0
+    # latency quantiles come from the log-2 histogram, in SLO units
+    assert s["srv_p50_latency_x_slo"] <= s["srv_p99_latency_x_slo"]
+    assert s["srv_p99_latency_x_slo"] <= 16.0
+
+
+def test_serving_off_summary_zeros_and_layout():
+    """serving off -> all serving columns are exact zeros and the env
+    obs layout is unchanged (no serving features appended)."""
+    cfg = tiny_cluster()
+    jobs, bank = synth_workload(cfg, 8, 300.0, seed=0)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    fs, tel = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 300, "fcfs", summary_only=True))(state)
+    s = summary(fs, tel)
+    assert s["srv_arrived"] == 0.0 and s["srv_shed"] == 0.0
+
+
+def test_env_serving_obs_and_actions():
+    cfg = _serving_cfg(sched_max_candidates=4, serving_scale_step=1.0)
+    cfg_off = tiny_cluster(sched_max_candidates=4)
+    scn = diurnal_serving(cfg, peak_rps=10.0, period_s=1800.0)
+    wls = [synth_workload(cfg, 16, 900.0, seed=0)]
+    env = SchedEnv(cfg, wls, episode_steps=8, sim_steps_per_action=5,
+                   scenario=scn)
+    env_off = SchedEnv(cfg_off, wls, episode_steps=8,
+                       sim_steps_per_action=5)
+    # obs grows by exactly the serving feature block; 4 extra actions
+    assert env.obs_dim == env_off.obs_dim + len(SERVING_FEATURES)
+    assert env.n_actions == env_off.n_actions + 4
+
+    st, obs = env.reset(jax.random.key(0))
+    assert obs.shape == (env.obs_dim,)
+    assert np.all(np.isfinite(np.asarray(obs)))
+
+    k = env.k
+    # scale-down action lowers the pool target by one step
+    st2, *_ = jax.jit(env.step)(st, jnp.int32(k + 1))
+    assert float(st2.sim.srv_target) == cfg.serving_nodes - 1
+    # threshold-up action raises the admission threshold by 0.05
+    st3, *_ = jax.jit(env.step)(st, jnp.int32(k + 4))
+    np.testing.assert_allclose(float(st3.sim.srv_admit_thresh),
+                               min(cfg.serving_admit_thresh + 0.05, 1.0),
+                               rtol=1e-6)
+    # a dispatch/no-op action leaves both knobs untouched
+    st4, *_ = jax.jit(env.step)(st, jnp.int32(k))
+    assert float(st4.sim.srv_target) == cfg.serving_nodes
+    assert float(st4.sim.srv_admit_thresh) == pytest.approx(
+        cfg.serving_admit_thresh)
+
+
+def test_serving_invariants_checkify(monkeypatch):
+    """The REPRO_CHECKIFY suite passes on a hot serving episode and
+    catches a corrupted ledger."""
+    from jax.experimental import checkify
+
+    from repro.utils import invariants
+
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    assert invariants.enabled()
+    cfg = _serving_cfg()
+    scn = diurnal_serving(cfg, peak_rps=25.0, period_s=1800.0,
+                          burst_start_s=300.0, burst_len_s=200.0,
+                          burst_mult=3.0)
+    statics = build_statics(cfg, scenario=scn)
+    state = init_state(cfg, statics, jax.random.key(0))
+    fs, _ = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 600, "fcfs", summary_only=True))(state)
+
+    def audit(s):
+        invariants.check_state(cfg, statics, s)
+        return jnp.float32(0.0)
+
+    err, _ = checkify.checkify(audit)(fs)
+    err.throw()                                   # clean state passes
+    bad = fs._replace(srv_completed=fs.srv_completed
+                      + fs.srv_arrived + 1e3)     # break conservation
+    err, _ = checkify.checkify(audit)(bad)
+    with pytest.raises(Exception, match="conservation|exceeds"):
+        err.throw()

@@ -1,0 +1,72 @@
+"""Activation suite for ``perfmodel.workload_gen`` — the paper's
+"generate synthetic workloads using performance modeling tools" path.
+
+Pins (a) finite, positive roofline-derived durations/utilizations for
+every (arch, applicable shape) cell in the zoo, (b) the full round-trip
+``lm_jobs_workload`` -> ``load_jobs`` -> ``run_episode`` on a reduced
+config, and (c) the ``serving_profile`` bridge into the serving twin.
+"""
+
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs.base import SHAPES, arch_names, get_arch, shape_applicable
+from repro.configs.sim import tiny_cluster
+from repro.core import build_statics, init_state, load_jobs, run_episode
+from repro.perfmodel import lm_jobs_workload, lm_training_job, serving_profile
+
+
+@pytest.mark.parametrize("arch", arch_names())
+def test_roofline_jobs_finite_positive_all_archs(arch):
+    cfg = get_arch(arch)
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+        ok, why = shape_applicable(cfg, SHAPES[shape_name])
+        if not ok:
+            continue
+        job = lm_training_job(arch, shape_name, n_chips=16,
+                              token_budget=1e8)
+        for key in ("duration_s", "gpu_util", "cpu_util", "net_tx_gbps",
+                    "chip_power_w", "step_s"):
+            v = job[key]
+            assert np.isfinite(v), f"{arch}/{shape_name}: {key} not finite"
+            assert v > 0, f"{arch}/{shape_name}: {key} not positive"
+        assert 0 < job["gpu_util"] <= 1.0 + 1e-6
+        assert job["n_nodes"] >= 1
+
+
+def test_lm_jobs_workload_roundtrips_through_twin():
+    cfg = tiny_cluster(max_jobs=64)
+    jobs, bank = lm_jobs_workload(
+        cfg, ["gemma3-1b", "qwen3-4b", "xlstm-125m"],
+        n_jobs=12, horizon_s=900.0, seed=3)
+    assert np.all(np.isfinite(jobs["dur"])) and np.all(jobs["dur"] > 0)
+    assert np.all(jobs["n_nodes"] >= 1)
+    assert np.all(np.diff(jobs["submit_t"]) >= 0)   # sorted arrivals
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    fs, tel = jax.jit(lambda s: run_episode(
+        cfg, statics, s, 600, "fcfs", summary_only=True))(state)
+    assert float(fs.n_completed) + float(np.sum(np.asarray(
+        fs.jstate == 2))) >= 0          # episode ran without NaN traps
+    assert np.isfinite(float(fs.energy_kwh)) and float(fs.energy_kwh) > 0
+    assert float(tel.n_steps) == 600
+
+
+def test_serving_profile_bridges_to_config():
+    prof = serving_profile("gemma3-1b", n_chips=16, gen_tokens=128)
+    for k, v in prof.items():
+        assert np.isfinite(v) and v > 0, f"{k} not finite-positive"
+    assert 0 < prof["serving_prefill_frac"] < 1
+    assert prof["serving_prefill_util"] <= 1.0
+    assert prof["serving_decode_util"] <= 1.0
+    # decode dominates an autoregressive request end to end
+    assert prof["serving_service_s"] > 0
+    cfg = tiny_cluster(serving_enabled=True, serving_nodes=4, **prof)
+    assert cfg.serving_on
+    assert cfg.serving_service_s == prof["serving_service_s"]
