@@ -506,3 +506,61 @@ def bench_vectorized_envs() -> List[Row]:
             f"env_steps_per_s={200*n_envs/dt:,.0f}",
         ))
     return rows
+
+
+def bench_snapshot_overhead() -> List[Row]:
+    """Durable-twin cost model (docs/robustness.md): the same
+    summary-only replay with snapshotting OFF, at an infinite interval
+    (segmented driver, zero disk writes besides the final snapshot) and
+    at a finite interval. Snapshot-off must be free — the traced step
+    gains no work; the finite-interval row measures what a real
+    crash-window buys and costs (host sync + atomic write per segment)."""
+    import shutil
+    import tempfile
+
+    from repro.configs.sim import tiny_cluster
+    from repro.core import build_statics, init_state, load_jobs, run_episode
+    from repro.data import synth_workload
+
+    cfg = tiny_cluster()
+    jobs, bank = synth_workload(cfg, 12, 1800.0, seed=2)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    n_steps = 1800
+
+    run_off = jax.jit(lambda s: run_episode(cfg, statics, s, n_steps,
+                                            "replay", summary_only=True))
+    dt_off = _timeit(run_off, state, n=2)
+
+    def run_at(every, write):
+        d = tempfile.mkdtemp(prefix="bench_snap_") if write else None
+        try:
+            t0 = time.perf_counter()
+            fs, _ = run_episode(cfg, statics, state, n_steps, "replay",
+                                summary_only=True, snapshot_every_s=every,
+                                snapshot_dir=d)
+            jax.block_until_ready(fs.t)
+            return time.perf_counter() - t0
+        finally:
+            if d is not None:
+                shutil.rmtree(d, ignore_errors=True)
+
+    # inf + no dir = the segmented driver with zero disk writes: measures
+    # the claim that snapshotting adds no work to the traced step
+    run_at(float("inf"), write=False)        # compile the segment driver
+    dt_inf = min(run_at(float("inf"), write=False) for _ in range(2))
+    interval_s = n_steps * float(cfg.dt) / 8  # 8 snapshots per episode
+    run_at(interval_s, write=True)
+    dt_fin = min(run_at(interval_s, write=True) for _ in range(2))
+    return [
+        ("replay_snapshot_off", dt_off / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_off:,.0f}"),
+        ("replay_snapshot_inf", dt_inf / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_inf:,.0f};"
+         f"overhead_vs_off={dt_inf/dt_off - 1:+.1%};"
+         f"fixed_ms_per_episode={(dt_inf - dt_off)*1e3:.1f}"),
+        ("replay_snapshot_8x", dt_fin / n_steps * 1e6,
+         f"steps_per_s={n_steps/dt_fin:,.0f};interval_s={interval_s:.0f};"
+         f"overhead_vs_off={dt_fin/dt_off - 1:+.1%};"
+         f"us_per_snapshot={(dt_fin - dt_inf)/8*1e6:,.0f}"),
+    ]

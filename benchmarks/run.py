@@ -17,6 +17,8 @@
   fleet_sharded_* / fleet_vmapped_*  device-sharded fleet (run_fleet mesh=)
                            vs single-device vmap, incl. the lockstep-
                            adversarial macro workload (BENCH_8)
+  replay_snapshot_*        durable twin: segmented snapshot/resume driver
+                           overhead vs vanilla replay (BENCH_10)
   dispatch_* / power_scatter_*  sort-free placement + fused power kernel
   pallas_*                 kernel microbenches vs oracles
   train/decode_reduced_*   LM substrate throughput (reduced configs)
@@ -42,6 +44,7 @@ import json
 import os
 import re
 import sys
+import threading
 import time
 import traceback
 
@@ -101,6 +104,7 @@ def _benches(smoke: bool):
         from benchmarks.bench_sim import (
             bench_faults_smoke,
             bench_macro_smoke,
+            bench_snapshot_overhead,
             bench_thermal_smoke,
             bench_vectorized_envs,
         )
@@ -112,6 +116,7 @@ def _benches(smoke: bool):
             bench_thermal_smoke,
             bench_faults_smoke,
             bench_serving_smoke,
+            bench_snapshot_overhead,
             _named(bench_policy_grid, "bench_policy_grid", smoke=True),
             _named(bench_rl, "bench_rl", smoke=True),
             _named(bench_fleet_sharded, "bench_fleet_sharded", smoke=True),
@@ -134,6 +139,7 @@ def _benches(smoke: bool):
         bench_replay_throughput,
         bench_rl_training,
         bench_scheduler_comparison,
+        bench_snapshot_overhead,
         bench_thermal,
         bench_thermal_smoke,
         bench_vectorized_envs,
@@ -148,6 +154,7 @@ def _benches(smoke: bool):
         bench_faults_smoke,
         bench_serving,
         bench_serving_smoke,
+        bench_snapshot_overhead,
         bench_scheduler_comparison,
         bench_power_prediction,
         bench_congestion_model,
@@ -204,10 +211,20 @@ def compare_artifacts(path_a: str, path_b: str,
                   f"{'-' if rb is None else us:>14}  {'-':>8}  {tag}")
             continue
         ua, ub = ra["us_per_call"], rb["us_per_call"]
-        if not (isinstance(ua, (int, float)) and isinstance(ub, (int, float))) \
-                or ua != ua or ub != ub or ua <= 0 or ub <= 0:
-            print(f"{name:<{width}}  {ua!s:>14}  {ub!s:>14}  {'-':>8}  "
-                  "skipped (failed/zero-time row)")
+        bad = lambda u: (not isinstance(u, (int, float)) or u != u or u <= 0)
+        if bad(ua) or bad(ub):
+            if bad(ua) != bad(ub):
+                # failed on exactly one side: likely a REAL breakage (or
+                # fix) introduced between the two artifacts — warn loudly,
+                # but never count it as a perf regression
+                side = na if bad(ua) else nb
+                print(f"# WARNING: {name!r} failed/timed out only in "
+                      f"{side} — investigate before trusting this diff",
+                      file=sys.stderr)
+                tag = f"skipped (failed only in {side})"
+            else:
+                tag = "skipped (failed/zero-time row)"
+            print(f"{name:<{width}}  {ua!s:>14}  {ub!s:>14}  {'-':>8}  {tag}")
             continue
         speedup = ua / ub
         verdict = "ok"
@@ -224,6 +241,31 @@ def compare_artifacts(path_a: str, path_b: str,
     return len(regressions)
 
 
+def _run_bench_guarded(bench, timeout_s: float):
+    """Run one bench on a daemon worker thread. Returns
+    (result_rows | None, exception | None, timed_out). On timeout the
+    worker keeps running detached (XLA compiles are not interruptible
+    from Python) — the harness moves on and records the row as timed
+    out instead of hanging the whole suite."""
+    out = {"rows": None, "exc": None}
+
+    def work():
+        try:
+            out["rows"] = list(bench())
+        except BaseException as e:  # noqa: BLE001 - reported per-row
+            out["exc"] = e
+
+    th = threading.Thread(target=work, daemon=True)
+    th.start()
+    th.join(timeout_s if timeout_s and timeout_s > 0 else None)
+    if th.is_alive():
+        return None, None, True
+    return out["rows"], out["exc"], False
+
+
+RETRY_BACKOFF_S = 2.0
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -233,6 +275,11 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filter on bench function "
                          "names (e.g. --only policy_grid,dispatch)")
+    ap.add_argument("--timeout", type=float, default=0.0,
+                    help="per-bench wall-clock budget in seconds (0 = none); "
+                         "a bench over budget gets one retry, then its row "
+                         "is recorded with timed_out=true and the suite "
+                         "moves on")
     ap.add_argument("--compare", nargs=2, metavar=("A.json", "B.json"),
                     default=None,
                     help="diff two BENCH artifacts row-by-row instead of "
@@ -258,17 +305,36 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     rows, failed = [], []
     for bench in benches:
-        try:
-            for name, us, derived in bench():
+        bench_name = getattr(bench, "__name__", repr(bench))
+        # transient failures (thread-pool races, flaky first compile) get
+        # ONE retry with a short backoff; a second strike is recorded
+        retries = 0
+        while True:
+            result, exc, timed_out = _run_bench_guarded(bench, args.timeout)
+            if result is not None or retries >= 1:
+                break
+            retries += 1
+            what = "timed out" if timed_out else f"failed ({exc!r})"
+            print(f"# {bench_name} {what}; retrying once in "
+                  f"{RETRY_BACKOFF_S:.0f}s", file=sys.stderr, flush=True)
+            time.sleep(RETRY_BACKOFF_S)
+        if result is not None:
+            for name, us, derived in result:
                 print(f"{name},{us:.1f},{derived}", flush=True)
                 rows.append(
                     {"name": name, "us_per_call": round(us, 1),
-                     "derived": derived})
-        except Exception as e:  # noqa: BLE001
-            traceback.print_exc()
-            name = getattr(bench, "__name__", repr(bench))
-            failed.append(name)
-            print(f"{name},nan,FAILED:{e!r}", flush=True)
+                     "derived": derived, "retries": retries,
+                     "timed_out": False})
+        else:
+            if exc is not None:
+                traceback.print_exception(type(exc), exc, exc.__traceback__)
+            failed.append(bench_name)
+            detail = (f"TIMEOUT>{args.timeout:.0f}s" if timed_out
+                      else f"FAILED:{exc!r}")
+            print(f"{bench_name},nan,{detail}", flush=True)
+            rows.append(
+                {"name": bench_name, "us_per_call": None, "derived": detail,
+                 "retries": retries, "timed_out": bool(timed_out)})
 
     # smoke numbers (tiny configs) and --only subsets must not claim a
     # numbered BENCH_<n> trajectory slot by default: numbered artifacts are

@@ -1,8 +1,15 @@
 from repro.checkpoint.ckpt import (
     AsyncCheckpointer,
     latest_step,
+    read_meta,
     restore,
     restore_sharded,
     save,
     save_sharded,
+)
+from repro.checkpoint.episode import (
+    check_fingerprint,
+    run_episode_snapshotted,
+    run_fingerprint,
+    run_fleet_snapshotted,
 )

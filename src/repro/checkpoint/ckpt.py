@@ -23,12 +23,20 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
+from repro.utils.errors import CheckpointError
+
 MANIFEST = "manifest.json"
+
+
+def _is_key_array(leaf) -> bool:
+    dt = getattr(leaf, "dtype", None)
+    return dt is not None and jax.dtypes.issubdtype(dt, jax.dtypes.prng_key)
 
 
 def _leaf_files(tree) -> Dict[str, Any]:
@@ -63,15 +71,28 @@ def save(
     leaves = _leaf_files(tree)
     meta = {"step": int(step), "leaves": {}, "extra": extra_meta or {}}
     for name, leaf in leaves.items():
+        entry = {}
+        if _is_key_array(leaf):
+            # typed PRNG keys serialize as their uint32 key data; the impl
+            # name in the manifest lets restore re-wrap them exactly
+            entry["prng_impl"] = str(jax.random.key_impl(leaf))
+            leaf = jax.random.key_data(leaf)
         arr = np.asarray(jax.device_get(leaf))
         dtype_name = str(arr.dtype)
         if arr.dtype.kind == "V":  # ml_dtypes (bfloat16, fp8, ...)
             dtype_name = arr.dtype.name
             arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
         np.save(os.path.join(tmp, name + ".npy"), arr)
-        meta["leaves"][name] = {"shape": list(arr.shape), "dtype": dtype_name}
+        entry.update({"shape": list(arr.shape), "dtype": dtype_name})
+        meta["leaves"][name] = entry
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(meta, f)
+    # chaos hook: widen the pre-rename window so the crash harness
+    # (utils/chaos.py) can reliably land SIGKILLs mid-write and prove
+    # the tmp-then-rename protocol never exposes a torn checkpoint
+    slow = os.environ.get("REPRO_CHAOS_SLOW_SAVE")
+    if slow:
+        time.sleep(float(slow))
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -89,43 +110,91 @@ def _gc(directory: str, keep: int) -> None:
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest complete checkpoint step in ``directory`` (None if none).
+
+    Also sweeps stale ``step_<N>.tmp`` directories left by a crash
+    mid-write — they are by construction incomplete (the atomic rename
+    never happened), so deleting them is always safe. Don't scan a
+    directory a live ``AsyncCheckpointer`` is writing into from another
+    process: the sweep could reap its in-flight tmp dir.
+    """
     if not os.path.isdir(directory):
         return None
     steps = []
     for d in os.listdir(directory):
-        if d.startswith("step_") and not d.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, d, MANIFEST)):
-                steps.append(int(d.split("_")[1]))
+        if d.startswith("step_") and d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+        elif d.startswith("step_") and \
+                os.path.exists(os.path.join(directory, d, MANIFEST)):
+            steps.append(int(d.split("_")[1]))
     return max(steps) if steps else None
+
+
+def read_meta(directory: str, step: int) -> Dict[str, Any]:
+    """Load a checkpoint's manifest; typed errors on missing/corrupt."""
+    path = os.path.join(directory, f"step_{step:010d}", MANIFEST)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise CheckpointError(
+            f"no checkpoint manifest at {path} — directory missing or "
+            "write never completed", field="manifest.json") from None
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(
+            f"corrupt checkpoint manifest {path}: {e}",
+            field="manifest.json") from None
 
 
 def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> Any:
     """Restore into the structure of `like`. When `shardings` (a matching
     pytree of NamedSharding) is given, leaves are device_put with them —
-    this is where elastic resharding happens."""
+    this is where elastic resharding happens. Missing/corrupt manifests,
+    missing leaf files and shape mismatches raise a typed
+    :class:`~repro.utils.errors.CheckpointError` naming the artifact."""
     path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, MANIFEST)) as f:
-        meta = json.load(f)
+    meta = read_meta(directory, step)
 
     from repro.utils.tree import tree_map_with_path_names
 
     def load(name, leaf):
         fname = name.replace("/", "__") or "leaf"
-        arr = np.load(os.path.join(path, fname + ".npy"))
-        want_dtype = meta["leaves"].get(fname, {}).get("dtype", str(arr.dtype))
+        try:
+            arr = np.load(os.path.join(path, fname + ".npy"))
+        except FileNotFoundError:
+            raise CheckpointError(
+                f"checkpoint {path} is missing leaf file {fname}.npy "
+                "(manifest/leaf mismatch)", field=fname) from None
+        except ValueError as e:
+            raise CheckpointError(
+                f"checkpoint leaf {path}/{fname}.npy is corrupt: {e}",
+                field=fname) from None
+        entry = meta["leaves"].get(fname, {})
+        want_dtype = entry.get("dtype", str(arr.dtype))
         if str(arr.dtype) != want_dtype:
             # ml_dtypes saved as raw uint payloads
             arr = arr.view(jax.numpy.dtype(want_dtype))
+        if entry.get("prng_impl"):
+            key = jax.random.wrap_key_data(
+                jax.numpy.asarray(arr), impl=entry["prng_impl"])
+            expect = tuple(getattr(leaf, "shape", key.shape))
+            if tuple(key.shape) != expect:
+                raise CheckpointError(
+                    f"checkpoint leaf {name} shape {key.shape} != "
+                    f"expected {expect}", field=fname)
+            return key
         expect = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != expect:
-            raise ValueError(
-                f"checkpoint leaf {name} shape {arr.shape} != expected {expect}"
-            )
+            raise CheckpointError(
+                f"checkpoint leaf {name} shape {arr.shape} != expected "
+                f"{expect}", field=fname)
         return arr
 
     host_tree = tree_map_with_path_names(load, like)
     if shardings is None:
-        return jax.tree.map(lambda a: jax.numpy.asarray(a), host_tree)
+        return jax.tree.map(
+            lambda a: a if _is_key_array(a) else jax.numpy.asarray(a),
+            host_tree)
     return jax.tree.map(
         lambda a, s: jax.device_put(a, s), host_tree, shardings
     )
@@ -134,7 +203,9 @@ def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> A
 def save_sharded(directory: str, step: int, tree: Any, **kw) -> str:
     """Gather-to-host save (the multi-host version writes per-host shards;
     single-process here, so this is the host round-trip path)."""
-    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    host = jax.tree.map(
+        lambda x: x if _is_key_array(x) else np.asarray(jax.device_get(x)),
+        tree)
     return save(directory, step, host, **kw)
 
 
@@ -153,7 +224,9 @@ class AsyncCheckpointer:
 
     def save(self, step: int, tree: Any, **kw) -> None:
         self.wait()
-        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        host = jax.tree.map(
+            lambda x: x if _is_key_array(x)
+            else np.asarray(jax.device_get(x)), tree)
 
         def work():
             self.last_path = save(self.directory, step, host,

@@ -54,6 +54,7 @@ from repro.core.sim import (
     StepOut,
     TelemetrySummary,
     run_episode,
+    run_segment,
     summary_columns,
 )
 from repro.core.state import SimState, Statics
@@ -66,6 +67,7 @@ from repro.sharding.specs import (
     shard_map_compat,
 )
 from repro.utils import invariants
+from repro.utils.errors import ConfigError
 
 
 def _ensure_batched(scenarios) -> Scenario:
@@ -185,6 +187,58 @@ def _fleet_sharded(cfg, statics, scenarios, policies, state, keys, n_steps,
     )(statics, scenarios, policies, keys, state)
 
 
+# Segment twins of ``_fleet``/``_fleet_sharded`` for snapshot/resume
+# (checkpoint.episode): the same per-replica program cut at a tick
+# boundary, threading a RAW TelemetrySummary accumulator instead of
+# zero-init + finalize — keys are pre-installed in ``state`` (split/
+# fold_in happens ONCE per run, not per segment, so resumed PRNG streams
+# continue exactly where the uninterrupted run would be).
+@partial(jax.jit, static_argnames=("cfg", "n_ticks", "scheduler", "kw_items"),
+         donate_argnames=("state", "acc"))
+def _fleet_segment(cfg, statics, scenarios, policies, state, acc, n_ticks,
+                   scheduler, kw_items):
+    kw = dict(kw_items)
+    macro = bool(kw.pop("macro", False))
+    kw.pop("summary_only", None)
+    kw.pop("telemetry_every", None)
+
+    def one(scn: Scenario, pol, st: SimState, a):
+        stt = statics._replace(scenario=scn)
+        who = scheduler if pol is None else pol
+        return run_segment(cfg, stt, st, a, n_ticks, who, macro=macro, **kw)
+
+    return jax.vmap(one)(scenarios, policies, state, acc)
+
+
+@partial(jax.jit,
+         static_argnames=("cfg", "n_ticks", "scheduler", "kw_items", "mesh",
+                          "axis"),
+         donate_argnames=("state", "acc"))
+def _fleet_segment_sharded(cfg, statics, scenarios, policies, state, acc,
+                           n_ticks, scheduler, kw_items, mesh, axis):
+    kw = dict(kw_items)
+    macro = bool(kw.pop("macro", False))
+    kw.pop("summary_only", None)
+    kw.pop("telemetry_every", None)
+
+    def shard(statics, scenarios, policies, state, acc):
+        def one(scn: Scenario, pol, st: SimState, a):
+            stt = statics._replace(scenario=scn)
+            who = scheduler if pol is None else pol
+            return run_segment(cfg, stt, st, a, n_ticks, who,
+                               macro=macro, **kw)
+
+        return jax.vmap(one)(scenarios, policies, state, acc)
+
+    return shard_map_compat(
+        shard, mesh,
+        in_specs=(replicated_pspecs(statics),
+                  fleet_pspecs(scenarios, axis), fleet_pspecs(policies, axis),
+                  fleet_pspecs(state, axis), fleet_pspecs(acc, axis)),
+        out_specs=PartitionSpec(axis),
+    )(statics, scenarios, policies, state, acc)
+
+
 def shard_fleet(tree, mesh, axis: str = FLEET_AXIS):
     """``device_put`` a replica-batched fleet pytree (batched ``SimState``
     / ``Scenario`` / ``Policy`` / per-replica keys) onto ``mesh``, leading
@@ -207,6 +261,10 @@ def run_fleet(
     workloads: Sequence[int] | jnp.ndarray | None = None,
     mesh=None,
     mesh_axis: str = FLEET_AXIS,
+    snapshot_every_s: float | None = None,
+    snapshot_dir: str | None = None,
+    resume_from: str | None = None,
+    snapshot_keep: int = 3,
     **kw,
 ) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Simulate R replicas of the twin for ``n_steps`` in one jitted call.
@@ -256,10 +314,17 @@ def run_fleet(
     sync; under ``vmap`` the while-loops run lockstep, so replicas on
     event ticks overlap with replicas fast-forwarding).
 
+    Durability: ``snapshot_every_s`` / ``snapshot_dir`` / ``resume_from``
+    mirror ``run_episode``'s snapshot semantics at fleet granularity —
+    one crash-atomic snapshot of the whole replica-batched state (keys
+    installed, so resumed streams continue exactly) plus raw telemetry
+    accumulators; resume is bit-identical to the uninterrupted sweep.
+    Requires ``summary_only=True`` or ``macro=True``.
+
     Returns (final_states, outs) with a leading replica axis on every leaf.
     """
     if policies is not None and scheduler is not None:
-        raise ValueError(
+        raise ConfigError(
             f"both scheduler={scheduler!r} and policies= given — policies "
             "carry the selection stage, so the scheduler name would be "
             "silently ignored; pass exactly one")
@@ -273,7 +338,7 @@ def run_fleet(
         else:
             scenarios = _ensure_batched(scenarios)
             if n_replicas(scenarios) != P:
-                raise ValueError(
+                raise ConfigError(
                     f"{P} policies vs {n_replicas(scenarios)} scenarios — "
                     "axes must match; build the cross product with "
                     "policy_scenario_grid(policies, scenarios)")
@@ -288,7 +353,7 @@ def run_fleet(
             lambda a: jnp.broadcast_to(a, (R,) + jnp.shape(a)), state)
     else:
         if int(jnp.shape(state.t)[0]) != R:
-            raise ValueError(
+            raise ConfigError(
                 f"batched state has {jnp.shape(state.t)[0]} replicas, "
                 f"scenarios have {R}")
         # advance each replica's stream into a FRESH buffer: state and keys
@@ -297,32 +362,44 @@ def run_fleet(
         keys = jax.vmap(lambda k: jax.random.fold_in(k, 1))(state.key)
     if workloads is not None:
         if jnp.ndim(statics.cpu_trace) != 3:
-            raise ValueError(
+            raise ConfigError(
                 "workloads= needs a banked Statics trace ((W, J, Q) "
                 "cpu_trace, e.g. from data.stack_workloads); this statics "
                 "carries a single unbatched workload")
         ids_host = np.asarray(workloads, np.int32)   # host data: check here
         if ids_host.shape != (R,):
-            raise ValueError(
+            raise ConfigError(
                 f"workloads has shape {ids_host.shape}, expected ({R},) — "
                 "one bank id per replica")
         W = statics.cpu_trace.shape[0]
         lo, hi = int(ids_host.min()), int(ids_host.max())
         if lo < 0 or hi >= W:
-            raise ValueError(
+            raise ConfigError(
                 f"workload ids must be in [0, {W}) for this bank; got "
                 f"[{lo}, {hi}] — an out-of-range id would silently clamp "
                 "to the edge slice")
         state = state._replace(workload=jnp.asarray(ids_host))
     kw_items = tuple(sorted(kw.items()))
+    if snapshot_every_s is not None or resume_from is not None \
+            or snapshot_dir is not None:
+        from repro.checkpoint.episode import run_fleet_snapshotted
+
+        out = run_fleet_snapshotted(
+            cfg, statics, scenarios, policies, state, keys, n_steps,
+            scheduler, kw, mesh=mesh, mesh_axis=mesh_axis,
+            snapshot_every_s=snapshot_every_s, snapshot_dir=snapshot_dir,
+            resume_from=resume_from, snapshot_keep=snapshot_keep)
+        if invariants.enabled():
+            invariants.check_state(cfg, statics, out[0])
+        return out
     if mesh is not None:
         if mesh_axis not in mesh.shape:
-            raise ValueError(
+            raise ConfigError(
                 f"mesh has axes {tuple(mesh.shape)}, no {mesh_axis!r} — "
                 "build a fleet mesh with launch.mesh.make_fleet_mesh()")
         n_shards = int(mesh.shape[mesh_axis])
         if R % n_shards:
-            raise ValueError(
+            raise ConfigError(
                 f"{R} replicas do not divide across {n_shards} "
                 f"{mesh_axis!r}-axis devices — a silent pad would "
                 "fabricate replicas; pick R as a multiple of the mesh "

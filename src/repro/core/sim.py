@@ -103,7 +103,12 @@ class StepOut(NamedTuple):
 def _parse_weights(reward_weights) -> Tuple[
         float, float, float, float, float, float, float]:
     if len(reward_weights) not in (4, 5, 6, 7):
-        raise ValueError("reward_weights must have 4 to 7 entries")
+        from repro.utils.errors import ConfigError
+
+        raise ConfigError(
+            "reward_weights must have 4 to 7 entries "
+            "(w_thr, w_en, w_co2, w_q[, w_cost[, w_lost[, w_slo]]]); got "
+            f"{len(reward_weights)}")
     w_thr, w_en, w_co2, w_q = reward_weights[:4]
     w_cost = reward_weights[4] if len(reward_weights) >= 5 else 0.0
     w_lost = reward_weights[5] if len(reward_weights) >= 6 else 0.0
@@ -469,7 +474,9 @@ def make_step(
             and scheduler not in sched.SCHEDULERS:
         raise KeyError(f"unknown scheduler {scheduler}")
     if policy_mode and placement is not None:
-        raise ValueError(
+        from repro.utils.errors import ConfigError
+
+        raise ConfigError(
             f"both a Policy scheduler and placement={placement!r} given — "
             "the Policy carries the placement id, so the string would be "
             "silently ignored; pass exactly one")
@@ -1150,6 +1157,10 @@ def run_episode(
     telemetry_every: int = 1,
     summary_only: bool = False,
     macro: bool = False,
+    snapshot_every_s: float | None = None,
+    snapshot_dir: str | None = None,
+    resume_from: str | None = None,
+    snapshot_keep: int = 3,
     **kw,
 ) -> Tuple[SimState, StepOut | TelemetrySummary]:
     """Scan `n_steps` of the twin under a non-RL policy.
@@ -1181,19 +1192,40 @@ def run_episode(
     ``checkify``, raising on the first violating tick. Traced callers
     (e.g. ``run_fleet``'s inner jit) skip the per-step harness; the
     fleet runner re-checks final states eagerly instead.
+
+    Durability (``checkpoint.episode``): ``snapshot_every_s=T`` writes a
+    crash-atomic snapshot (SimState + raw telemetry accumulator + run
+    fingerprint) every ~T simulated seconds to ``snapshot_dir``;
+    ``resume_from=dir`` resumes from the newest snapshot there —
+    bit-identical to the uninterrupted run (fingerprint mismatch raises
+    ``CheckpointError``). Requires an episode-wide summary
+    (``summary_only=True`` or ``macro=True`` with ``telemetry_every<=1``)
+    and an eager (un-jitted) call; with snapshotting off this path adds
+    literally nothing to the traced step.
     """
     from repro.utils import invariants
+    from repro.utils.errors import ConfigError
 
     if summary_only and telemetry_every > 1:
-        raise ValueError(
+        raise ConfigError(
             "summary_only=True is episode-wide; it conflicts with "
             f"telemetry_every={telemetry_every} (pick one)"
         )
     if telemetry_every > 1 and n_steps % telemetry_every:
-        raise ValueError(
+        raise ConfigError(
             f"n_steps={n_steps} not divisible by "
             f"telemetry_every={telemetry_every}"
         )
+    if snapshot_every_s is not None or resume_from is not None \
+            or snapshot_dir is not None:
+        from repro.checkpoint.episode import run_episode_snapshotted
+
+        return run_episode_snapshotted(
+            cfg, statics, state, n_steps, scheduler,
+            telemetry_every=telemetry_every, summary_only=summary_only,
+            macro=macro, snapshot_every_s=snapshot_every_s,
+            snapshot_dir=snapshot_dir, resume_from=resume_from,
+            snapshot_keep=snapshot_keep, kw=kw)
     check_on = invariants.enabled() and not isinstance(
         state.t, jax.core.Tracer)
 
@@ -1279,6 +1311,94 @@ def run_episode(
         err.throw()
         return out
     return go(state)
+
+
+def run_segment(
+    cfg: SimConfig,
+    statics: Statics,
+    state: SimState,
+    acc: TelemetrySummary,
+    n_ticks: int,
+    scheduler: str | Policy = "fcfs",
+    *,
+    macro: bool = False,
+    **kw,
+) -> Tuple[SimState, TelemetrySummary]:
+    """Advance ``n_ticks`` carrying a RAW ``TelemetrySummary`` accumulator.
+
+    This is ``run_episode(summary_only=True)`` (or ``macro=True``) cut at
+    an arbitrary tick boundary: the scan/while bodies are the exact same
+    compiled programs, but the accumulator enters un-zeroed and leaves
+    un-finalized, so a sequence of segments threaded through
+    ``(state, acc)`` reproduces the single-call episode bit-for-bit —
+    the host-level primitive snapshot/resume (checkpoint.episode) is
+    built on. Seed ``acc`` with ``_telem_zero(cfg.resilience_on,
+    cfg.serving_on)`` and apply ``_telem_finalize`` once after the last
+    segment. Segment edges clamp the macro fast-forward exactly like
+    ``telemetry_every`` window edges, so job/queue state and the PRNG
+    stream stay bit-identical to the uninterrupted run (the skip-
+    accounting diagnostics ``n_steps``/``macro_steps`` count the forced
+    boundary breakpoints, same as windowed telemetry).
+
+    The ``REPRO_CHECKIFY=1`` invariant harness instruments eager calls
+    per committed step, exactly as in ``run_episode``.
+    """
+    from repro.utils import invariants
+
+    check_on = invariants.enabled() and not isinstance(
+        state.t, jax.core.Tracer)
+
+    if macro:
+        mstep = make_macro_step(cfg, statics, scheduler, **kw)
+        if check_on:
+            raw_mstep = mstep
+
+            def mstep(s, a, n):
+                s, a, took = raw_mstep(s, a, n)
+                invariants.check_state(cfg, statics, s)
+                return s, a, took
+
+        def go(state, acc):
+            def wcond(c):
+                return c[2] < n_ticks
+
+            def wbody(c):
+                s, a, ticks = c
+                s, a, took = mstep(s, a, n_ticks - ticks)
+                return (s, a, ticks + took)
+
+            s, a, _ = jax.lax.while_loop(
+                wcond, wbody, (state, acc, jnp.int32(0)))
+            return s, a
+    else:
+        step = make_step(cfg, statics, scheduler, **kw)
+        if check_on:
+            raw_step = step
+
+            def step(s, a):
+                s, out = raw_step(s, a)
+                invariants.check_state(cfg, statics, s)
+                return s, out
+
+        def accum_body(carry, _):
+            s, acc = carry
+            s, out = step(s, jnp.int32(-1))
+            return (s, _telem_update(
+                acc, out, resilience_on=cfg.resilience_on,
+                serving_on=cfg.serving_on)), None
+
+        def go(state, acc):
+            (fs, acc), _ = jax.lax.scan(
+                accum_body, (state, acc), None, length=n_ticks)
+            return fs, acc
+
+    if check_on:
+        from jax.experimental import checkify
+
+        err, out = checkify.checkify(go)(state, acc)
+        err.throw()
+        return out
+    return go(state, acc)
 
 
 def summary_columns(state: SimState,

@@ -276,13 +276,29 @@ def init_state(cfg: SimConfig, statics: Statics, key: jax.Array) -> SimState:
     )
 
 
-def load_jobs(state: SimState, jobs: Dict[str, np.ndarray]) -> SimState:
+def load_jobs(state: SimState, jobs: Dict[str, np.ndarray],
+              *, validate: str = "strict") -> SimState:
     """Install a workload (from the trace loader or synthesizer) into the
     job table. ``jobs`` fields: submit_t, dur, n_nodes, req (NRES, J'),
     priority, optionally ``part`` (int32 node-type index per job;
     -1 = any — the tag the ``partition`` placement enforces), and
     optionally ``ckpt_interval`` (per-job checkpoint period [s] overriding
-    ``cfg.ckpt_interval_s``; <=0 = no checkpoints); J' <= max_jobs."""
+    ``cfg.ckpt_interval_s``; <=0 = no checkpoints); J' <= max_jobs.
+
+    The jobs dict is validated (``data.validate.validate_jobs``) before
+    touching the table: a NaN duration or negative request would
+    otherwise corrupt every downstream accumulator silently. ``validate``
+    is ``"strict"`` (default; raises ``TraceValidationError`` naming the
+    offending job indices), ``"repair"`` (drops bad jobs), or ``"off"``.
+    Traced inputs (e.g. a jobs dict built inside jit) skip validation —
+    host-level checks cannot see tracer values.
+    """
+    traced = any(
+        isinstance(v, jax.core.Tracer) for v in jax.tree.leaves(jobs))
+    if validate != "off" and not traced:
+        from repro.data.validate import validate_jobs
+
+        jobs, _ = validate_jobs(jobs, mode=validate)
     J = state.jstate.shape[0]
     n = len(jobs["submit_t"])
     assert n <= J, f"workload has {n} jobs > max_jobs {J}"

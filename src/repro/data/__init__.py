@@ -7,3 +7,9 @@ from repro.data.bank import stack_workloads
 from repro.data.synth_trace import synth_workload
 from repro.data.trace_io import load_supercloud, write_supercloud_csvs
 from repro.data.synth_lm import lm_batches, lm_batch_at
+from repro.data.validate import (
+    IngestionReport,
+    validate_jobs,
+    validate_sched_rows,
+    validate_signal_samples,
+)

@@ -24,9 +24,18 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.data.validate import validate_signal_samples
 from repro.scenarios.signals import Signal, from_trace
 
 SIGNAL_COLS = ["timestamp_s", "value"]
+
+
+def _parses(x) -> bool:
+    try:
+        float(x)
+        return True
+    except (TypeError, ValueError):
+        return False
 
 
 def write_signal_csv(path: str, values: np.ndarray, dt: float,
@@ -42,25 +51,44 @@ def write_signal_csv(path: str, values: np.ndarray, dt: float,
     return path
 
 
-def load_signal_csv(path: str) -> Signal:
+def load_signal_csv(path: str, *, validate: str = "strict",
+                    return_report: bool = False):
     """Parse a ``timestamp_s,value`` CSV into a trace Signal.
 
     Timestamps must be uniformly spaced (tolerance 1e-3 of the step);
-    resample upstream if your feed is irregular.
+    resample upstream if your feed is irregular. Validation is LOUD by
+    default: non-finite values, non-monotone or non-uniform timestamps,
+    and too-short feeds raise a typed
+    :class:`~repro.utils.errors.SignalValidationError` naming the
+    offending rows — a NaN in a carbon/price feed would otherwise
+    propagate silently through ``jnp.interp`` into every accumulator.
+    ``validate="repair"`` interpolates non-finite values over the uniform
+    grid instead; ``return_report=True`` appends the
+    :class:`~repro.data.validate.IngestionReport`.
     """
     ts, vs = [], []
     with open(path) as f:
-        for row in csv.DictReader(f):
-            ts.append(float(row["timestamp_s"]))
-            vs.append(float(row["value"]))
-    if len(ts) < 2:
-        raise ValueError(f"{path}: need >= 2 samples, got {len(ts)}")
-    t = np.asarray(ts, np.float64)
-    dts = np.diff(t)
-    dt = float(np.median(dts))
-    if dt <= 0 or np.any(np.abs(dts - dt) > 1e-3 * max(dt, 1.0)):
-        raise ValueError(f"{path}: timestamps not uniformly spaced")
-    return from_trace(np.asarray(vs, np.float32), dt, t0=float(t[0]))
+        for i, row in enumerate(csv.DictReader(f)):
+            try:
+                ts.append(float(row["timestamp_s"]))
+                vs.append(float(row["value"]))
+            except (KeyError, TypeError, ValueError):
+                # unparseable cells become NaN so the validator's repair
+                # path (interpolate) / strict path (raise with row index)
+                # both see them; a bad timestamp is structural -> raise
+                if _parses(row.get("timestamp_s")):
+                    ts.append(float(row["timestamp_s"]))
+                    vs.append(float("nan"))
+                else:
+                    from repro.utils.errors import SignalValidationError
+                    raise SignalValidationError(
+                        f"{path}: unparseable timestamp_s="
+                        f"{row.get('timestamp_s')!r} at row {i}") from None
+    t, v, rep = validate_signal_samples(
+        ts, vs, mode=validate, source=path)
+    dt = float(np.median(np.diff(t))) if len(t) >= 2 else 1.0
+    sig = from_trace(v, dt, t0=float(t[0]))
+    return (sig, rep) if return_report else sig
 
 
 def synth_grid_trace(

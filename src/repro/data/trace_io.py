@@ -22,6 +22,12 @@ from typing import Dict, Tuple
 import numpy as np
 
 from repro.configs.sim import SimConfig, partition_type_indices
+from repro.data.validate import (
+    IngestionReport,
+    check_telemetry_row,
+    validate_sched_rows,
+)
+from repro.utils.errors import TraceValidationError
 
 SCHED_COLS = [
     "job_id", "time_submit", "time_start", "time_end", "nodes_alloc",
@@ -101,20 +107,38 @@ def write_supercloud_csvs(
 
 
 def load_supercloud(
-    path: str, cfg: SimConfig
-) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    path: str,
+    cfg: SimConfig,
+    *,
+    validate: str = "repair",
+    return_report: bool = False,
+):
     """Parse SuperCloud-schema CSVs -> (jobs dict, trace bank).
 
     Telemetry is averaged onto ``cfg.trace_quanta`` bands (RAPS trace
     quanta); jobs without telemetry fall back to a constant 70% profile.
+
+    ``validate`` (see :mod:`repro.data.validate`): ``"repair"`` (default)
+    quarantines corrupt rows and keeps going; ``"strict"`` raises
+    :class:`~repro.utils.errors.TraceValidationError` /
+    ``SignalValidationError`` naming the offending rows; ``"off"`` trusts
+    the input. With ``return_report=True`` the return value grows a third
+    element: ``{"scheduler": IngestionReport, "cpu_telemetry": ...,
+    "gpu_telemetry": ...}`` accounting for every dropped row.
     """
     sched_file = os.path.join(path, "scheduler-log.csv")
     rows = []
     with open(sched_file) as f:
         for row in csv.DictReader(f):
             rows.append(row)
+    rows, sched_rep = validate_sched_rows(
+        rows, cfg, mode=validate, source=sched_file)
     J = len(rows)
     if J > cfg.max_jobs:
+        sched_rep.warnings.append({
+            "row": cfg.max_jobs, "check": "truncated",
+            "detail": f"{J - cfg.max_jobs} valid job(s) beyond "
+                      f"cfg.max_jobs={cfg.max_jobs} dropped"})
         rows = rows[: cfg.max_jobs]
         J = cfg.max_jobs
 
@@ -137,22 +161,42 @@ def load_supercloud(
     cpu_n = np.zeros((Jmax, Q), np.float32)
     gpu_n = np.zeros((Jmax, Q), np.float32)
 
-    def accumulate(fname, util_col, target, counts, scale):
+    def accumulate(fname, util_col, target, counts, scale, hi):
         fpath = os.path.join(path, fname)
+        rep = IngestionReport(source=fpath, kind="telemetry", mode=validate)
         if not os.path.exists(fpath):
-            return
+            return rep
         with open(fpath) as f:
-            for row in csv.DictReader(f):
-                jid = int(row["job_id"])
+            for i, row in enumerate(csv.DictReader(f)):
+                rep.n_input += 1
+                if validate == "off":
+                    parsed = (int(row["job_id"]), float(row["timestamp"]),
+                              float(row[util_col]))
+                else:
+                    parsed = check_telemetry_row(
+                        row, util_col=util_col, lo=0.0, hi=hi,
+                        rownum=i, report=rep)
+                    if parsed is None:
+                        continue
+                jid, t, u = parsed
+                rep.n_ok += 1
                 if jid not in job_ids:
+                    # jobs beyond max_jobs / quarantined jobs: skippable,
+                    # counted (not corrupt — the job just isn't loaded)
+                    rep.n_skipped_unknown_id += 1
                     continue
                 j = job_ids[jid]
-                q = min(int(float(row["timestamp"]) / cfg.trace_quanta), Q - 1)
-                target[j, q] += float(row[util_col]) * scale
+                q = min(int(t / cfg.trace_quanta), Q - 1)
+                target[j, q] += u * scale
                 counts[j, q] += 1.0
+        if validate == "strict":
+            rep.raise_if_dirty(TraceValidationError)
+        return rep
 
-    accumulate("cpu-telemetry.csv", "cpu_util", cpu, cpu_n, 1.0)
-    accumulate("gpu-telemetry.csv", "util_pct", gpu, gpu_n, 0.01)
+    cpu_rep = accumulate("cpu-telemetry.csv", "cpu_util", cpu, cpu_n,
+                         1.0, 1.0)
+    gpu_rep = accumulate("gpu-telemetry.csv", "util_pct", gpu, gpu_n,
+                         0.01, 100.0)
     cpu = np.where(cpu_n > 0, cpu / np.maximum(cpu_n, 1), 0.0)
     gpu = np.where(gpu_n > 0, gpu / np.maximum(gpu_n, 1), 0.0)
     # fill forward within each job's duration; default 0.7 when absent
@@ -182,4 +226,8 @@ def load_supercloud(
         "part": part,
     }
     bank = {"cpu": cpu, "gpu": gpu, "net_tx": np.zeros((Jmax,), np.float32)}
+    if return_report:
+        report = {"scheduler": sched_rep, "cpu_telemetry": cpu_rep,
+                  "gpu_telemetry": gpu_rep}
+        return jobs, bank, report
     return jobs, bank

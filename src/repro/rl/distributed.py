@@ -43,8 +43,9 @@ from repro.optim.base import clip_by_global_norm
 from repro.optim.compress import compressed_psum
 from repro.rl.gae import gae
 from repro.rl.policy import ActorCritic
-from repro.rl.ppo import PPOConfig, make_rollout, ppo_loss
+from repro.rl.ppo import PPOConfig, _train_fingerprint, make_rollout, ppo_loss
 from repro.sharding.specs import pcast_varying, shard_map_compat
+from repro.utils.errors import ConfigError
 
 
 def make_distributed_grad_step(
@@ -57,7 +58,7 @@ def make_distributed_grad_step(
     ``ppo_train`` stat set (pmean'd across shards) plus the total loss."""
     n_shards = mesh.shape[axis]
     if cfg.n_envs % n_shards:
-        raise ValueError(
+        raise ConfigError(
             f"{cfg.n_envs} envs do not divide across {n_shards} {axis!r}"
             "-axis devices — pick n_envs as a multiple of the mesh size")
     local_cfg = PPOConfig(**{**cfg.__dict__, "n_envs": cfg.n_envs // n_shards})
@@ -118,13 +119,24 @@ def distributed_ppo_train(
     seed: int = 0, compress: bool = True, axis: Optional[str] = None,
     log: Optional[Callable[[int, Dict[str, float]], None]] = None,
     sync_every: Optional[int] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 10,
+    resume: bool = False,
 ) -> Tuple[Any, list]:
     """End-to-end distributed PPO (used on multi-host topologies; exercised
     on fake devices in tests). Returns (params, history) with the same
     history interface as ``ppo_train``: one dict of per-iteration floats
     per iteration, drained chunk-wise (``sync_every`` iterations per
     compiled program, one ``device_get`` per chunk). ``axis`` defaults to
-    the mesh's first axis name, so a ``make_fleet_mesh()`` works as-is."""
+    the mesh's first axis name, so a ``make_fleet_mesh()`` works as-is.
+
+    Checkpoints mirror ``ppo_train``: full training state (params,
+    optimizer, env fleet, per-shard error-feedback accumulators, PRNG
+    key) plus a run fingerprint, so ``resume=True`` continues
+    bit-identically on the same mesh size. The mesh itself is not
+    fingerprinted, but the error-feedback leaves carry the shard count
+    in their shapes, so resuming on a different mesh fails with a loud
+    typed ``CheckpointError`` rather than silently rescaling."""
     if axis is None:
         axis = mesh.axis_names[0]
     policy = ActorCritic(env.obs_dim, env.n_actions)
@@ -157,15 +169,44 @@ def distributed_ppo_train(
 
     chunk_jit = jax.jit(chunk)
 
+    start_iter = 0
+    fingerprint = dict(
+        _train_fingerprint(env, cfg, seed, (), n_iterations),
+        kind="ppo-dist", compress=bool(compress))
+    if checkpoint_dir and resume:
+        from repro.checkpoint import latest_step, restore
+        from repro.checkpoint.ckpt import read_meta
+        from repro.checkpoint.episode import check_fingerprint
+
+        step0 = latest_step(checkpoint_dir)
+        if step0 is not None:
+            meta = read_meta(checkpoint_dir, step0)
+            saved_fp = meta.get("extra", {}).get("fingerprint")
+            if saved_fp is not None:
+                check_fingerprint(saved_fp, fingerprint, checkpoint_dir)
+            payload = restore(
+                checkpoint_dir, step0,
+                {"params": params, "opt": opt_state,
+                 "env_states": env_states, "error": error, "key": key})
+            params, opt_state = payload["params"], payload["opt"]
+            env_states, error = payload["env_states"], payload["error"]
+            key = payload["key"]
+            start_iter = step0 + 1
+
     if sync_every is None:
-        sync_every = min(n_iterations, 8)
+        sync_every = min(checkpoint_every if checkpoint_dir else n_iterations,
+                         8)
     sync_every = max(1, sync_every)
 
     history = []
     carry = (params, opt_state, env_states, error, key)
-    it = 0
+    it = start_iter
     while it < n_iterations:
         n = min(sync_every, n_iterations - it)
+        if checkpoint_dir:
+            # cut at checkpoint boundaries so saves land at the same
+            # iterations the unfused loop produced
+            n = min(n, ((it // checkpoint_every) + 1) * checkpoint_every - it)
         steps = jnp.arange(it, it + n, dtype=jnp.int32)
         carry, stats = chunk_jit(carry, steps)
         host = jax.device_get(stats)              # ONE sync per chunk
@@ -175,4 +216,13 @@ def distributed_ppo_train(
             if log:
                 log(it + i, s)
         it += n
+        if checkpoint_dir and it % checkpoint_every == 0:
+            from repro.checkpoint import save
+
+            params, opt_state, env_states, error, key = carry
+            save(checkpoint_dir, it - 1,
+                 {"params": params, "opt": opt_state,
+                  "env_states": env_states, "error": error, "key": key},
+                 extra_meta={"iteration": it - 1,
+                             "fingerprint": fingerprint})
     return carry[0], history

@@ -224,7 +224,14 @@ def ppo_train(
     iterations the unfused loop produced. Each distinct chunk length is
     one compilation: 2 in the common case (full + remainder); when
     ``sync_every`` does not divide ``checkpoint_every`` the
-    checkpoint-boundary cuts can add a couple more."""
+    checkpoint-boundary cuts can add a couple more.
+
+    Checkpoints cover the FULL training state — params, optimizer, the
+    vectorized env fleet states, episode accumulators and the PRNG key —
+    plus a run fingerprint, so ``resume=True`` continues bit-identically
+    to the uninterrupted run (a fingerprint mismatch raises a typed
+    ``CheckpointError``; legacy params-only checkpoints resume warm with
+    fresh envs)."""
     policy = ActorCritic(env.obs_dim, env.n_actions, hidden)
     iteration, opt = make_train_iteration(env, policy, cfg)
 
@@ -253,14 +260,35 @@ def ppo_train(
     ep = {"ret": z, "len": zi, "fin_ret": z, "fin_len": zi}
     start_iter = 0
 
+    fingerprint = _train_fingerprint(env, cfg, seed, hidden, n_iterations)
+
     if checkpoint_dir and resume:
         from repro.checkpoint import latest_step, restore
+        from repro.checkpoint.ckpt import read_meta
+        from repro.checkpoint.episode import check_fingerprint
 
         step0 = latest_step(checkpoint_dir)
         if step0 is not None:
-            payload = restore(checkpoint_dir, step0,
-                              {"params": params, "opt": opt_state})
-            params, opt_state = payload["params"], payload["opt"]
+            meta = read_meta(checkpoint_dir, step0)
+            saved_fp = meta.get("extra", {}).get("fingerprint")
+            if saved_fp is not None:
+                check_fingerprint(saved_fp, fingerprint, checkpoint_dir)
+            full = any(k.startswith("env_states")
+                       for k in meta.get("leaves", {}))
+            if full:
+                payload = restore(
+                    checkpoint_dir, step0,
+                    {"params": params, "opt": opt_state,
+                     "env_states": env_states, "ep": ep, "key": key})
+                params, opt_state = payload["params"], payload["opt"]
+                env_states, ep = payload["env_states"], payload["ep"]
+                key = payload["key"]
+            else:
+                # legacy params-only checkpoint: warm resume (fresh envs/
+                # key — learning continues but is not bit-exact)
+                payload = restore(checkpoint_dir, step0,
+                                  {"params": params, "opt": opt_state})
+                params, opt_state = payload["params"], payload["opt"]
             start_iter = step0 + 1
 
     if sync_every is None:
@@ -293,5 +321,30 @@ def ppo_train(
         if checkpoint_dir and it % checkpoint_every == 0:
             from repro.checkpoint import save
 
-            save(checkpoint_dir, it - 1, {"params": params, "opt": opt_state})
+            save(checkpoint_dir, it - 1,
+                 {"params": params, "opt": opt_state,
+                  "env_states": env_states, "ep": ep, "key": key},
+                 extra_meta={"iteration": it - 1,
+                             "fingerprint": fingerprint})
     return params, history
+
+
+def _train_fingerprint(env, cfg: PPOConfig, seed, hidden,
+                       n_iterations) -> Dict[str, Any]:
+    """Launch-argument fingerprint stored in PPO checkpoint manifests.
+
+    ``n_iterations`` is deliberately excluded: extending a finished run
+    ("train 50 more iterations from the latest checkpoint") is a
+    legitimate resume, while a different env/config/seed is not.
+    """
+    import hashlib
+
+    dig = lambda s: hashlib.sha256(s.encode()).hexdigest()[:16]
+    return {
+        "kind": "ppo",
+        "ppo_cfg": dig(repr(cfg)),
+        "seed": int(seed),
+        "hidden": list(hidden),
+        "env": dig(f"{type(env).__name__}/{env.obs_dim}/{env.n_actions}/"
+                   f"{repr(getattr(env, 'cfg', None))}"),
+    }

@@ -1,2 +1,9 @@
+from repro.utils.errors import (
+    CheckpointError,
+    ConfigError,
+    ReproError,
+    SignalValidationError,
+    TraceValidationError,
+)
 from repro.utils.registry import Registry
 from repro.utils.tree import tree_bytes, tree_count, tree_map_with_path_names

@@ -1,0 +1,300 @@
+"""Crash-chaos harness: SIGKILL long runs at random points and prove
+resume is bit-identical.
+
+The durable-twin contract (docs/robustness.md) is that a replay or PPO
+run killed at ANY instant — including mid-checkpoint-write — resumes
+from the latest complete snapshot and finishes with the SAME bits as a
+run that was never interrupted. This module is the executable form of
+that claim:
+
+- ``chaos_run`` launches a worker subprocess, SIGKILLs it after a
+  randomized delay, relaunches with resume enabled, and repeats until a
+  launch survives to completion. Delays are drawn from a seeded RNG so
+  failures replay exactly.
+- Worker roles (``python -m repro.utils.chaos replay|ppo``) run a
+  snapshotted replay episode / checkpointed PPO training and write
+  their final stats as JSON — full ``repr`` floats plus tree digests,
+  so comparison is bitwise, not approximate.
+- ``python -m repro.utils.chaos smoke`` is the self-contained CI entry:
+  reference run (uninterrupted) -> chaos-killed run -> assert equal.
+
+Set ``REPRO_CHAOS_SLOW_SAVE=<seconds>`` to stretch the window between a
+checkpoint's tmp-dir write and its atomic rename; with kills landing in
+that window the harness also proves torn writes are invisible
+(``ckpt.latest_step`` sweeps stale ``*.tmp`` dirs, resume sees only
+complete snapshots).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import random
+import signal
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class ChaosResult:
+    """Outcome of one ``chaos_run`` kill-loop."""
+
+    n_kills: int
+    attempts: List[Dict[str, object]] = field(default_factory=list)
+    stats_path: Optional[str] = None
+
+    def stats(self) -> Dict[str, object]:
+        with open(self.stats_path) as f:
+            return json.load(f)
+
+
+def chaos_run(
+    cmd: Sequence[str],
+    *,
+    kills: int = 3,
+    min_delay_s: float = 0.5,
+    max_delay_s: float = 6.0,
+    seed: int = 0,
+    env: Optional[Dict[str, str]] = None,
+    timeout_s: float = 600.0,
+    stats_path: Optional[str] = None,
+) -> ChaosResult:
+    """Run ``cmd`` under the kill-loop.
+
+    The first ``kills`` launches are SIGKILLed after a seeded-random
+    delay in ``[min_delay_s, max_delay_s]`` (a launch that finishes
+    before its kill timer simply counts as done early); after the kill
+    budget is spent the final launch runs to completion.  ``cmd`` must
+    be idempotent-with-resume: each relaunch picks up from whatever
+    snapshots the previous one left behind.  Raises ``RuntimeError`` if
+    the surviving launch exits non-zero or overruns ``timeout_s``.
+    """
+    rng = random.Random(seed)
+    run_env = dict(os.environ)
+    if env:
+        run_env.update(env)
+    result = ChaosResult(n_kills=0, stats_path=stats_path)
+    attempt = 0
+    while True:
+        is_final = result.n_kills >= kills
+        delay = None if is_final else rng.uniform(min_delay_s, max_delay_s)
+        t0 = time.monotonic()
+        proc = subprocess.Popen(
+            list(cmd), env=run_env,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+        try:
+            out, _ = proc.communicate(
+                timeout=delay if delay is not None else timeout_s)
+            rc = proc.returncode
+            killed = False
+        except subprocess.TimeoutExpired:
+            if is_final:
+                proc.kill()
+                proc.communicate()
+                raise RuntimeError(
+                    f"chaos worker overran {timeout_s}s on the final "
+                    f"(uninterrupted) launch: {' '.join(cmd)}")
+            proc.send_signal(signal.SIGKILL)
+            out, _ = proc.communicate()
+            rc = proc.returncode
+            killed = True
+            result.n_kills += 1
+        result.attempts.append({
+            "attempt": attempt, "killed": killed, "returncode": rc,
+            "delay_s": delay, "wall_s": round(time.monotonic() - t0, 3)})
+        attempt += 1
+        if not killed:
+            if rc != 0:
+                tail = out.decode(errors="replace")[-2000:]
+                raise RuntimeError(
+                    f"chaos worker exited {rc}:\n{tail}")
+            return result
+
+
+def tree_digest_hex(tree) -> str:
+    """Order-stable sha256 over every leaf's name, dtype, shape and raw
+    bytes (typed PRNG keys via their key data) — the bit-identity token
+    the workers write into their stats JSON."""
+    import jax
+    import numpy as np
+
+    from repro.utils.tree import tree_map_with_path_names
+
+    h = hashlib.sha256()
+
+    def leaf(name, x):
+        if x is None:
+            h.update(f"{name}:none".encode())
+            return x
+        if jax.dtypes.issubdtype(
+                getattr(x, "dtype", None) or np.float32,
+                jax.dtypes.prng_key):
+            x = jax.random.key_data(x)
+        a = np.asarray(jax.device_get(x))
+        h.update(f"{name}:{a.dtype}:{a.shape}".encode())
+        h.update(a.tobytes())
+        return x
+
+    tree_map_with_path_names(leaf, tree)
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# worker roles (subprocess entry points)
+# ---------------------------------------------------------------------------
+
+
+def _replay_worker(args) -> None:
+    import jax
+
+    from repro.configs.sim import tiny_cluster
+    from repro.core import (build_statics, init_state, load_jobs,
+                            run_episode, summary)
+    from repro.data import synth_workload
+
+    cfg = tiny_cluster(node_mtbf_hours=0.3, serving_enabled=True,
+                       serving_nodes=4)
+    jobs, bank = synth_workload(cfg, 32, 1200.0, seed=args.seed)
+    statics = build_statics(cfg, bank)
+    state = load_jobs(init_state(cfg, statics, jax.random.key(args.seed)),
+                      jobs)
+    snap = None if args.snapshot_every_s <= 0 else args.snapshot_every_s
+    fs, telem = run_episode(
+        cfg, statics, state, args.n_steps, "fcfs", macro=True,
+        snapshot_every_s=snap,
+        resume_from=args.dir if args.dir else None,
+        snapshot_dir=args.dir if args.dir else None,
+        snapshot_keep=args.keep)
+    stats = {
+        "role": "replay",
+        "state_digest": tree_digest_hex(fs),
+        "telem_digest": tree_digest_hex(telem),
+        "summary": {k: repr(float(v)) for k, v in summary(fs).items()},
+    }
+    with open(args.out, "w") as f:
+        json.dump(stats, f, indent=1)
+
+
+def _ppo_worker(args) -> None:
+    from repro.configs.sim import tiny_cluster
+    from repro.data import synth_workload
+    from repro.envs import SchedEnv
+    from repro.rl import PPOConfig, ppo_train
+
+    cfg = tiny_cluster(sched_max_candidates=4)
+    wls = [synth_workload(cfg, 24, 900.0, seed=s) for s in range(2)]
+    env = SchedEnv(cfg, wls, episode_steps=8, sim_steps_per_action=5)
+    pcfg = PPOConfig(n_envs=4, rollout_len=8, n_epochs=2, n_minibatches=2)
+    params, hist = ppo_train(
+        env, cfg=pcfg, n_iterations=args.iters, seed=args.seed,
+        checkpoint_dir=args.dir, checkpoint_every=args.ckpt_every,
+        resume=bool(args.dir))
+    stats = {
+        "role": "ppo",
+        "params_digest": tree_digest_hex(params),
+        "history_tail": {k: repr(v) for k, v in (hist[-1] if hist else
+                                                 {}).items()},
+    }
+    with open(args.out, "w") as f:
+        json.dump(stats, f, indent=1)
+
+
+def _worker_cmd(role: str, workdir: str, out: str, *,
+                seed: int = 0, n_steps: int = 400,
+                snapshot_every_s: float = 60.0, iters: int = 6,
+                ckpt_every: int = 2) -> List[str]:
+    cmd = [sys.executable, "-m", "repro.utils.chaos", role,
+           "--dir", workdir, "--out", out, "--seed", str(seed)]
+    if role == "replay":
+        cmd += ["--n-steps", str(n_steps),
+                "--snapshot-every-s", str(snapshot_every_s)]
+    else:
+        cmd += ["--iters", str(iters), "--ckpt-every", str(ckpt_every)]
+    return cmd
+
+
+def chaos_smoke(role: str, tmpdir: str, *, kills: int = 2, seed: int = 0,
+                slow_save_s: float = 0.0, **worker_kw) -> Dict[str, object]:
+    """Reference (uninterrupted) run vs chaos-killed run; raises
+    ``AssertionError`` on any stats mismatch. Returns the chaos stats."""
+    ref_dir = os.path.join(tmpdir, f"{role}_ref")
+    ref_out = os.path.join(tmpdir, f"{role}_ref.json")
+    chaos_dir = os.path.join(tmpdir, f"{role}_chaos")
+    chaos_out = os.path.join(tmpdir, f"{role}_chaos.json")
+
+    ref = subprocess.run(
+        _worker_cmd(role, ref_dir, ref_out, seed=seed, **worker_kw),
+        capture_output=True)
+    if ref.returncode != 0:
+        raise RuntimeError("reference run failed:\n"
+                           + ref.stdout.decode(errors="replace")[-2000:]
+                           + ref.stderr.decode(errors="replace")[-2000:])
+    env = ({"REPRO_CHAOS_SLOW_SAVE": str(slow_save_s)}
+           if slow_save_s > 0 else None)
+    res = chaos_run(
+        _worker_cmd(role, chaos_dir, chaos_out, seed=seed, **worker_kw),
+        kills=kills, seed=seed, env=env, stats_path=chaos_out)
+    with open(ref_out) as f:
+        want = json.load(f)
+    got = res.stats()
+    if want != got:
+        diff = {k: (want.get(k), got.get(k))
+                for k in set(want) | set(got) if want.get(k) != got.get(k)}
+        raise AssertionError(
+            f"chaos {role}: killed+resumed stats differ from "
+            f"uninterrupted run after {res.n_kills} kill(s): {diff}")
+    return {"role": role, "n_kills": res.n_kills,
+            "attempts": res.attempts}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.utils.chaos",
+                                 description=__doc__.split("\n")[0])
+    sub = ap.add_subparsers(dest="role", required=True)
+
+    rp = sub.add_parser("replay", help="snapshotted replay worker")
+    rp.add_argument("--dir", required=True)
+    rp.add_argument("--out", required=True)
+    rp.add_argument("--seed", type=int, default=0)
+    rp.add_argument("--n-steps", type=int, default=400)
+    rp.add_argument("--snapshot-every-s", type=float, default=60.0)
+    rp.add_argument("--keep", type=int, default=3)
+
+    pp = sub.add_parser("ppo", help="checkpointed PPO worker")
+    pp.add_argument("--dir", required=True)
+    pp.add_argument("--out", required=True)
+    pp.add_argument("--seed", type=int, default=0)
+    pp.add_argument("--iters", type=int, default=6)
+    pp.add_argument("--ckpt-every", type=int, default=2)
+
+    sm = sub.add_parser("smoke", help="CI kill-loop: replay + ppo")
+    sm.add_argument("--tmpdir", default=None)
+    sm.add_argument("--kills", type=int, default=2)
+    sm.add_argument("--seed", type=int, default=0)
+    sm.add_argument("--slow-save-s", type=float, default=0.0)
+    sm.add_argument("--roles", default="replay,ppo")
+
+    args = ap.parse_args(argv)
+    if args.role == "replay":
+        _replay_worker(args)
+    elif args.role == "ppo":
+        _ppo_worker(args)
+    else:
+        import tempfile
+
+        tmpdir = args.tmpdir or tempfile.mkdtemp(prefix="repro_chaos_")
+        for role in args.roles.split(","):
+            out = chaos_smoke(role.strip(), tmpdir, kills=args.kills,
+                              seed=args.seed, slow_save_s=args.slow_save_s)
+            print(f"[chaos] {role}: OK after {out['n_kills']} kill(s); "
+                  f"attempts={len(out['attempts'])}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,26 @@
+import faulthandler
 import os
 import sys
+
+import pytest
 
 # Tests run on the single real CPU device (the 512-device override is ONLY
 # for the dry-run); keep any user XLA_FLAGS out of the test environment.
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Global per-test hang guard (CI sets REPRO_TEST_TIMEOUT; see ci.yml). A
+# test that exceeds the budget dumps every thread's traceback and kills
+# the process — a loud diagnosable failure instead of a 6-hour stuck job.
+# Implemented with faulthandler so it needs no pytest-timeout plugin.
+_TEST_TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "0") or 0)
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_protocol(item, nextitem):
+    if _TEST_TIMEOUT > 0:
+        faulthandler.dump_traceback_later(_TEST_TIMEOUT, exit=True)
+    yield
+    if _TEST_TIMEOUT > 0:
+        faulthandler.cancel_dump_traceback_later()

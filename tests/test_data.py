@@ -59,3 +59,150 @@ def test_lm_batches_deterministic_and_host_sharded():
     # labels are next-token shifted
     np.testing.assert_array_equal(np.asarray(a["tokens"][:, 1:]),
                                   np.asarray(a["labels"][:, :-1]))
+
+
+# ---------------------------------------------------------------------------
+# validated ingestion (durable-twin PR): corruption fuzz + repair accounting
+# ---------------------------------------------------------------------------
+
+import csv
+import os
+import random
+
+from _hypothesis_compat import given, settings, st
+
+
+def _corrupt_sched_csv(path, seed, n_corrupt):
+    """Corrupt n_corrupt random data rows in scheduler-log.csv; returns
+    the set of corrupted (0-based) row indices."""
+    fname = os.path.join(path, "scheduler-log.csv")
+    with open(fname) as f:
+        rows = list(csv.reader(f))
+    header, data = rows[0], rows[1:]
+    rng = random.Random(seed)
+    mutations = [
+        lambda r: r.__setitem__(1, "nan"),              # non_finite
+        lambda r: r.__setitem__(3, "-10"),              # end < start
+        lambda r: r.__setitem__(4, "0"),                # bad_node_count
+        lambda r: r.__setitem__(5, "-4"),               # negative_request
+        lambda r: r.__setitem__(0, data[0][0]),         # duplicate_job_id
+        lambda r: r.__setitem__(2, "forty"),            # unparseable
+    ]
+    idx = rng.sample(range(1, len(data)), min(n_corrupt, len(data) - 1))
+    for i in idx:
+        rng.choice(mutations)(data[i])
+    with open(fname, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(data)
+    return set(idx)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), n_corrupt=st.integers(1, 6))
+def test_repair_report_accounts_every_dropped_row(seed, n_corrupt,
+                                                  tmp_path_factory):
+    """Fuzz: corrupt random scheduler rows; repair mode must quarantine
+    EXACTLY the corrupted rows, the report must account every input row
+    (n_input == n_ok + n_quarantined), and strict mode must refuse the
+    same file with the report attached."""
+    from repro.data import write_supercloud_csvs
+    from repro.utils.errors import TraceValidationError
+
+    cfg = tiny_cluster()
+    tmp = tmp_path_factory.mktemp(f"fuzz_{seed}_{n_corrupt}")
+    path = write_supercloud_csvs(str(tmp), cfg, n_jobs=12, horizon_s=600.0,
+                                 seed=seed % 97)
+    corrupted = _corrupt_sched_csv(path, seed, n_corrupt)
+
+    jobs, bank, reports = load_supercloud(path, cfg, validate="repair",
+                                          return_report=True)
+    rep = reports["scheduler"]
+    assert rep.n_input == rep.n_ok + rep.n_quarantined
+    assert {q["row"] for q in rep.quarantined} == corrupted
+    assert len(jobs["submit_t"]) == 12 - len(corrupted)
+    # kept jobs still satisfy the schema the simulator needs
+    assert (jobs["dur"] > 0).all()
+    assert np.isfinite(jobs["submit_t"]).all()
+
+    with pytest.raises(TraceValidationError) as ei:
+        load_supercloud(path, cfg, validate="strict")
+    assert ei.value.report is not None
+    assert ei.value.report.n_quarantined == len(corrupted)
+
+
+def test_validate_off_skips_checks(tmp_path):
+    """validate='off' is the escape hatch for pre-cleaned traces: no
+    report rows, parse-only behavior (clean input loads identically)."""
+    cfg = tiny_cluster()
+    path = write_supercloud_csvs(str(tmp_path), cfg, n_jobs=8,
+                                 horizon_s=600.0, seed=3)
+    a, _ = load_supercloud(path, cfg, validate="off")
+    b, _ = load_supercloud(path, cfg, validate="repair")
+    np.testing.assert_array_equal(a["submit_t"], b["submit_t"])
+
+
+def test_jobs_dict_validation_drops_coherently():
+    """validate_jobs repair drops a bad job from EVERY column (req is
+    (NRES, J)-shaped, so a ragged drop would silently misalign jobs)."""
+    from repro.data import validate_jobs
+
+    jobs = {
+        "submit_t": np.array([0.0, 5.0, np.nan, 10.0]),
+        "dur": np.array([10.0, -3.0, 10.0, 10.0]),
+        "n_nodes": np.array([1, 1, 1, 2]),
+        "req": np.arange(12, dtype=np.float64).reshape(3, 4),
+        "priority": np.zeros(4),
+    }
+    out, rep = validate_jobs(jobs, mode="repair")
+    assert rep.n_quarantined == 2 and rep.n_ok == 2
+    assert out["req"].shape == (3, 2)
+    np.testing.assert_array_equal(out["submit_t"], [0.0, 10.0])
+    np.testing.assert_array_equal(out["req"][0], [0.0, 3.0])
+
+    from repro.utils.errors import TraceValidationError
+
+    with pytest.raises(TraceValidationError, match="non_finite"):
+        validate_jobs(jobs, mode="strict")
+
+
+def test_signal_nan_no_longer_propagates_silently(tmp_path):
+    """Regression: a NaN sample in a grid-signal CSV used to flow
+    straight into the carbon/price interpolation (every downstream
+    energy integral turned NaN). Strict mode now refuses the file;
+    repair interpolates over the gap and reports the repaired rows."""
+    from repro.data.grid_signals import load_signal_csv
+    from repro.utils.errors import SignalValidationError
+
+    fname = tmp_path / "carbon.csv"
+    with open(fname, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["timestamp_s", "value"])
+        for i, v in enumerate([100.0, 120.0, "nan", 160.0, 180.0]):
+            w.writerow([i * 900, v])
+
+    with pytest.raises(SignalValidationError, match="non_finite"):
+        load_signal_csv(str(fname), validate="strict")
+
+    sig, rep = load_signal_csv(str(fname), validate="repair",
+                               return_report=True)
+    assert rep.n_quarantined == 1
+    vals = np.asarray(sig.values)
+    assert np.isfinite(vals).all(), "repair must leave no NaN behind"
+    assert abs(float(vals[2]) - 140.0) < 1e-6  # linear gap fill
+
+
+def test_signal_structural_errors_raise_in_repair_mode(tmp_path):
+    """Non-monotone / non-uniform timestamps have no sound row-wise
+    repair — they raise a typed error in every mode, naming the row."""
+    from repro.data.grid_signals import load_signal_csv
+    from repro.utils.errors import SignalValidationError
+
+    fname = tmp_path / "price.csv"
+    with open(fname, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["timestamp_s", "value"])
+        for t, v in [(0, 1.0), (900, 2.0), (800, 3.0)]:
+            w.writerow([t, v])
+    with pytest.raises(SignalValidationError, match="increasing"):
+        load_signal_csv(str(fname), validate="repair")

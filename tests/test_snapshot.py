@@ -1,0 +1,235 @@
+"""Durable-twin contract: snapshotted runs match vanilla bit-for-bit,
+kill-at-any-snapshot + resume matches the uninterrupted run, and
+mismatched resumes fail loudly with typed errors."""
+
+import math
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.sim import tiny_cluster
+from repro.core import (
+    build_statics,
+    init_state,
+    load_jobs,
+    run_episode,
+    summary,
+)
+from repro.core.fleet import run_fleet
+from repro.scenarios.scenario import stack_scenarios
+from repro.data import synth_workload
+from repro.utils.errors import CheckpointError, ConfigError
+
+N_STEPS = 400
+
+_VARIANTS = {
+    "base": {},
+    "thermal": {"thermal_enabled": True},
+    "faults+serving": {"node_mtbf_hours": 0.3, "serving_enabled": True,
+                       "serving_nodes": 4},
+}
+_cache = {}
+
+
+def _setup(variant):
+    if variant not in _cache:
+        cfg = tiny_cluster(**_VARIANTS[variant])
+        jobs, bank = synth_workload(cfg, 32, 1200.0, seed=0)
+        statics = build_statics(cfg, bank)
+        _cache[variant] = (cfg, statics, jobs)
+    cfg, statics, jobs = _cache[variant]
+    state = load_jobs(init_state(cfg, statics, jax.random.key(0)), jobs)
+    return cfg, statics, state
+
+
+_ref_cache = {}
+
+
+def _reference(variant, macro):
+    """Uninterrupted snapshotless run (memoized per variant)."""
+    if (variant, macro) not in _ref_cache:
+        cfg, statics, state = _setup(variant)
+        _ref_cache[variant, macro] = run_episode(
+            cfg, statics, state, N_STEPS, "fcfs", macro=macro,
+            summary_only=not macro)
+    return _ref_cache[variant, macro]
+
+
+def _assert_tree_equal(a, b, what, allow=()):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb), f"{what}: leaf count {len(fa)} vs {len(fb)}"
+    for (pa, x), (_, y) in zip(fa, fb):
+        name = jax.tree_util.keystr(pa)
+        if jax.dtypes.issubdtype(getattr(x, "dtype", np.dtype(np.float32)),
+                                 jax.dtypes.prng_key):
+            x, y = jax.random.key_data(x), jax.random.key_data(y)
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            if any(tok in name for tok in allow):
+                continue
+            raise AssertionError(f"{what}: leaf {name} differs")
+
+
+def _kill_after_first_snapshot(snapshot_dir):
+    snaps = sorted(os.listdir(snapshot_dir))
+    assert len(snaps) > 1, "need >1 snapshot to simulate a mid-run kill"
+    for s in snaps[1:]:
+        shutil.rmtree(os.path.join(snapshot_dir, s))
+
+
+def test_per_tick_snapshotting_is_invisible(tmp_path):
+    """summary_only + per-tick stepping: snapshotted == vanilla, bitwise
+    (state, telemetry and the summary dict)."""
+    cfg, statics, state = _setup("base")
+    fs0, t0 = _reference("base", macro=False)
+    fs1, t1 = run_episode(cfg, statics, state, N_STEPS, "fcfs",
+                          summary_only=True, snapshot_every_s=120.0,
+                          snapshot_dir=str(tmp_path))
+    _assert_tree_equal(fs0, fs1, "SimState")
+    _assert_tree_equal(t0, t1, "TelemetrySummary")
+    assert summary(fs0) == summary(fs1)
+
+
+def test_macro_snapshotting_state_bitwise(tmp_path):
+    """Macro engine: snapshot boundaries clamp fast-forward exactly like
+    telemetry windows, so the SimState stays bitwise; only the
+    macro_steps skip accounting may differ."""
+    cfg, statics, state = _setup("base")
+    fs0, t0 = _reference("base", macro=True)
+    fs1, t1 = run_episode(cfg, statics, state, N_STEPS, "fcfs", macro=True,
+                          snapshot_every_s=150.0, snapshot_dir=str(tmp_path))
+    _assert_tree_equal(fs0, fs1, "SimState")
+    _assert_tree_equal(t0, t1, "TelemetrySummary", allow=("macro_steps",))
+    assert summary(fs0) == summary(fs1)
+
+
+@settings(max_examples=6, deadline=None)
+@given(variant=st.sampled_from(sorted(_VARIANTS)), macro=st.booleans())
+def test_kill_and_resume_is_bit_identical(variant, macro, tmp_path_factory):
+    """The acceptance pin: kill after any snapshot, resume from latest,
+    final SimState (incl. PRNG key data), TelemetrySummary and summary()
+    dict are bit-identical to the uninterrupted snapshotted run — across
+    the thermal x faults x serving matrix, per-tick and macro engines."""
+    tmp = tmp_path_factory.mktemp(f"snap_{variant.replace('+', '_')}_{macro}")
+    cfg, statics, state = _setup(variant)
+    kw = dict(macro=macro) if macro else dict(summary_only=True)
+    fs1, t1 = run_episode(cfg, statics, state, N_STEPS, "fcfs",
+                          snapshot_every_s=120.0, snapshot_dir=str(tmp),
+                          snapshot_keep=99, **kw)
+    _kill_after_first_snapshot(str(tmp))
+    cfg, statics, state = _setup(variant)
+    fs2, t2 = run_episode(cfg, statics, state, N_STEPS, "fcfs",
+                          snapshot_every_s=120.0, resume_from=str(tmp), **kw)
+    _assert_tree_equal(fs1, fs2, f"SimState[{variant}, macro={macro}]")
+    _assert_tree_equal(t1, t2, f"TelemetrySummary[{variant}, macro={macro}]")
+    assert summary(fs1) == summary(fs2)
+
+
+def test_resume_from_empty_dir_runs_from_scratch(tmp_path):
+    """A kill BEFORE the first snapshot leaves nothing on disk; resume
+    must silently start from t=0 and still match the full run."""
+    cfg, statics, state = _setup("base")
+    fs0, t0 = _reference("base", macro=False)
+    fs1, t1 = run_episode(cfg, statics, state, N_STEPS, "fcfs",
+                          summary_only=True, resume_from=str(tmp_path))
+    _assert_tree_equal(fs0, fs1, "SimState")
+    _assert_tree_equal(t0, t1, "TelemetrySummary")
+
+
+def test_infinite_interval_snapshots_once_at_end(tmp_path):
+    """snapshot_every_s=inf never cuts the episode: one segment, one
+    final snapshot, results bitwise-equal to vanilla."""
+    cfg, statics, state = _setup("base")
+    fs0, t0 = _reference("base", macro=False)
+    fs1, t1 = run_episode(cfg, statics, state, N_STEPS, "fcfs",
+                          summary_only=True, snapshot_every_s=math.inf,
+                          snapshot_dir=str(tmp_path))
+    _assert_tree_equal(fs0, fs1, "SimState")
+    _assert_tree_equal(t0, t1, "TelemetrySummary")
+    assert sorted(os.listdir(tmp_path)) == [f"step_{N_STEPS:010d}"]
+
+
+def test_fleet_kill_and_resume(tmp_path):
+    """Fleet snapshots cover the whole replica batch (keys installed), so
+    a killed sweep resumes to the exact per-replica results."""
+    cfg, statics, state = _setup("base")
+    scens = stack_scenarios([statics.scenario] * 3)
+    fs0, t0 = run_fleet(cfg, statics, state, N_STEPS, "fcfs",
+                        scenarios=scens, summary_only=True)
+    cfg, statics, state = _setup("base")
+    fs1, t1 = run_fleet(cfg, statics, state, N_STEPS, "fcfs",
+                        scenarios=scens, summary_only=True,
+                        snapshot_every_s=120.0, snapshot_dir=str(tmp_path),
+                        snapshot_keep=99)
+    _assert_tree_equal(fs0, fs1, "fleet SimState vs vanilla")
+    _assert_tree_equal(t0, t1, "fleet telem vs vanilla")
+    _kill_after_first_snapshot(str(tmp_path))
+    cfg, statics, state = _setup("base")
+    fs2, t2 = run_fleet(cfg, statics, state, N_STEPS, "fcfs",
+                        scenarios=scens, summary_only=True,
+                        snapshot_every_s=120.0, resume_from=str(tmp_path))
+    _assert_tree_equal(fs1, fs2, "fleet SimState killed+resumed")
+    _assert_tree_equal(t1, t2, "fleet telem killed+resumed")
+
+
+def test_fingerprint_mismatch_raises_typed_error(tmp_path):
+    """Resuming with a different scheduler/workload/config names the
+    mismatched component(s) in a CheckpointError (a ValueError, so legacy
+    call sites still catch it)."""
+    cfg, statics, state = _setup("base")
+    run_episode(cfg, statics, state, N_STEPS, "fcfs", summary_only=True,
+                snapshot_every_s=120.0, snapshot_dir=str(tmp_path))
+    cfg, statics, state = _setup("base")
+    with pytest.raises(CheckpointError, match="scheduler"):
+        run_episode(cfg, statics, state, N_STEPS, "sjf", summary_only=True,
+                    resume_from=str(tmp_path))
+    with pytest.raises(ValueError, match="n_steps"):
+        cfg, statics, state = _setup("base")
+        run_episode(cfg, statics, state, N_STEPS + 1, "fcfs",
+                    summary_only=True, resume_from=str(tmp_path))
+
+
+def test_snapshot_kwargs_validated():
+    """Snapshotting needs an episode-wide accumulator (summary_only or
+    macro) and a positive interval — both misuses are loud ConfigErrors
+    with an actionable message."""
+    cfg, statics, state = _setup("base")
+    with pytest.raises(ConfigError, match="summary_only"):
+        run_episode(cfg, statics, state, N_STEPS, "fcfs",
+                    snapshot_every_s=120.0, snapshot_dir="/tmp/nope")
+    with pytest.raises(ConfigError, match="positive"):
+        run_episode(cfg, statics, state, N_STEPS, "fcfs", summary_only=True,
+                    snapshot_every_s=0.0, snapshot_dir="/tmp/nope")
+
+
+def test_ppo_exact_resume(tmp_path):
+    """ppo_train checkpoints the FULL training state; interrupting after
+    iteration k and resuming reproduces the uninterrupted run's params
+    and history tail bit-for-bit."""
+    from repro.envs import SchedEnv
+    from repro.rl import PPOConfig, ppo_train
+
+    cfg = tiny_cluster(sched_max_candidates=4)
+    wls = [synth_workload(cfg, 24, 900.0, seed=s) for s in range(2)]
+    env = SchedEnv(cfg, wls, episode_steps=8, sim_steps_per_action=5)
+    pcfg = PPOConfig(n_envs=4, rollout_len=8, n_epochs=2, n_minibatches=2)
+
+    d_full, d_cut = str(tmp_path / "full"), str(tmp_path / "cut")
+    p_full, h_full = ppo_train(env, cfg=pcfg, n_iterations=6,
+                               checkpoint_dir=d_full, checkpoint_every=2)
+    ppo_train(env, cfg=pcfg, n_iterations=4, checkpoint_dir=d_cut,
+              checkpoint_every=2)
+    p_res, h_res = ppo_train(env, cfg=pcfg, n_iterations=6,
+                             checkpoint_dir=d_cut, checkpoint_every=2,
+                             resume=True)
+    _assert_tree_equal(p_full, p_res, "PPO params")
+    assert h_full[4:] == h_res
+
+    with pytest.raises(CheckpointError, match="seed"):
+        ppo_train(env, cfg=pcfg, n_iterations=6, seed=1,
+                  checkpoint_dir=d_cut, checkpoint_every=2, resume=True)
